@@ -1,0 +1,60 @@
+"""Paper Figs. 1–2 — input-activation magnitude distributions at k_proj
+(systematic outliers) and down_proj (massive outliers) under each
+transform.  Emits the summary statistics the figures visualize: channel
+-magnitude max/mean ratio (peakedness), difficulty, kurtosis.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, make_suite, timeit
+from repro.core.difficulty import (
+    channel_magnitudes, kurtosis, quantization_difficulty,
+)
+from repro.core.transforms import TRANSFORMS
+
+
+def _stats(x):
+    cm = np.asarray(channel_magnitudes(x))
+    return {
+        "peak_ratio": float(cm.max() / max(cm.mean(), 1e-9)),
+        "difficulty": float(quantization_difficulty(x)),
+        "kurtosis": float(kurtosis(x)),
+        "absmax": float(np.abs(np.asarray(x)).max()),
+    }
+
+
+def run() -> dict:
+    suite = make_suite()
+    picks = {
+        "fig1_k_proj_1": next(c for c in suite
+                              if c.module == "k_proj" and c.layer == 1),
+        "fig2_down_proj_30": next(c for c in suite
+                                  if c.module == "down_proj"
+                                  and c.layer == 30),
+    }
+    out = {}
+    t_us = timeit(lambda c=picks["fig1_k_proj_1"]: channel_magnitudes(c.x))
+    for fig, case in picks.items():
+        for kind, tf in TRANSFORMS.items():
+            xh, _ = tf(case.x, case.w)
+            s = _stats(xh)
+            out[(fig, kind)] = s
+            emit(f"{fig}_{kind}", t_us if kind == "none" else 0.0,
+                 f"peak_ratio={s['peak_ratio']:.1f};difficulty="
+                 f"{s['difficulty']:.1f};absmax={s['absmax']:.1f}")
+    # figure-level claims: smoothing flattens activations harder than
+    # rotation (paper §IV-C) except under massive outliers the rotated
+    # absmax stays high (Eq. 8)
+    k = ("fig1_k_proj_1", "smooth"), ("fig1_k_proj_1", "rotate")
+    emit("fig1_smooth_flatter_than_rotate", 0.0,
+         f"holds={out[k[0]]['difficulty'] < out[k[1]]['difficulty']}")
+    m = ("fig2_down_proj_30", "rotate"), ("fig2_down_proj_30", "smooth_rotate")
+    emit("fig2_smoothrot_absmax_below_rotate", 0.0,
+         f"holds={out[m[1]]['absmax'] < out[m[0]]['absmax']}")
+    return {f"{a}_{b}": v for (a, b), v in out.items()}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Paper Fig. 3 — layer-wise quantization error & quantization difficulty.
+
+Per (layer × module): Eq. (2) error at W4A4, activation difficulty
+(std of channel magnitudes), weight difficulty.  Headline claim (§IV-B):
+corr(error, activation difficulty²) > 0.97 once the massive-outlier
+modules (down_proj 1/30/31, gate_proj 31) are excluded.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import MASSIVE_LAYERS, HEAVY_LAST, emit, make_suite, timeit
+from repro.core.difficulty import layerwise_error, quantization_difficulty
+
+
+def run() -> dict:
+    suite = make_suite()
+    rows = []
+    t_us = timeit(lambda c=suite[0]: layerwise_error(c.x, c.w))
+    for case in suite:
+        err = float(layerwise_error(case.x, case.w))
+        dx = float(quantization_difficulty(case.x))
+        dw = float(quantization_difficulty(case.w))
+        excluded = (case.module == "down_proj"
+                    and case.layer in (*MASSIVE_LAYERS, HEAVY_LAST)) or \
+                   (case.module == "gate_proj" and case.layer == HEAVY_LAST)
+        rows.append((case.name, err, dx, dw, excluded))
+    errs = np.array([r[1] for r in rows if not r[4]])
+    dx2 = np.array([r[2] ** 2 for r in rows if not r[4]])
+    corr = float(np.corrcoef(errs, dx2)[0, 1])
+    # weight difficulty generally below activation difficulty (paper §IV-B)
+    frac_w_below = float(np.mean([r[3] < r[2] for r in rows]))
+    emit("fig3_error_vs_difficulty", t_us,
+         f"corr={corr:.4f};target>0.97;w_below_act_frac={frac_w_below:.2f}")
+    # per-module error trend: monotone-ish growth except k_proj mid-peak
+    for module in ("k_proj", "down_proj"):
+        series = [r[1] for r in rows if r[0].startswith(module) and not r[4]]
+        emit(f"fig3_{module}_error_range", 0.0,
+             f"first={series[0]:.3e};last={series[-1]:.3e}")
+    return {"corr": corr, "rows": rows}
+
+
+if __name__ == "__main__":
+    run()

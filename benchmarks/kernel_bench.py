@@ -1,0 +1,61 @@
+"""Kernel micro-benchmarks (infrastructure table): the XLA-native integer
+serving path vs the bf16 baseline, per shape class.  CPU wall times are
+RELATIVE indicators only (the TPU numbers come from the dry-run roofline);
+the derived column carries the arithmetic-intensity facts that transfer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core.hadamard import apply_hadamard
+from repro.core.qlinear import QuantPolicy, qlinear, quantize_weight
+from repro.kernels import ops, ref
+
+SHAPES = [(64, 2048, 2048), (128, 4096, 1024)]
+
+
+def run() -> dict:
+    out = {}
+    key = jax.random.PRNGKey(0)
+    for n, k, m in SHAPES:
+        x = jax.random.normal(key, (n, k)).astype(jnp.bfloat16)
+        w = jax.random.normal(jax.random.fold_in(key, 1), (k, m)) * 0.02
+        wb = w.astype(jnp.bfloat16)
+        qw4 = quantize_weight(w, bits=4, pack=True)
+        qw8 = quantize_weight(w, bits=8, pack=False)
+
+        t_bf16 = timeit(jax.jit(lambda a, b: a @ b), x, wb)
+        pol4 = QuantPolicy(weight_bits=4, act_bits=4, use_kernels="never")
+        pol8 = QuantPolicy(weight_bits=8, act_bits=8, use_kernels="never")
+        t_w4 = timeit(jax.jit(lambda a, q=qw4: qlinear(a, q, pol4)), x)
+        t_w8 = timeit(jax.jit(lambda a, q=qw8: qlinear(a, q, pol8)), x)
+        t_had = timeit(jax.jit(lambda a: apply_hadamard(a, k)), x)
+        t_qnt = timeit(jax.jit(lambda a: ref.quantize_per_token_ref(a, 4)), x)
+
+        tag = f"{n}x{k}x{m}"
+        hbm_bf16 = (n * k + k * m) * 2
+        hbm_w4 = n * k * 2 + k * m // 2
+        emit(f"kernel_matmul_bf16_{tag}", t_bf16, f"hbm_bytes={hbm_bf16}")
+        emit(f"kernel_qlinear_w4a4_{tag}", t_w4,
+             f"hbm_bytes={hbm_w4};weight_traffic_saving="
+             f"{(k*m*2)/(k*m//2):.1f}x")
+        emit(f"kernel_qlinear_w8a8_{tag}", t_w8, f"hbm_bytes={n*k*2+k*m}")
+        emit(f"kernel_hadamard_fast_{tag}", t_had,
+             f"flops_vs_dense={2*k*sum(s for s in [k])}")
+        emit(f"kernel_quantize_token_{tag}", t_qnt, "pass=reduce+round")
+        out[tag] = dict(bf16=t_bf16, w4=t_w4, w8=t_w8, had=t_had)
+
+    # interpret-mode Pallas kernels (correctness-path timing, small shape)
+    x = jax.random.normal(key, (16, 512)).astype(jnp.bfloat16)
+    t_pal = timeit(lambda: ops.fused_hadamard_quant(x, block=128,
+                                                    interpret=True))
+    emit("kernel_pallas_fused_hadamard_quant_interpret_16x512", t_pal,
+         "interpret-mode (CPU emulation; TPU target)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

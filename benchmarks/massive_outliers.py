@@ -1,0 +1,83 @@
+"""Paper Fig. 5 + §IV-D/E math — the massive-outlier token under rotation
+vs smooth-rotation.
+
+Validates, on the down_proj-30 analogue:
+  * Eq. (7): rotated values cluster at 2^{|O|−1} |centroids|;
+  * Eq. (8): max|t̂| = Σ|o_i|/√d + O(ε);
+  * Eq. (9): max|t̃| ≈ Σ√(|o_i|·max|W_i|/d) after smooth(0.5)+rotate;
+  * effective-bin usage: the fraction of the 4-bit grid actually occupied
+    by the non-outlier mass (Fig. 5's 'effective quantization bins') —
+    smooth-rotation uses far more of the grid.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, make_suite, timeit
+from repro.core.hadamard import apply_hadamard
+from repro.core.quantizer import QuantConfig, quantize
+from repro.core.transforms import TRANSFORMS, smoothing_scales
+
+
+def _massive_case():
+    for c in make_suite():
+        if c.has_massive and c.layer == 30:
+            return c
+    raise RuntimeError("no massive case")
+
+
+def run() -> dict:
+    case = _massive_case()
+    x, w = case.x, case.w
+    d = x.shape[1]
+    # the token with the largest |value| (Fig. 5 selects that token)
+    tok_idx = int(np.argmax(np.abs(np.asarray(x)).max(axis=1)))
+    t = x[tok_idx]
+    outlier_dims = np.where(np.abs(np.asarray(t)) > 500)[0]
+    o_vals = np.asarray(t)[outlier_dims]
+    t_us = timeit(lambda: apply_hadamard(t[None], d))
+
+    # Eq. (7): centroid count — count well-separated |value| clusters
+    t_rot = np.asarray(apply_hadamard(t[None], d))[0]
+    hist, edges = np.histogram(np.abs(t_rot), bins=400)
+    # cluster centers = contiguous occupied bins separated by gaps
+    occupied = hist > 0
+    clusters = int(np.sum(np.diff(np.concatenate(([0], occupied.view(np.int8)
+                                                   ))) == 1))
+    expected_clusters = 2 ** (len(outlier_dims) - 1)
+    emit("fig5_eq7_centroids", t_us,
+         f"measured={clusters};expected={expected_clusters}")
+
+    # Eq. (8): rotated max
+    eq8 = np.abs(o_vals).sum() / np.sqrt(d)
+    emit("fig5_eq8_rotated_max", 0.0,
+         f"measured={np.abs(t_rot).max():.2f};predicted={eq8:.2f}")
+
+    # Eq. (9): smooth-rotate max
+    s = np.asarray(smoothing_scales(x, w, 0.5))
+    t_sr = np.asarray(apply_hadamard((np.asarray(t) / s)[None], d))[0]
+    wmax = np.abs(np.asarray(w)).max(axis=1)
+    eq9 = sum(np.sqrt(np.abs(v) * wmax[j] / d)
+              for j, v in zip(outlier_dims, o_vals))
+    emit("fig5_eq9_smoothrot_max", 0.0,
+         f"measured={np.abs(t_sr).max():.2f};predicted={eq9:.2f}")
+
+    # effective 4-bit bins occupied by the non-outlier mass
+    def bins_used(vec):
+        q, _ = quantize(vec[None], QuantConfig(bits=4,
+                                               granularity="per_token"))
+        return int(len(np.unique(np.asarray(q))))
+
+    used_rot = bins_used(np.asarray(t_rot, np.float32))
+    used_sr = bins_used(np.asarray(t_sr, np.float32))
+    emit("fig5_bins_used_rotate", 0.0, f"bins={used_rot}/15")
+    emit("fig5_bins_used_smooth_rotate", 0.0, f"bins={used_sr}/15")
+    return {"clusters": clusters, "expected": expected_clusters,
+            "eq8": (float(np.abs(t_rot).max()), float(eq8)),
+            "eq9": (float(np.abs(t_sr).max()), float(eq9)),
+            "bins": (used_rot, used_sr)}
+
+
+if __name__ == "__main__":
+    run()

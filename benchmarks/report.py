@@ -1,0 +1,79 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run JSON artifacts (experiments/dryrun/<mesh>/<arch>__<shape>.json).
+
+Usage: PYTHONPATH=src python -m benchmarks.report [--out EXPERIMENTS_tables.md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load(mesh: str) -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ROOT, mesh, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def dryrun_table(rows: list[dict]) -> str:
+    out = ["| arch | shape | compile s | args GB/dev | temp GB/dev | "
+           "peak GB/dev | HLO GFLOPs/dev | wire GB/dev | #coll |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        m = r["memory"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compile_s']:.1f} | "
+            f"{m['argument_gb']:.2f} | {m['temp_gb']:.2f} | "
+            f"{m['peak_gb_estimate']:.2f} | "
+            f"{r['hlo']['flops_per_device'] / 1e9:.1f} | "
+            f"{r['hlo']['wire_gb_per_device']:.2f} | "
+            f"{r['hlo']['n_collectives']} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows: list[dict]) -> str:
+    out = ["| arch | shape | compute s | memory s | mem(kern) s | "
+           "coll s | dcn s | dominant | useful | frac | frac(kern) |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        x = r["roofline"]
+        mk = x.get("memory_s_kernelized", x["memory_s"])
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {x['compute_s']:.4f} | "
+            f"{x['memory_s']:.4f} | {mk:.4f} | {x['collective_s']:.4f} | "
+            f"{x['dcn_s']:.4f} | {x['dominant']} | "
+            f"{x['useful_ratio']:.2f} | {x['roofline_frac']:.4f} | "
+            f"{x.get('roofline_frac_kern', x['roofline_frac']):.4f} |")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+    parts = []
+    for mesh in ("16x16", "2x16x16"):
+        rows = load(mesh)
+        if not rows:
+            continue
+        parts.append(f"\n### Dry-run — mesh {mesh} ({len(rows)} cells)\n")
+        parts.append(dryrun_table(rows))
+        parts.append(f"\n### Roofline — mesh {mesh}\n")
+        parts.append(roofline_table(rows))
+    text = "\n".join(parts)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+    else:
+        print(text)
+
+
+if __name__ == "__main__":
+    main()

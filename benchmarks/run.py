@@ -1,0 +1,41 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Timings are CPU-relative
+(TPU perf lives in the dry-run roofline, EXPERIMENTS.md §Roofline);
+the ``derived`` column carries the paper-claim validations.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import (
+        activation_distributions, error_vs_difficulty, kernel_bench,
+        massive_outliers, model_quant, transform_comparison,
+    )
+
+    modules = [
+        ("figs 1-2 activation distributions", activation_distributions),
+        ("fig 3 error vs difficulty", error_vs_difficulty),
+        ("fig 4 transform comparison", transform_comparison),
+        ("fig 5 massive outliers + eqs 7-9", massive_outliers),
+        ("kernel microbench", kernel_bench),
+        ("model-level quantization", model_quant),
+    ]
+    failures = []
+    for label, mod in modules:
+        print(f"# -- {label} --", flush=True)
+        try:
+            mod.run()
+        except Exception as e:  # noqa: BLE001
+            failures.append((label, repr(e)))
+            print(f"benchmark_failed_{mod.__name__},0.0,{e!r}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

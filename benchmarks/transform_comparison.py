@@ -1,0 +1,87 @@
+"""Paper Fig. 4 — layer-wise error & difficulties at down_proj under
+none / smooth / rotate / smooth_rotate, plus the §IV-C α-sweep.
+
+Expected orderings (the paper's findings):
+  * rotate < smooth < none on ordinary layers;
+  * rotate > none on the MASSIVE-outlier layers (1, 30) — the paper's
+    counterintuitive result;
+  * smooth_rotate lowest (or tied-lowest) nearly everywhere, decisively
+    so on massive-outlier layers;
+  * smoothing migrates difficulty into weights (difficulty_w rises),
+    rotation lowers both.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import MASSIVE_LAYERS, emit, make_suite, timeit
+from repro.core.difficulty import (
+    layerwise_error, layerwise_error_transformed, quantization_difficulty,
+)
+from repro.core.transforms import TRANSFORMS, get_transform
+
+KINDS = ("none", "smooth", "rotate", "smooth_rotate")
+
+
+def run() -> dict:
+    suite = [c for c in make_suite() if c.module == "down_proj"]
+    t_us = timeit(lambda c=suite[0]: layerwise_error_transformed(
+        c.x, c.w, TRANSFORMS["rotate"]))
+    table = {}
+    for case in suite:
+        row = {}
+        for kind in KINDS:
+            row[kind] = float(layerwise_error_transformed(
+                case.x, case.w, get_transform(kind)))
+        xh_s, wh_s = TRANSFORMS["smooth"](case.x, case.w)
+        xh_r, wh_r = TRANSFORMS["rotate"](case.x, case.w)
+        # weight difficulty along INPUT channels (axis 0) — the axis the
+        # transforms act on; rotation mixes rows, smoothing scales them
+        row["dw_none"] = float(quantization_difficulty(case.w, axis=0))
+        row["dw_smooth"] = float(quantization_difficulty(wh_s, axis=0))
+        row["dw_rotate"] = float(quantization_difficulty(wh_r, axis=0))
+        row["dx_smooth"] = float(quantization_difficulty(xh_s))
+        row["dx_rotate"] = float(quantization_difficulty(xh_r))
+        table[case.layer] = row
+
+    ordinary = [l for l in table if l not in MASSIVE_LAYERS and l != 31]
+    rot_beats_none = np.mean([table[l]["rotate"] < table[l]["none"]
+                              for l in ordinary])
+    rot_beats_smooth = np.mean([table[l]["rotate"] < table[l]["smooth"]
+                                for l in ordinary])
+    massive_rot_worse = all(table[l]["rotate"] > table[l]["none"]
+                            for l in MASSIVE_LAYERS)
+    sr_best = np.mean([table[l]["smooth_rotate"] <= min(
+        table[l][k] for k in KINDS) * 1.001 for l in table])
+    smooth_migrates = np.mean([table[l]["dw_smooth"] > table[l]["dw_none"]
+                               for l in table])
+    rot_flattens_w = np.mean([table[l]["dw_rotate"] < table[l]["dw_none"]
+                              for l in table])
+    emit("fig4_rotate_beats_none_ordinary", t_us, f"frac={rot_beats_none:.2f}")
+    emit("fig4_rotate_beats_smooth_ordinary", 0.0,
+         f"frac={rot_beats_smooth:.2f}")
+    emit("fig4_massive_rotation_worse_than_none", 0.0,
+         f"holds={massive_rot_worse}")
+    emit("fig4_smooth_rotate_lowest_frac", 0.0, f"frac={sr_best:.2f}")
+    emit("fig4_smoothing_migrates_difficulty_to_w", 0.0,
+         f"frac={smooth_migrates:.2f}")
+    emit("fig4_rotation_flattens_weights", 0.0, f"frac={rot_flattens_w:.2f}")
+
+    # §IV-C: α sweep on o_proj/gate_proj (larger α keeps error below none)
+    alpha_rows = {}
+    suite_og = [c for c in make_suite() if c.module in ("o_proj", "gate_proj")
+                and c.layer in (8, 16, 24)]
+    for alpha in (0.5, 0.65, 0.8):
+        errs = [float(layerwise_error_transformed(
+            c.x, c.w, get_transform("smooth", alpha))) for c in suite_og]
+        base = [float(layerwise_error(c.x, c.w)) for c in suite_og]
+        alpha_rows[alpha] = float(np.mean([e / b for e, b in zip(errs, base)]))
+        emit(f"fig4_alpha_sweep_{alpha}", 0.0,
+             f"smooth_error_over_none={alpha_rows[alpha]:.3f}")
+    return {"table": table, "massive_rot_worse": massive_rot_worse,
+            "sr_best": sr_best, "alpha": alpha_rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,8 @@
+"""repro — quantization-first JAX training/serving framework.
+
+Reproduction of "Turning LLM Activations Quantization-Friendly"
+(Czako, Kertesz, Szenasi; 2025) as a production-scale system.
+See DESIGN.md / EXPERIMENTS.md at the repo root.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+"""Atomic, keep-K, elastic checkpointing."""
+from repro.checkpoint.checkpointer import Checkpointer, save_pytree, restore_pytree

@@ -1,0 +1,144 @@
+"""Fault-tolerant checkpointing: atomic sharded save/restore, keep-K GC,
+latest-resume, and ELASTIC re-sharding (checkpoints are mesh-agnostic).
+
+Format: one directory per step, one .npy per pytree leaf (path-encoded
+filenames) + a manifest.  Writes go to ``<dir>.tmp`` then a single
+atomic rename — a preempted job can never leave a half-written
+checkpoint that restore would pick up.  Restore lays global arrays out
+under WHATEVER mesh/sharding the passed template uses, so a job restarted
+on a different topology (elastic scaling) reshards transparently.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import ml_dtypes  # registers bfloat16 etc. with numpy
+import numpy as np
+
+__all__ = ["Checkpointer", "save_pytree", "restore_pytree"]
+
+_SEP = "__"
+
+
+def _flatten(tree) -> dict[str, Any]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "name", p)))
+                        for p in path)
+        out[key] = leaf
+    return out
+
+
+def save_pytree(tree, directory: str):
+    tmp = directory + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(tree)
+    manifest = {}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        # ml_dtypes (bfloat16, ...) round-trip poorly through np.save —
+        # store a raw byte view; the manifest carries shape + dtype name
+        np.save(os.path.join(tmp, key + ".npy"),
+                np.ascontiguousarray(arr).view(np.uint8))
+        manifest[key] = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(directory):
+        shutil.rmtree(directory)
+    os.rename(tmp, directory)  # atomic publish
+
+
+def restore_pytree(template, directory: str):
+    """Restore into the TEMPLATE's structure & shardings (elastic)."""
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_t = _flatten(template)
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    restored_flat = {}
+    for key in flat_t:
+        raw = np.load(os.path.join(directory, key + ".npy"))
+        meta = manifest[key]
+        arr = raw.view(np.dtype(meta["dtype"])).reshape(meta["shape"])
+        restored_flat[key] = arr
+    out_leaves = []
+    for (path, leaf) in jax.tree_util.tree_flatten_with_path(template)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "name", p)))
+                        for p in path)
+        arr = restored_flat[key]
+        target = leaf
+        if hasattr(target, "sharding") and hasattr(target, "dtype"):
+            arr = jax.device_put(arr.astype(target.dtype), target.sharding)
+        out_leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out_leaves)
+
+
+class Checkpointer:
+    """Keep-K checkpoint manager with async save and latest-resume."""
+
+    def __init__(self, root: str, keep: int = 3, async_save: bool = True):
+        self.root = root
+        self.keep = keep
+        self.async_save = async_save
+        self._lock = threading.Lock()
+        self._pending: threading.Thread | None = None
+        os.makedirs(root, exist_ok=True)
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:08d}")
+
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.root):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def save(self, tree, step: int, *, block: bool = False):
+        """Device-get happens synchronously (consistent snapshot); disk IO
+        can run on a background thread (async_save)."""
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def _write():
+            with self._lock:
+                save_pytree(host_tree, self._step_dir(step))
+                self._gc()
+
+        if self.async_save and not block:
+            self.wait()
+            self._pending = threading.Thread(target=_write, daemon=True)
+            self._pending.start()
+        else:
+            _write()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    def restore_latest(self, template):
+        self.wait()
+        steps = self.steps()
+        if not steps:
+            return None
+        step = steps[-1]
+        return restore_pytree(template, self._step_dir(step)), step
+
+    def restore(self, template, step: int):
+        self.wait()
+        return restore_pytree(template, self._step_dir(step))

@@ -1,0 +1,11 @@
+"""Snowflake Arctic-480B base [hf:Snowflake/snowflake-arctic-base; hf] —
+128-expert top-2 MoE with a parallel dense residual FFN per layer."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b", family="moe",
+    num_layers=35, d_model=7168, num_heads=56, num_kv_heads=8,
+    d_ff=4864, vocab_size=32000,
+    num_experts=128, experts_per_tok=2, dense_residual=True,
+    capacity_factor=2.0,
+)

@@ -1,0 +1,205 @@
+"""Model configuration schema, input-shape cells, and the arch registry."""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ModelConfig", "ShapeCell", "SHAPES", "get_config", "list_archs",
+           "input_specs"]
+
+Family = Literal["dense", "moe", "ssm", "hybrid", "audio", "vlm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture description (hashable → usable as jit static)."""
+
+    name: str
+    family: Family
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 → d_model // num_heads
+
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_tok: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0                 # expert FFN width (0 → d_ff)
+    dense_residual: bool = False      # Arctic: dense FFN in parallel w/ MoE
+    first_dense_layers: int = 0       # DeepSeek: leading dense layers
+    capacity_factor: float = 2.0
+
+    # --- MLA (DeepSeek-V2) ---
+    kv_lora_rank: int = 0             # 0 → standard GQA attention
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+    # --- SSM (Mamba2 SSD) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_chunk: int = 128
+    ssm_conv: int = 4
+    ssm_ngroups: int = 1
+
+    # --- hybrid (Zamba2) ---
+    attn_every: int = 0               # shared attn block after every k SSM blocks
+
+    # --- misc ---
+    qkv_bias: bool = False            # Qwen1.5
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    embeds_input: bool = False        # audio/vlm: frontend supplies embeddings
+    attn_window: int = 0              # 0 = full causal; >0 = sliding window
+    remat: bool = True                # activation checkpointing on layer scan
+    dtype: str = "bfloat16"
+
+    # --- performance options (§Perf hillclimb; defaults = paper-faithful
+    #     baseline so the before/after is measurable) ---
+    attn_impl: str = "naive"          # "naive" | "flash" (online-softmax)
+    attn_bf16_io: bool = False        # cast probs→bf16 before P·V (halves
+    #                                   backward collective bytes)
+    seq_parallel: bool = False        # shard sequence over 'model' between
+    #                                   blocks (Korthikanti-style SP)
+    remat_policy: str = "full"        # "full" | "dots_no_batch" (save
+    #                                   linear outputs, recompute attention
+    #                                   internals — the flash-bwd contract)
+    decode_flash: bool = False        # shard_map'd distributed online-
+    #                                   softmax decode over sequence-
+    #                                   sharded KV (§Perf cell C it2)
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.num_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.num_experts and self.moe_d_ff == 0:
+            object.__setattr__(self, "moe_d_ff", self.d_ff)
+
+    @property
+    def d_inner(self) -> int:  # SSM inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_headdim if self.ssm_state else 0
+
+    @property
+    def uses_attention(self) -> bool:
+        return self.family != "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Natively sub-quadratic in context (SSM state decode)."""
+        return self.family in ("ssm", "hybrid")
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """Small same-family variant for CPU smoke tests."""
+        base = dict(
+            num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+            vocab_size=256, head_dim=16,
+        )
+        if self.num_kv_heads == self.num_heads:
+            base["num_kv_heads"] = 4
+        if self.num_experts:
+            base.update(num_experts=4, experts_per_tok=min(2, self.experts_per_tok),
+                        moe_d_ff=64, capacity_factor=2.0)
+        if self.kv_lora_rank:
+            base.update(kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8,
+                        v_head_dim=16, head_dim=0)
+        if self.ssm_state:
+            base.update(ssm_state=16, ssm_headdim=16, ssm_chunk=8)
+        if self.attn_every:
+            base.update(attn_every=2, num_layers=4)
+        base.update(
+            num_shared_experts=min(self.num_shared_experts, 1),
+            first_dense_layers=min(self.first_dense_layers, 1),
+            dense_residual=self.dense_residual,
+            qkv_bias=self.qkv_bias,
+            embeds_input=self.embeds_input,
+            family=self.family,
+            name=self.name + "-reduced",
+            remat=False,
+        )
+        base.update(overrides)
+        return dataclasses.replace(self, **base)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One (input-shape) cell of the dry-run matrix."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+ARCHS = [
+    "musicgen_large", "mamba2_780m", "arctic_480b", "deepseek_v2_lite_16b",
+    "llama3_405b", "minitron_8b", "stablelm_3b", "qwen15_4b",
+    "internvl2_26b", "zamba2_12b",
+]
+
+_ALIAS = {a.replace("_", "-"): a for a in ARCHS}
+_ALIAS.update({  # display names (CONFIG.name) → module names
+    "qwen1.5-4b": "qwen15_4b",
+    "zamba2-1.2b": "zamba2_12b",
+    "musicgen-large": "musicgen_large",
+    "mamba2-780m": "mamba2_780m",
+    "arctic-480b": "arctic_480b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "llama3-405b": "llama3_405b",
+    "minitron-8b": "minitron_8b",
+    "stablelm-3b": "stablelm_3b",
+    "internvl2-26b": "internvl2_26b",
+})
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)
+
+
+def get_config(name: str) -> ModelConfig:
+    mod_name = _ALIAS.get(name, name).replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell, *,
+                microbatch: int = 0) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of the cell.
+
+    train: token ids + labels (or frontend embeddings for audio/vlm,
+    which are stubs per the task spec).  prefill: token ids.  decode:
+    one new token per sequence + a KV/state cache created by
+    ``models.api.make_cache`` (the cache specs come from there).
+    """
+    b, s = cell.global_batch, cell.seq_len
+    ids = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cell.kind == "train":
+        if cfg.family in ("audio", "vlm") and cfg.embeds_input:
+            return {
+                "embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16),
+                "labels": ids,
+            }
+        return {"tokens": ids, "labels": ids}
+    if cell.kind == "prefill":
+        return {"tokens": ids}
+    # decode: one token per sequence; cache built separately
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}

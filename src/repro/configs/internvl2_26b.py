@@ -1,0 +1,9 @@
+"""InternVL2-26B [arXiv:2404.16821; hf] — InternLM2-20B backbone;
+InternViT frontend is a stub supplying patch embeddings (task spec)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-26b", family="vlm",
+    num_layers=48, d_model=6144, num_heads=48, num_kv_heads=8,
+    d_ff=16384, vocab_size=92553, embeds_input=True,
+)

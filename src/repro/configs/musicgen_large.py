@@ -1,0 +1,9 @@
+"""MusicGen-large backbone [arXiv:2306.05284; hf] — decoder-only over
+EnCodec tokens; frontend stub supplies frame embeddings (task spec)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large", family="audio",
+    num_layers=48, d_model=2048, num_heads=32, num_kv_heads=32,
+    d_ff=8192, vocab_size=2048, embeds_input=True,
+)

@@ -1,0 +1,11 @@
+"""Zamba2-1.2B [arXiv:2411.15242; hf] — Mamba2 backbone + ONE shared
+attention+FFN block invoked every 6 SSM blocks (weight sharing)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b", family="hybrid",
+    num_layers=38, d_model=2048, num_heads=32, num_kv_heads=32,
+    d_ff=8192, vocab_size=32000,
+    ssm_state=64, ssm_expand=2, ssm_headdim=64, ssm_chunk=128,
+    attn_every=6,
+)

@@ -1,0 +1,82 @@
+"""Offline calibration for the serving quantization pipeline.
+
+Collects per-channel absolute maxima of module *input activations* over a
+calibration stream (paper §III-C computes them online from the current
+sample; production folds them offline) and derives SmoothQuant scales
+(Eq. (4)).  Models expose a ``with_taps`` forward mode returning the
+inputs of every quantizable linear, stacked over scanned layers, so one
+forward pass calibrates all modules of all layers at once.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CalibStats", "update_stats", "collect_stats", "smoothing_scales_from_stats"]
+
+
+@dataclasses.dataclass
+class CalibStats:
+    """Running per-channel absmax for one module family.
+
+    ``act_absmax`` has shape (layers, c_in) for scanned stacks or (c_in,)
+    for unscanned modules; maxima accumulate across calibration batches.
+    """
+
+    act_absmax: jax.Array
+    n_batches: int = 0
+
+    def merge(self, new_absmax: jax.Array) -> "CalibStats":
+        return CalibStats(
+            act_absmax=jnp.maximum(self.act_absmax, new_absmax),
+            n_batches=self.n_batches + 1,
+        )
+
+
+def _tap_absmax(tap: jax.Array) -> jax.Array:
+    """Reduce a tap of shape (..., tokens, c_in) [leading layer dim kept]
+    to per-channel absmax.  Taps from scanned layers are (L, B, T, C) →
+    (L, C); unscanned are (B, T, C) → (C,)."""
+    x = jnp.abs(tap.astype(jnp.float32))
+    reduce_axes = tuple(range(x.ndim - 1)) if x.ndim <= 3 else tuple(range(1, x.ndim - 1))
+    return jnp.max(x, axis=reduce_axes)
+
+
+def update_stats(stats: dict[str, CalibStats] | None,
+                 taps: Mapping[str, jax.Array]) -> dict[str, CalibStats]:
+    """Fold one batch of taps into running stats (creates on first call)."""
+    out = dict(stats or {})
+    for name, tap in taps.items():
+        am = _tap_absmax(tap)
+        if name in out:
+            out[name] = out[name].merge(am)
+        else:
+            out[name] = CalibStats(act_absmax=am, n_batches=1)
+    return out
+
+
+def collect_stats(tap_fn: Callable[[dict], Mapping[str, jax.Array]],
+                  batches: Iterable[dict]) -> dict[str, CalibStats]:
+    """Run ``tap_fn`` (params-closed forward returning taps) over a
+    calibration stream and accumulate per-module absmax stats."""
+    stats: dict[str, CalibStats] | None = None
+    for batch in batches:
+        stats = update_stats(stats, tap_fn(batch))
+    if stats is None:
+        raise ValueError("empty calibration stream")
+    return stats
+
+
+def smoothing_scales_from_stats(act_absmax: jax.Array, w: jax.Array,
+                                alpha: float = 0.5, eps: float = 1e-8) -> jax.Array:
+    """Eq. (4) from calibrated absmax. ``w`` is (c_in, c_out) or stacked
+    (L, c_in, c_out); ``act_absmax`` (c_in,) or (L, c_in)."""
+    aw = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-1)
+    s = jnp.power(jnp.maximum(act_absmax, eps), alpha) / jnp.power(
+        jnp.maximum(aw, eps), 1.0 - alpha
+    )
+    return jnp.maximum(s, eps)

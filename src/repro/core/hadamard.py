@@ -1,0 +1,283 @@
+"""Hadamard matrix construction and fast structured application.
+
+The paper (§II-D) builds rotation matrices R = H/sqrt(d) from Hadamard
+matrices via Sylvester construction for d = 2^p and Kronecker products
+with known small Hadamard matrices otherwise (QuIP#-style, e.g.
+H_11008 = H_64 ⊗ H_172).
+
+TPU adaptation (DESIGN.md §3): every d we need factors as a Kronecker
+product of (a) powers of two (Sylvester) and (b) Paley-I matrices of
+order q+1 for primes q ≡ 3 (mod 4). ``X @ (A ⊗ B)`` is evaluated as two
+small dense matmuls over a reshaped X — O(d·(a+b)) work, MXU-friendly —
+instead of materializing the d×d rotation. A block-diagonal fallback
+(grouped Hadamard over the largest power-of-two divisor) covers any d
+outside the factorizable set and is reported as such.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "HadamardPlan",
+    "sylvester",
+    "paley",
+    "hadamard_matrix",
+    "hadamard_factorization",
+    "plan_hadamard",
+    "apply_hadamard",
+    "random_sign_flip",
+]
+
+
+# ---------------------------------------------------------------------------
+# Constructions
+# ---------------------------------------------------------------------------
+
+
+def _is_prime(n: int) -> bool:
+    if n < 2:
+        return False
+    if n < 4:
+        return True
+    if n % 2 == 0:
+        return False
+    f = 3
+    while f * f <= n:
+        if n % f == 0:
+            return False
+        f += 2
+    return True
+
+
+@functools.lru_cache(maxsize=None)
+def sylvester(d: int) -> np.ndarray:
+    """Sylvester Hadamard matrix of order d = 2^p (entries ±1)."""
+    if d & (d - 1) or d < 1:
+        raise ValueError(f"Sylvester construction needs a power of two, got {d}")
+    h = np.ones((1, 1), dtype=np.int8)
+    while h.shape[0] < d:
+        h = np.block([[h, h], [h, -h]])
+    return h
+
+
+@functools.lru_cache(maxsize=None)
+def paley(q: int) -> np.ndarray:
+    """Paley-I Hadamard matrix of order q+1 for prime q ≡ 3 (mod 4)."""
+    if not _is_prime(q) or q % 4 != 3:
+        raise ValueError(f"Paley-I needs a prime q ≡ 3 (mod 4), got {q}")
+    # Quadratic residue character chi(x) over GF(q).
+    residues = np.zeros(q, dtype=np.int8)
+    residues[[(i * i) % q for i in range(1, q)]] = 1
+    chi = np.where(residues > 0, 1, -1).astype(np.int8)
+    chi[0] = 0
+    # Jacobsthal matrix Q[i, j] = chi(i - j).
+    idx = (np.arange(q)[:, None] - np.arange(q)[None, :]) % q
+    Q = chi[idx]
+    h = np.empty((q + 1, q + 1), dtype=np.int8)
+    h[0, :] = 1
+    h[1:, 0] = -1
+    # H = I + S with S = [[0, 1], [-1, Q]] skew (Qᵀ = −Q for q ≡ 3 mod 4),
+    # giving H Hᵀ = (q+1) I.
+    h[1:, 1:] = Q + np.eye(q, dtype=np.int8)
+    return h
+
+
+@functools.lru_cache(maxsize=None)
+def hadamard_factorization(d: int) -> tuple[tuple[str, int], ...]:
+    """Factor d into Hadamard-constructible Kronecker factors.
+
+    Returns a tuple of ("sylvester"|"paley"|"block", size) pairs whose
+    sizes multiply to d.  Strategy: strip the odd part m of d; if m == 1
+    it is pure Sylvester; otherwise search for a prime q ≡ 3 (mod 4) with
+    q + 1 = m · 2^k dividing d (QuIP#-style Kronecker with one Paley
+    factor), recursing on composite odd parts (e.g. 27 → Paley 108, or
+    9 → two H_12 factors).  Falls back to ("block", 2^a) meaning a
+    block-diagonal (grouped) Hadamard of the largest power-of-two divisor.
+    """
+    if d < 1:
+        raise ValueError(f"need d >= 1, got {d}")
+    a = (d & -d).bit_length() - 1  # exponent of 2
+    m = d >> a
+    if m == 1:
+        return (("sylvester", d),)
+    # Try a single Paley factor q+1 = m * 2^k for k <= a.
+    for k in range(a + 1):
+        size = m << k
+        if _is_prime(size - 1) and (size - 1) % 4 == 3:
+            factors: list[tuple[str, int]] = [("paley", size)]
+            rest = d // size
+            if rest > 1:
+                factors.append(("sylvester", rest))
+            return tuple(factors)
+    # Try splitting the odd part into two composite halves (e.g. 9 = 3·3
+    # → H_12 ⊗ H_12 when enough 2s are available).
+    for m1 in range(3, int(math.isqrt(m)) + 1, 2):
+        if m % m1 == 0:
+            m2 = m // m1
+            for k1 in range(a + 1):
+                s1 = m1 << k1
+                if not (_is_prime(s1 - 1) and (s1 - 1) % 4 == 3):
+                    continue
+                for k2 in range(a - k1 + 1):
+                    s2 = m2 << k2
+                    if _is_prime(s2 - 1) and (s2 - 1) % 4 == 3:
+                        factors = [("paley", s1), ("paley", s2)]
+                        rest = d // (s1 * s2)
+                        if rest > 1:
+                            factors.append(("sylvester", rest))
+                        return tuple(factors)
+    # Fallback: grouped Hadamard over the power-of-two part.
+    if a == 0:
+        raise ValueError(f"no Hadamard construction available for d={d}")
+    return (("block", 1 << a),)
+
+
+def _factor_matrix(kind: str, size: int) -> np.ndarray:
+    if kind == "sylvester":
+        return sylvester(size)
+    if kind == "paley":
+        return paley(size - 1)
+    if kind == "block":
+        return sylvester(size)
+    raise ValueError(kind)
+
+
+def hadamard_matrix(d: int, dtype=np.float32) -> np.ndarray:
+    """Dense orthonormal rotation R = H/sqrt(d) of size d×d.
+
+    For a ("block", b) factorization this returns the block-diagonal
+    orthonormal matrix diag(H_b/sqrt(b), ...) — still orthogonal, spreads
+    outliers within groups of b (documented fallback, DESIGN.md §3).
+    """
+    factors = hadamard_factorization(d)
+    if factors[0][0] == "block":
+        b = factors[0][1]
+        blk = sylvester(b).astype(np.float64) / math.sqrt(b)
+        out = np.zeros((d, d), dtype=np.float64)
+        for i in range(d // b):
+            out[i * b : (i + 1) * b, i * b : (i + 1) * b] = blk
+        return out.astype(dtype)
+    h = np.ones((1, 1), dtype=np.float64)
+    for kind, size in factors:
+        h = np.kron(h, _factor_matrix(kind, size).astype(np.float64))
+    return (h / math.sqrt(d)).astype(dtype)
+
+
+def random_sign_flip(d: int, key: jax.Array) -> jax.Array:
+    """Random ±1 diagonal (composes with H for randomized rotations)."""
+    return jax.random.rademacher(key, (d,), dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Fast structured application
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HadamardPlan:
+    """Plan for applying a d×d orthonormal Hadamard rotation fast.
+
+    ``factors`` are the Kronecker factors (left-to-right); ``block`` is
+    set when the factorization fell back to a grouped transform.
+    """
+
+    d: int
+    factors: tuple[tuple[str, int], ...]
+    block: bool
+
+    @property
+    def factor_sizes(self) -> tuple[int, ...]:
+        return tuple(size for _, size in self.factors)
+
+
+_MAX_FAST_FACTOR = 512  # largest dense factor materialized by the fast path
+
+
+@functools.lru_cache(maxsize=None)
+def plan_hadamard(d: int) -> HadamardPlan:
+    """Factorization with Sylvester factors split to ≤ 512 (MXU-sized
+    GEMMs, bounded VMEM) — H_{2^{a+b}} = H_{2^a} ⊗ H_{2^b} exactly."""
+    raw = hadamard_factorization(d)
+    factors: list[tuple[str, int]] = []
+    for kind, size in raw:
+        if kind == "sylvester":
+            while size > _MAX_FAST_FACTOR:
+                factors.append(("sylvester", _MAX_FAST_FACTOR))
+                size //= _MAX_FAST_FACTOR
+            if size > 1:
+                factors.append(("sylvester", size))
+        else:
+            factors.append((kind, size))
+    return HadamardPlan(d=d, factors=tuple(factors), block=raw[0][0] == "block")
+
+
+def _factor_rotations(plan: HadamardPlan, dtype) -> list[jnp.ndarray]:
+    mats = []
+    for kind, size in plan.factors:
+        m = _factor_matrix(kind, size).astype(np.float32) / math.sqrt(size)
+        mats.append(jnp.asarray(m, dtype=dtype))
+    return mats
+
+
+def apply_hadamard(x: jax.Array, d: int | None = None, *, axis: int = -1,
+                   inverse: bool = False, skip_last: bool = False) -> jax.Array:
+    """Compute ``x @ R`` (or ``x @ Rᵀ``) along ``axis`` without d×d GEMM.
+
+    For a Kronecker factorization H = H_a ⊗ H_b, uses
+    ``(X reshaped to [..., a, b]) ×_a H_a ×_b H_b`` — two small matmuls.
+    H is symmetric only for Sylvester; Paley factors are not, so
+    ``inverse=True`` applies the transposed factors (Rᵀ = R⁻¹ by
+    orthogonality).  For block plans, applies H_b within groups.
+
+    ``skip_last=True`` applies every Kronecker factor EXCEPT the last
+    (power-of-two, contiguous-groups) one — the fused Pallas kernel
+    (kernels/hadamard_kernel.py) applies that one in VMEM, and partial ∘
+    kernel == full transform.
+    """
+    if axis != -1:
+        x = jnp.moveaxis(x, axis, -1)
+    dd = x.shape[-1] if d is None else d
+    if x.shape[-1] != dd:
+        raise ValueError(f"axis size {x.shape[-1]} != plan size {dd}")
+    plan = plan_hadamard(dd)
+    mats = _factor_rotations(plan, x.dtype)
+    lead = x.shape[:-1]
+    if plan.block:
+        if skip_last:
+            out = x  # the single grouped factor is the kernel's job
+        else:
+            b = plan.factor_sizes[0]
+            xr = x.reshape(*lead, dd // b, b)
+            h = mats[0]
+            xr = jnp.einsum("...gb,bc->...gc", xr, h.T if inverse else h)
+            out = xr.reshape(*lead, dd)
+    else:
+        sizes = plan.factor_sizes
+        xr = x.reshape(*lead, *sizes)
+        n_lead = len(lead)
+        n_apply = len(mats) - 1 if skip_last else len(mats)
+        for i, h in enumerate(mats[:n_apply]):
+            hm = h.T if inverse else h
+            ax = n_lead + i
+            # contract factor axis i with hm: move axis to last, matmul, move back
+            xr = jnp.moveaxis(jnp.moveaxis(xr, ax, -1) @ hm, -1, ax)
+        out = xr.reshape(*lead, dd)
+    if axis != -1:
+        out = jnp.moveaxis(out, -1, axis)
+    return out
+
+
+def kernel_fusable_factor(d: int) -> int:
+    """Size of the trailing power-of-two factor the fused kernel applies
+    (0 if the plan's last factor is not Sylvester — pure-Paley dims)."""
+    plan = plan_hadamard(d)
+    kind, size = plan.factors[-1]
+    return size if kind in ("sylvester", "block") else 0

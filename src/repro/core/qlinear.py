@@ -1,0 +1,136 @@
+"""Quantized linear execution: the serving-time W4A4/W8A8 matmul.
+
+A :class:`QuantizedWeight` stores the offline-folded, RTN-quantized
+weight (optionally nibble-packed int4) plus per-output-channel scales.
+:func:`qlinear` applies, at runtime:
+
+    [optional online Hadamard on x]  →  per-token RTN quantize
+    →  integer matmul (int8 MXU, int32 accumulate)
+    →  dequantize with (per-token Δ_a) ⊗ (per-channel Δ_w) epilogue.
+
+Backend dispatch: on TPU the fused Pallas kernels in ``repro.kernels``
+are used; elsewhere (and for the multi-pod dry-run on CPU) the
+XLA-native integer ``dot_general`` path below lowers and shards under
+pjit identically.  Both paths share the pure-jnp oracle in
+``repro/kernels/ref.py`` for correctness tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hadamard as hd
+from repro.core.quantizer import QuantConfig, pack_int4, quantize, qmax, unpack_int4
+
+__all__ = ["QuantizedWeight", "quantize_weight", "qlinear", "QuantPolicy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Static (hashable) quantization policy for a model's linears."""
+
+    weight_bits: int = 4
+    act_bits: int = 4
+    pack_weights: bool = True        # nibble-pack int4 storage
+    online_hadamard: bool = True     # fused H on down/o-proj inputs
+    quantize_lm_head: bool = False
+    kv_cache_bits: int | None = 8    # None = bf16 cache
+    use_kernels: Literal["auto", "never", "interpret"] = "auto"
+
+    @property
+    def enabled(self) -> bool:
+        return True
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QuantizedWeight:
+    """Folded + quantized weight. Pytree of arrays; metadata is static.
+
+    w_q    : int8 codes, (c_in, c_out) unpacked or (c_in/2, c_out) packed
+             along c_in nibbles when ``packed``.
+    scale  : float32 per-output-channel Δ_w, (1, c_out).
+    packed, bits, had_dim are static metadata (not traced).
+    """
+
+    w_q: jax.Array
+    scale: jax.Array
+    smooth: jax.Array | None = None   # per-channel s (Eq. 4): runtime x/s
+    bits: int = dataclasses.field(metadata=dict(static=True), default=4)
+    packed: bool = dataclasses.field(metadata=dict(static=True), default=False)
+    had_dim: int = dataclasses.field(metadata=dict(static=True), default=0)
+
+    @property
+    def c_out(self) -> int:
+        return self.w_q.shape[-1]
+
+    @property
+    def c_in(self) -> int:
+        return self.w_q.shape[-2] * (2 if self.packed else 1)
+
+
+def quantize_weight(w: jax.Array, bits: int = 4, pack: bool = True,
+                    had_dim: int = 0, smooth: jax.Array | None = None
+                    ) -> QuantizedWeight:
+    """Per-channel symmetric RTN on an already-folded weight.
+
+    ``had_dim``: if nonzero, the consumer must apply an online Hadamard of
+    that size to the activation before the matmul (W was pre-multiplied
+    by Rᵀ at fold time).  ``smooth``: SmoothQuant scales — runtime divides
+    the activation channel-wise (W already row-multiplied at fold time).
+    Packing is int4-only and along c_in (the contraction axis) so the
+    kernel unpacks contiguous nibbles.
+    """
+    cfg = QuantConfig(bits=bits, granularity="per_channel")
+    q, scale = quantize(w, cfg)  # q int8 (c_in, c_out); scale (1, c_out)
+    packed = bool(pack and bits == 4 and q.shape[-2] % 2 == 0)
+    if packed:
+        # pack along c_in: pairs of rows -> transpose trick via reshape
+        qt = jnp.swapaxes(q, -1, -2)           # (c_out, c_in)
+        qt = pack_int4(qt)                     # (c_out, c_in/2)
+        q = jnp.swapaxes(qt, -1, -2)           # (c_in/2, c_out)
+    return QuantizedWeight(w_q=q, scale=scale.reshape(1, -1).astype(jnp.float32),
+                           smooth=smooth, bits=bits, packed=packed,
+                           had_dim=had_dim)
+
+
+def _unpack(qw: QuantizedWeight) -> jax.Array:
+    if not qw.packed:
+        return qw.w_q
+    qt = jnp.swapaxes(qw.w_q, -1, -2)
+    qt = unpack_int4(qt)
+    return jnp.swapaxes(qt, -1, -2)
+
+
+def qlinear(x: jax.Array, qw: QuantizedWeight, policy: QuantPolicy) -> jax.Array:
+    """Apply the quantized linear. x: (..., c_in) bf16/f32 → (..., c_out).
+
+    XLA-native path (CPU / dry-run): integer dot_general with int32
+    accumulation — the same arithmetic the Pallas kernel performs in VMEM
+    tiles on TPU (see repro/kernels/quant_matmul.py).
+    """
+    if qw.smooth is not None:
+        x = x / qw.smooth.astype(x.dtype)
+    if qw.had_dim:
+        x = hd.apply_hadamard(x, qw.had_dim)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+
+    if policy.use_kernels == "interpret":
+        from repro.kernels import ops  # local import: kernels are optional
+
+        y2 = ops.fused_quant_matmul(x2, qw, act_bits=policy.act_bits, interpret=True)
+    else:
+        aq, a_scale = quantize(x2, QuantConfig(bits=policy.act_bits,
+                                               granularity="per_token"))
+        w_int = _unpack(qw)
+        acc = jax.lax.dot_general(
+            aq, w_int, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        y2 = acc.astype(jnp.float32) * a_scale * qw.scale
+    return y2.reshape(*lead, qw.c_out).astype(x.dtype)

@@ -1,0 +1,141 @@
+"""Symmetric integer quantization (paper §II-A, Eq. (1)).
+
+Implements symmetric RTN quantization on a uniform grid of ``2^{b-1}-1``
+positive levels:  X_int = round(X / Δ),  Δ = max|X| / (2^{b-1} - 1),
+with per-token (rows) or per-channel (columns) granularity and no
+clipping (the paper deliberately keeps outliers unclipped, §III-B).
+
+Both a "fake-quant" path (quantize→dequantize in float, used by the
+analysis benchmarks and QAT) and a "real" path (int8-carried values +
+scales, consumed by the Pallas serving kernels) are provided.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantConfig",
+    "qmax",
+    "quantize",
+    "dequantize",
+    "fake_quantize",
+    "pack_int4",
+    "unpack_int4",
+]
+
+Granularity = Literal["per_token", "per_channel", "per_tensor"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Quantization settings for one tensor class.
+
+    bits: grid width (4 or 8 here; any b >= 2 supported).
+    granularity: which axis owns its own Δ. ``per_token`` = one scale per
+      row (activations), ``per_channel`` = one per column (weights),
+      matching paper §III-B.
+    stochastic: stochastic rounding (used by gradient compression, not by
+      the paper's RTN analysis).
+    """
+
+    bits: int = 4
+    granularity: Granularity = "per_token"
+    stochastic: bool = False
+
+    @property
+    def levels(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+
+def qmax(bits: int) -> int:
+    """Largest positive integer on the symmetric b-bit grid."""
+    return 2 ** (bits - 1) - 1
+
+
+def _scale_reduce_axes(ndim: int, granularity: Granularity) -> tuple[int, ...]:
+    if granularity == "per_tensor":
+        return tuple(range(ndim))
+    if granularity == "per_token":
+        return (ndim - 1,)  # reduce channels; one scale per leading index
+    if granularity == "per_channel":
+        return tuple(range(ndim - 1))  # reduce tokens; one scale per column
+    raise ValueError(granularity)
+
+
+def compute_scale(x: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """Δ per Eq. (1): max|X| over the granularity axes / (2^{b-1}-1)."""
+    axes = _scale_reduce_axes(x.ndim, cfg.granularity)
+    absmax = jnp.max(jnp.abs(x), axis=axes, keepdims=True)
+    # Guard: all-zero rows/channels get Δ=1 to avoid 0/0 (quantizes to 0).
+    absmax = jnp.where(absmax == 0, 1.0, absmax)
+    return (absmax / cfg.levels).astype(jnp.float32)
+
+
+def _round(x: jax.Array, cfg: QuantConfig, key: jax.Array | None) -> jax.Array:
+    if cfg.stochastic:
+        if key is None:
+            raise ValueError("stochastic rounding needs a PRNG key")
+        noise = jax.random.uniform(key, x.shape, dtype=x.dtype) - 0.5
+        return jnp.floor(x + 0.5 + noise)
+    return jnp.round(x)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def quantize(x: jax.Array, cfg: QuantConfig = QuantConfig(),
+             key: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Quantize to the integer grid. Returns (int8 codes, float32 Δ).
+
+    Codes live in [-levels, levels] regardless of bits (carried as int8;
+    nibble-packing for storage is ``pack_int4``).
+    """
+    scale = compute_scale(x, cfg)
+    q = _round(x.astype(jnp.float32) / scale, cfg, key)
+    q = jnp.clip(q, -cfg.levels, cfg.levels)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def fake_quantize(x: jax.Array, cfg: QuantConfig = QuantConfig(),
+                  key: jax.Array | None = None) -> jax.Array:
+    """Q(X) = round(X/Δ)·Δ in the input dtype (paper's analysis path)."""
+    q, scale = quantize(x, cfg, key)
+    return dequantize(q, scale, x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# int4 nibble packing (storage format for W4; DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+
+def pack_int4(q: jax.Array) -> jax.Array:
+    """Pack int8 codes in [-8, 7] pairwise along the last axis.
+
+    Layout: byte = (q[..., 1::2] << 4) | (q[..., 0::2] & 0xF); the last
+    axis must be even. Halves HBM footprint for 4-bit weights.
+    """
+    if q.shape[-1] % 2:
+        raise ValueError("last axis must be even to pack nibbles")
+    lo = q[..., 0::2].astype(jnp.uint8) & 0xF
+    hi = (q[..., 1::2].astype(jnp.uint8) & 0xF) << 4
+    return (lo | hi).astype(jnp.int8)
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_int4` (sign-extending the nibbles)."""
+    b = packed.astype(jnp.int8)
+    # low nibble: shift left then arithmetic shift right to sign-extend
+    lo = jnp.left_shift(b, 4)
+    lo = jnp.right_shift(lo, 4)
+    hi = jnp.right_shift(b, 4)
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)

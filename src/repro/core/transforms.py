@@ -1,0 +1,127 @@
+"""Equivalent transformations (paper §II-C, §III-C/D, §IV-E).
+
+Y = XW = (XA)(A⁻¹W): design A to minimize quantization error.
+
+  * smoothing    : A⁻¹ = diag(s), s_j = max|X_j|^α / max|W_j|^{1−α}
+                   (SmoothQuant, Eq. (4); α = 0.5 default)
+  * rotation     : A = R (orthonormal Hadamard), Ŵ = RᵀW, X̂ = XR
+  * smooth_rotate: the paper's hybrid — scale first, THEN rotate both:
+                   X̃ = X diag(s)⁻¹ R,  W̃ = Rᵀ diag(s) W
+                   (§IV-E; spreads outlier mass over ~2d dimensions,
+                   max|t̃| ≈ Σ_i sqrt(|o_i|·max|W_i|/d), Eq. (9))
+
+All functions return (x̂, ŵ) such that x̂ @ ŵ == x @ w up to float
+round-off — property-tested in tests/test_transforms.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hadamard import apply_hadamard
+
+__all__ = [
+    "TransformKind",
+    "TransformPlan",
+    "smoothing_scales",
+    "smooth",
+    "rotate",
+    "smooth_rotate",
+    "get_transform",
+    "TRANSFORMS",
+]
+
+TransformKind = Literal["none", "smooth", "rotate", "smooth_rotate"]
+
+
+def smoothing_scales(x: jax.Array, w: jax.Array, alpha: float = 0.5,
+                     eps: float = 1e-8) -> jax.Array:
+    """SmoothQuant Eq. (4) per-channel migration scales s (shape [c_in]).
+
+    α controls how much difficulty moves from activations to weights; the
+    paper uses the uncalibrated online α = 0.5 sweet spot but notes
+    out_proj ≈ 0.7 / gate_proj ≈ 0.65 can be better (§IV-C).
+    """
+    ax = jnp.max(jnp.abs(x.reshape(-1, x.shape[-1]).astype(jnp.float32)), axis=0)
+    aw = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=1)
+    s = jnp.power(jnp.maximum(ax, eps), alpha) / jnp.power(
+        jnp.maximum(aw, eps), 1.0 - alpha
+    )
+    return jnp.maximum(s, eps)
+
+
+def smooth(x: jax.Array, w: jax.Array, alpha: float = 0.5,
+           scales: jax.Array | None = None):
+    """Channel-wise scaling: x̂ = x/s, ŵ = s⊙w (rows of W scaled)."""
+    s = smoothing_scales(x, w, alpha) if scales is None else scales
+    return x / s.astype(x.dtype), w * s[:, None].astype(w.dtype)
+
+
+def rotate(x: jax.Array, w: jax.Array):
+    """Hadamard rotation: x̂ = xR, ŵ = RᵀW (fast Kronecker apply).
+
+    Both sides are the SAME contraction Σ_i T[i,·] R[i,k] (x along its
+    channel axis, W along axis 0), which gives (XR)(RᵀW) = XW for any
+    orthogonal R — including non-symmetric Paley factors.
+    """
+    return apply_hadamard(x), apply_hadamard(w, axis=0)
+
+
+def smooth_rotate(x: jax.Array, w: jax.Array, alpha: float = 0.5,
+                  scales: jax.Array | None = None):
+    """The paper's hybrid (§IV-E): smoothing first, rotation second."""
+    xs, ws = smooth(x, w, alpha, scales)
+    return rotate(xs, ws)
+
+
+def _identity(x, w):
+    return x, w
+
+
+TRANSFORMS: dict[str, Callable] = {
+    "none": _identity,
+    "smooth": smooth,
+    "rotate": rotate,
+    "smooth_rotate": smooth_rotate,
+}
+
+
+def get_transform(kind: TransformKind, alpha: float = 0.5) -> Callable:
+    if kind in ("smooth", "smooth_rotate"):
+        fn = TRANSFORMS[kind]
+        return lambda x, w: fn(x, w, alpha)
+    return TRANSFORMS[kind]
+
+
+# ---------------------------------------------------------------------------
+# Per-module transform policy (the framework's serving configuration)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformPlan:
+    """Which equivalent transformation each module class receives.
+
+    Default follows the paper's §V recommendation: SmoothRotation on
+    down_proj (the massive-outlier site), rotation elsewhere.
+    """
+
+    attn_in: TransformKind = "rotate"        # q/k/v projections input
+    attn_out: TransformKind = "rotate"       # o_proj input
+    mlp_in: TransformKind = "rotate"         # gate/up projections input
+    mlp_out: TransformKind = "smooth_rotate"  # down_proj input (§V)
+    alpha: float = 0.5
+
+    def kind_for(self, module: str) -> TransformKind:
+        table = {
+            "q_proj": self.attn_in, "k_proj": self.attn_in,
+            "v_proj": self.attn_in, "o_proj": self.attn_out,
+            "gate_proj": self.mlp_in, "up_proj": self.mlp_in,
+            "down_proj": self.mlp_out,
+            "in_proj": self.mlp_in, "out_proj": self.attn_out,
+        }
+        return table.get(module, "rotate")

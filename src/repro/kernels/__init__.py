@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the quantized serving path (+ jnp oracles).
+
+quantize_kernel : per-token RTN quantize (VPU lane reduction)
+quant_matmul    : int8 MXU matmul, int32 accum, fused dual-scale dequant,
+                  int4 nibble-packed weight variant
+hadamard_kernel : fused online Hadamard transform + quantize
+ops             : backend dispatch (TPU kernels / XLA-native / interpret)
+ref             : pure-jnp oracles (the correctness contract)
+"""

@@ -1,0 +1,100 @@
+"""Dispatching wrappers around the Pallas kernels.
+
+``backend="auto"`` resolves to the Pallas kernels on TPU and to the
+XLA-native integer path elsewhere (CPU dry-run/tests), keeping one call
+site in the model code.  ``interpret=True`` forces the kernels through
+the Pallas interpreter (CPU correctness tests).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qlinear import QuantizedWeight
+from repro.kernels import ref
+from repro.kernels.hadamard_kernel import fused_hadamard_quant as _fhq_kernel
+from repro.kernels.quant_matmul import quant_matmul as _qmm_kernel
+from repro.kernels.quant_matmul import quant_matmul_packed as _qmm_packed_kernel
+from repro.kernels.quantize_kernel import quantize_per_token as _q_kernel
+
+__all__ = [
+    "use_pallas",
+    "quantize_per_token",
+    "quant_matmul",
+    "fused_hadamard_quant",
+    "fused_quant_matmul",
+]
+
+Backend = Literal["auto", "pallas", "xla"]
+
+
+def use_pallas(backend: Backend = "auto") -> bool:
+    if backend == "pallas":
+        return True
+    if backend == "xla":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def quantize_per_token(x, *, bits: int = 4, backend: Backend = "auto",
+                       interpret: bool = False):
+    if interpret or use_pallas(backend):
+        return _q_kernel(x, bits=bits, interpret=interpret)
+    return ref.quantize_per_token_ref(x, bits)
+
+
+def quant_matmul(aq, wq, a_scale, w_scale, *, packed: bool = False,
+                 backend: Backend = "auto", interpret: bool = False,
+                 out_dtype=jnp.bfloat16):
+    if interpret or use_pallas(backend):
+        fn = _qmm_packed_kernel if packed else _qmm_kernel
+        return fn(aq, wq, a_scale, w_scale, out_dtype=out_dtype,
+                  interpret=interpret)
+    if packed:
+        from repro.core.quantizer import unpack_int4
+
+        wq = jnp.swapaxes(unpack_int4(jnp.swapaxes(wq, -1, -2)), -1, -2)
+    acc = ref.int_matmul_ref(aq, wq)
+    return (acc.astype(jnp.float32) * a_scale * w_scale).astype(out_dtype)
+
+
+def fused_hadamard_quant(x, *, block: int = 128, bits: int = 4,
+                         backend: Backend = "auto", interpret: bool = False):
+    if interpret or use_pallas(backend):
+        return _fhq_kernel(x, block=block, bits=bits, interpret=interpret)
+    return ref.fused_hadamard_quant_ref(x, block, bits)
+
+
+def fused_quant_matmul(x, qw: QuantizedWeight, *, act_bits: int = 4,
+                       backend: Backend = "auto", interpret: bool = False):
+    """[smooth] → [online Hadamard] → quantize → int matmul, fused.
+
+    The full-d Kronecker rotation is split: all factors but the last run
+    as XLA matmuls; the trailing power-of-two factor is fused with the
+    per-token quantization in one Pallas pass (DESIGN.md §3).  Numerics
+    match ``qlinear``'s XLA path (same full rotation).
+    """
+    from repro.core.hadamard import apply_hadamard, kernel_fusable_factor
+
+    if qw.smooth is not None:
+        x = x / qw.smooth.astype(x.dtype)
+    if qw.had_dim:
+        last = kernel_fusable_factor(qw.had_dim)
+        if last >= 2:
+            x = apply_hadamard(x, qw.had_dim, skip_last=True)
+            aq, a_scale = fused_hadamard_quant(x, block=last, bits=act_bits,
+                                               backend=backend,
+                                               interpret=interpret)
+        else:  # pure-Paley trailing factor: full rotation in XLA
+            x = apply_hadamard(x, qw.had_dim)
+            aq, a_scale = quantize_per_token(x, bits=act_bits, backend=backend,
+                                             interpret=interpret)
+    else:
+        aq, a_scale = quantize_per_token(x, bits=act_bits, backend=backend,
+                                         interpret=interpret)
+    return quant_matmul(aq, qw.w_q, a_scale, qw.scale, packed=qw.packed,
+                        backend=backend, interpret=interpret)

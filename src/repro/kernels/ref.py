@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function mirrors one kernel's semantics exactly (same rounding, same
+accumulation dtype) so tests can ``assert_allclose(kernel, ref)`` across
+shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hadamard import apply_hadamard
+from repro.core.quantizer import qmax
+
+__all__ = [
+    "quantize_per_token_ref",
+    "quant_matmul_ref",
+    "fused_hadamard_quant_ref",
+    "int_matmul_ref",
+]
+
+
+def quantize_per_token_ref(x: jax.Array, bits: int = 4):
+    """Per-token symmetric RTN: (codes int8, scales f32 (rows, 1))."""
+    levels = qmax(bits)
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.where(absmax == 0, 1.0, absmax) / levels
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -levels, levels)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def int_matmul_ref(aq: jax.Array, wq: jax.Array) -> jax.Array:
+    """int8 × int8 → int32 accumulate (the MXU contract)."""
+    return jax.lax.dot_general(
+        aq, wq, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+def quant_matmul_ref(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
+                     act_bits: int = 4, out_dtype=jnp.bfloat16) -> jax.Array:
+    """Fused per-token quantize → int matmul → dual-scale dequant.
+
+    x: (n, k) float; w_q: (k, m) int8 codes (already unpacked);
+    w_scale: (1, m) f32.  Matches quant_matmul kernel semantics.
+    """
+    aq, a_scale = quantize_per_token_ref(x, act_bits)
+    acc = int_matmul_ref(aq, w_q)
+    return (acc.astype(jnp.float32) * a_scale * w_scale).astype(out_dtype)
+
+
+def fused_hadamard_quant_ref(x: jax.Array, block: int, bits: int = 4):
+    """Online grouped Hadamard (within ``block``-sized groups) followed by
+    per-token RTN quantize; returns (codes int8, scales f32).
+
+    The transform runs in f32 — matching the kernel, whose MXU dot
+    accumulates bf16 inputs into f32 (preferred_element_type)."""
+    n, d = x.shape
+    xr = x.astype(jnp.float32).reshape(n, d // block, block)
+    xt = apply_hadamard(xr, block)  # block is a power of two → Sylvester
+    return quantize_per_token_ref(xt.reshape(n, d), bits)

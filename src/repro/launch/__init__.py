@@ -1,0 +1,2 @@
+"""Distribution & launch: meshes, sharding rules, dry-run, roofline,
+train/serve drivers."""

@@ -1,0 +1,381 @@
+"""HLO-text analyzer: per-device FLOPs, HBM traffic, and collective bytes
+with while-loop trip-count multiplication.
+
+Why: on this JAX (0.8.x), ``compiled.cost_analysis()`` counts while-loop
+bodies ONCE and is per-device (verified empirically — DESIGN.md §7), so
+scanned-layer models would be undercounted by ~num_layers×.  This module
+parses ``compiled.as_text()`` directly:
+
+  * computations are split and symbol tables built per computation;
+  * ``while`` trip counts come from the s32 comparison constant in the
+    loop's condition computation (scan lowers to ``iter < N``);
+  * dot FLOPs = 2 · prod(result shape) · prod(contracting dims), using
+    operand shapes from the symbol table, bucketed by operand dtype
+    (int8 MXU dots have 2× the bf16 peak);
+  * HBM traffic ≈ Σ over top-level ops of (output + operand bytes) —
+    fusion internals excluded (they live in registers/VMEM);
+  * collective wire bytes per device use ring-algorithm factors:
+    all-reduce 2(S−1)/S·B, all-gather/reduce-scatter/all-to-all
+    (S−1)/S·B, collective-permute B (S = replica-group size).
+
+Everything is multiplied through nested while trip counts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Any
+
+__all__ = ["HloMetrics", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "while", "conditional", "call", "after-all", "iota", "partition-id",
+    "replica-id",
+}
+
+_shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+_op_re = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_comp_re = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\))?\s*->.*{\s*$")
+_operand_re = re.compile(r"%([\w.\-]+)")
+_groups_re = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_groups_braces_re = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_cdims_re = re.compile(r"rhs_contracting_dims=\{([\d,]*)\}")
+_lhs_cdims_re = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_const_re = re.compile(r"constant\((\d+)\)")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_re.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> tuple[str, list[int]]:
+    m = _shape_re.search(type_str)
+    if not m:
+        return "f32", []
+    dtype, dims = m.groups()
+    return dtype, [int(d) for d in dims.split(",")] if dims else (dtype, [])
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    type_str: str
+    kind: str
+    rest: str  # operands + attributes (un-split; attrs parsed by regex)
+
+
+@dataclasses.dataclass
+class HloMetrics:
+    flops: float = 0.0                      # total dot flops (all dtypes)
+    flops_by_dtype: dict = dataclasses.field(default_factory=dict)
+    hbm_bytes: float = 0.0
+    s2_bytes: float = 0.0                   # traffic of (s×s) attention
+    #                                         score/prob tensors — a fused
+    #                                         Pallas flash kernel keeps
+    #                                         these in VMEM (subset of
+    #                                         hbm_bytes)
+    collective_bytes: float = 0.0           # raw operand bytes (task spec)
+    wire_bytes: float = 0.0                 # ring-adjusted per-device bytes
+    wire_bytes_by_group: dict = dataclasses.field(default_factory=dict)
+    collectives: list = dataclasses.field(default_factory=list)
+    while_trips: dict = dataclasses.field(default_factory=dict)
+
+    def scaled(self, k: float) -> "HloMetrics":
+        return HloMetrics(
+            flops=self.flops * k,
+            flops_by_dtype={d: v * k for d, v in self.flops_by_dtype.items()},
+            hbm_bytes=self.hbm_bytes * k,
+            s2_bytes=self.s2_bytes * k,
+            collective_bytes=self.collective_bytes * k,
+            wire_bytes=self.wire_bytes * k,
+            wire_bytes_by_group={g: v * k for g, v
+                                 in self.wire_bytes_by_group.items()},
+            collectives=[(n, b * k, g) for (n, b, g) in self.collectives],
+            while_trips=dict(self.while_trips),
+        )
+
+    def add(self, other: "HloMetrics"):
+        self.flops += other.flops
+        for d, v in other.flops_by_dtype.items():
+            self.flops_by_dtype[d] = self.flops_by_dtype.get(d, 0.0) + v
+        self.hbm_bytes += other.hbm_bytes
+        self.s2_bytes += other.s2_bytes
+        self.collective_bytes += other.collective_bytes
+        self.wire_bytes += other.wire_bytes
+        for g, v in other.wire_bytes_by_group.items():
+            self.wire_bytes_by_group[g] = (
+                self.wire_bytes_by_group.get(g, 0.0) + v)
+        self.collectives.extend(other.collectives)
+        self.while_trips.update(other.while_trips)
+
+
+def _is_s2_tensor(type_str: str, min_dim: int = 1024) -> bool:
+    """True for attention-score-shaped tensors: last two dims both large
+    (the (sq, sk) logits/probs a fused flash kernel never spills)."""
+    m = _shape_re.search(type_str)
+    if not m or not m.group(2):
+        return False
+    dims = [int(d) for d in m.group(2).split(",")]
+    return len(dims) >= 2 and dims[-1] >= min_dim and dims[-2] >= min_dim
+
+
+def _parse_computations(text: str) -> tuple[dict[str, list[_Op]], str]:
+    comps: dict[str, list[_Op]] = {}
+    entry = ""
+    current: list[_Op] | None = None
+    for line in text.splitlines():
+        if current is None:
+            m = _comp_re.match(line)
+            if m:
+                is_entry, name = m.groups()
+                current = []
+                comps[name] = current
+                if is_entry:
+                    entry = name
+            continue
+        if line.strip().startswith("}"):
+            current = None
+            continue
+        m = _op_re.match(line)
+        if m:
+            name, type_str, kind, rest = m.groups()
+            current.append(_Op(name, type_str, kind, rest))
+    return comps, entry
+
+
+def _trip_count(cond_ops: list[_Op]) -> int:
+    """Scan conditions lower to `lt(iter, N)`: take the max s32 constant."""
+    best = 1
+    for op in cond_ops:
+        if op.kind == "constant" and "s32" in op.type_str:
+            m = _const_re.search(op.kind + "(" + op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+        m = _const_re.search(op.rest)
+        if m and ("compare" in op.kind or "constant" in op.kind):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(op: _Op, symbols: dict[str, str]) -> tuple[str, float]:
+    out_dtype, out_dims = _shape_dims(op.type_str)
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    # lhs shape via first operand
+    operands = _operand_re.findall(op.rest)
+    lhs_type = symbols.get(operands[0], "") if operands else ""
+    lhs_dtype, lhs_dims = _shape_dims(lhs_type)
+    cdims = _lhs_cdims_re.search(op.rest)
+    contract = 1
+    if cdims and cdims.group(1):
+        for idx in cdims.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                contract *= lhs_dims[i]
+    return lhs_dtype, 2.0 * out_elems * contract
+
+
+def _collective_wire(op: _Op, symbols: dict[str, str]) -> tuple[float, float, int]:
+    """(raw operand bytes, ring wire bytes per device, group size)."""
+    operands = _operand_re.findall(op.rest.split(")")[0] + ")")
+    in_bytes = sum(_type_bytes(symbols.get(o, "")) for o in operands
+                   if o in symbols)
+    out_bytes = _type_bytes(op.type_str)
+    gm = _groups_re.search(op.rest)
+    if gm:
+        group = int(gm.group(2))
+    else:
+        gb = _groups_braces_re.search(op.rest)
+        group = len(gb.group(1).split(",")) if gb else 1
+    group = max(group, 1)
+    kind = op.kind.replace("-start", "")
+    f = (group - 1) / group
+    if kind.startswith("all-reduce"):
+        wire = 2 * f * in_bytes
+    elif kind.startswith("all-gather"):
+        wire = f * out_bytes
+    elif kind.startswith("reduce-scatter"):
+        wire = f * in_bytes
+    elif kind.startswith("all-to-all"):
+        wire = f * in_bytes
+    else:  # collective-permute
+        wire = in_bytes
+    return float(in_bytes), float(wire), group
+
+
+_PASSTHROUGH = {"bitcast", "reshape", "copy", "transpose", "convert"}
+
+
+def _op_operands(op: _Op) -> list[str]:
+    return _operand_re.findall(op.rest.split(")")[0])
+
+
+def _fusion_hbm_bytes(comp_ops: list[_Op], out_bytes: float) -> float:
+    """HBM traffic of one fused kernel: output + effective reads of each
+    parameter.  A parameter consumed ONLY through dynamic-slice windows is
+    charged the window bytes (scan reading one layer's weights from the
+    stacked array), not the full operand; a dynamic-update-slice buffer is
+    charged read+write of the update window (in-place aliasing)."""
+    symbols = {op.name: op for op in comp_ops}
+    consumers: dict[str, list[_Op]] = defaultdict(list)
+    for op in comp_ops:
+        for o in _op_operands(op):
+            consumers[o].append(op)
+    total = 0.0
+    for op in comp_ops:
+        if op.kind != "parameter":
+            continue
+        frontier = [op.name]
+        seen = set()
+        eff = 0.0
+        full = False
+        while frontier and not full:
+            nm = frontier.pop()
+            if nm in seen:
+                continue
+            seen.add(nm)
+            for c in consumers.get(nm, []):
+                if c.kind in _PASSTHROUGH:
+                    frontier.append(c.name)
+                elif c.kind == "dynamic-slice":
+                    eff += _type_bytes(c.type_str)
+                elif c.kind == "dynamic-update-slice":
+                    ops_ = _op_operands(c)
+                    if ops_ and ops_[0] == nm:  # nm is the big buffer
+                        upd = symbols.get(ops_[1]) if len(ops_) > 1 else None
+                        eff += 2 * _type_bytes(upd.type_str if upd
+                                               else c.type_str)
+                    else:  # nm is the update value → read it fully
+                        full = True
+                else:
+                    full = True
+        total += _type_bytes(op.type_str) if full else eff
+    # if the fusion ROOT is a dynamic-update-slice, the output is aliased:
+    # charge the update window, not the whole buffer
+    dus_roots = [op for op in comp_ops if op.kind == "dynamic-update-slice"]
+    if dus_roots and all(not consumers.get(op.name) for op in dus_roots):
+        out_bytes = 0.0  # write already charged via the parameter path
+    return total + out_bytes
+
+
+def _called_comps(op: _Op) -> list[str]:
+    out = []
+    for attr in ("calls=", "to_apply=", "body=", "condition="):
+        for m in re.finditer(re.escape(attr) + r"%?([\w.\-]+)", op.rest):
+            out.append((attr, m.group(1)))
+    return out
+
+
+def analyze_hlo(text: str) -> HloMetrics:
+    comps, entry = _parse_computations(text)
+    cache: dict[str, HloMetrics] = {}
+
+    def comp_metrics(name: str, *, count_bytes: bool) -> HloMetrics:
+        key = name + ("|b" if count_bytes else "|nb")
+        if key in cache:
+            return cache[key]
+        out = HloMetrics()
+        cache[key] = out  # guards recursion
+        ops = comps.get(name, [])
+        symbols = {op.name: op.type_str for op in ops}
+        for op in ops:
+            kind = op.kind
+            base = kind.replace("-start", "").replace("-done", "")
+            if kind in ("dot", "convolution"):
+                dtype, fl = _dot_flops(op, symbols)
+                out.flops += fl
+                out.flops_by_dtype[dtype] = (
+                    out.flops_by_dtype.get(dtype, 0.0) + fl)
+            if base in _COLLECTIVES and not kind.endswith("-done"):
+                raw, wire, group = _collective_wire(op, symbols)
+                out.collective_bytes += raw
+                out.wire_bytes += wire
+                out.wire_bytes_by_group[group] = (
+                    out.wire_bytes_by_group.get(group, 0.0) + wire)
+                out.collectives.append((kind, wire, group))
+            if count_bytes and kind not in _SKIP_BYTES_OPS:
+                out_b = _type_bytes(op.type_str)
+                contrib = 0.0
+                s2 = 0.0
+                if kind == "fusion":
+                    called = [t for a, t in _called_comps(op) if a == "calls="]
+                    if called and called[0] in comps:
+                        contrib = _fusion_hbm_bytes(comps[called[0]], out_b)
+                    else:
+                        contrib = out_b
+                    if _is_s2_tensor(op.type_str):
+                        s2 += out_b
+                    for o in _op_operands(op):
+                        if o in symbols and _is_s2_tensor(symbols[o]):
+                            s2 += _type_bytes(symbols[o])
+                    s2 = min(s2, contrib)
+                elif kind == "dynamic-slice":
+                    contrib = 2 * out_b  # window read + write
+                elif kind == "dynamic-update-slice":
+                    ops_ = _op_operands(op)
+                    upd = symbols.get(ops_[1], "") if len(ops_) > 1 else ""
+                    contrib = 2 * _type_bytes(upd)
+                else:
+                    in_b = sum(_type_bytes(symbols.get(o, ""))
+                               for o in _op_operands(op) if o in symbols)
+                    contrib = out_b + in_b
+                    if _is_s2_tensor(op.type_str):
+                        s2 += out_b
+                    for o in _op_operands(op):
+                        if o in symbols and _is_s2_tensor(symbols[o]):
+                            s2 += _type_bytes(symbols[o])
+                out.hbm_bytes += contrib
+                out.s2_bytes += s2
+            # recurse
+            if kind == "while":
+                body = cond = None
+                for attr, target in _called_comps(op):
+                    if attr == "body=":
+                        body = target
+                    elif attr == "condition=":
+                        cond = target
+                trips = _trip_count(comps.get(cond, [])) if cond else 1
+                out.while_trips[op.name] = trips
+                if body:
+                    out.add(comp_metrics(body, count_bytes=count_bytes)
+                            .scaled(trips))
+            elif kind == "fusion":
+                for attr, target in _called_comps(op):
+                    if attr == "calls=":
+                        # flops/collectives inside fusions count; bytes don't
+                        out.add(comp_metrics(target, count_bytes=False))
+            elif kind in ("call", "conditional", "async-start"):
+                for attr, target in _called_comps(op):
+                    if attr in ("to_apply=", "calls="):
+                        out.add(comp_metrics(target, count_bytes=count_bytes))
+        cache[key] = out
+        return out
+
+    if not entry:
+        raise ValueError("no ENTRY computation found in HLO text")
+    return comp_metrics(entry, count_bytes=True)

@@ -1,0 +1,2 @@
+"""Model zoo: dense GQA transformer, MoE (+MLA), Mamba2 SSD, Zamba2
+hybrid, audio/VLM backbones.  Uniform API via repro.models.api."""

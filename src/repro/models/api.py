@@ -1,0 +1,63 @@
+"""Uniform model API: family → module dispatch.
+
+Every family module exposes:
+    init(key, cfg)                              → params
+    forward(params, cfg, tokens|embeds=, policy=) → logits[, aux]
+    train_loss(params, cfg, batch)              → scalar
+    make_cache(cfg, batch, max_len, bits=)      → cache pytree
+    prefill(params, cfg, tokens, cache, policy=) → (logits, cache)
+    decode_step(params, cfg, tokens, cache, policy=) → (logits, cache)
+    forward_with_taps(params, cfg, ...)         → (logits, taps)
+"""
+
+from __future__ import annotations
+
+from types import ModuleType
+
+from repro.configs.base import ModelConfig
+from repro.models import hybrid, mamba2, moe, transformer
+
+_FAMILY: dict[str, ModuleType] = {
+    "dense": transformer,
+    "audio": transformer,
+    "vlm": transformer,
+    "moe": moe,
+    "ssm": mamba2,
+    "hybrid": hybrid,
+}
+
+
+def get_model(cfg: ModelConfig) -> ModuleType:
+    return _FAMILY[cfg.family]
+
+
+def param_count(params) -> int:
+    import jax
+
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def active_param_count(cfg: ModelConfig, params) -> int:
+    """Active params per token (MoE: only top-k experts count)."""
+    total = param_count(params)
+    if not cfg.num_experts:
+        return total
+    import jax
+    import jax.numpy as jnp  # noqa: F401
+
+    expert_leaves = 0
+    moe_layers = params.get("moe_layers", {})
+    for name in ("wg", "wu", "wd"):
+        for layer in jax.tree.leaves({k: v for k, v in _iter_moe(moe_layers, name)}):
+            expert_leaves += layer.size
+    inactive_frac = 1.0 - cfg.experts_per_tok / cfg.num_experts
+    return int(total - expert_leaves * inactive_frac)
+
+
+def _iter_moe(tree, name):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            if k == name and k in ("wg", "wu", "wd"):
+                yield name + str(id(v)), v
+            elif isinstance(v, dict):
+                yield from _iter_moe(v, name)

@@ -1,0 +1,612 @@
+"""Shared model components: norms, RoPE, GQA attention, SwiGLU, linears.
+
+Design notes
+------------
+* Pure functional: params are plain dict pytrees; configs are static.
+* Every linear goes through :func:`dense`, which executes either the bf16
+  weight (training) or a folded+quantized :class:`QuantizedWeight`
+  (serving) — the paper's technique is a first-class execution mode, not
+  a bolt-on.
+* Layer stacks run under ``jax.lax.scan`` with params stacked on axis 0
+  (constant-size HLO for 126-layer models; remat policy per config).
+* KV caches support bf16 or int8 (per-token-per-head scales) storage.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.qlinear import QuantizedWeight, QuantPolicy, qlinear
+
+Params = dict[str, Any]
+
+__all__ = [
+    "dense", "init_linear", "rms_norm", "init_rms", "rope_angles", "apply_rope",
+    "attention_scores", "init_attn", "attn_apply", "init_mlp", "mlp_apply",
+    "init_embedding", "embed", "cross_entropy", "KVCache", "init_kv_cache",
+    "cache_update", "cache_read", "stack_layer_params", "scan_layers",
+]
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def shard_act(x: jax.Array, *, sp: bool = False) -> jax.Array:
+    """Constrain an activation to batch-over-dp, replicated elsewhere.
+
+    Anchors GSPMD propagation at block boundaries so the residual stream
+    never silently picks up a model-axis sharding (which would insert
+    per-layer activation all-gathers).  No-op without an active mesh or
+    when the batch doesn't divide the dp axes.
+
+    ``sp=True`` (sequence parallelism, Korthikanti et al.): additionally
+    shard the sequence axis over 'model' between blocks — GSPMD then
+    replaces each TP all-reduce with a reduce-scatter + all-gather pair
+    at half the wire bytes, and layer-boundary residuals shrink 16×.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names or mesh.size == 1:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.sharding import get_strategy
+
+    dp = (tuple(mesh.axis_names) if get_strategy() == "fsdp"
+          else tuple(a for a in mesh.axis_names if a != "model"))
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+    if not dp or x.shape[0] % size:
+        return x
+    seq_axis = None
+    if (sp and x.ndim == 3 and "model" in mesh.axis_names
+            and "model" not in dp
+            and x.shape[1] % mesh.shape["model"] == 0):
+        seq_axis = "model"
+    spec = P(dp if len(dp) > 1 else dp[0], seq_axis,
+             *([None] * (x.ndim - 2)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
+                scale: float | None = None, dtype=jnp.bfloat16) -> Params:
+    scale = (d_in ** -0.5) if scale is None else scale
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(x: jax.Array, p: Params, policy: QuantPolicy | None = None) -> jax.Array:
+    """Apply a linear from either a bf16 or a quantized param leaf."""
+    if "qw" in p:
+        y = qlinear(x, p["qw"], policy or QuantPolicy())
+    else:
+        y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def init_rms(d: int, dtype=jnp.bfloat16) -> Params:
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rms_norm(x: jax.Array, p: Params | None, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + eps)
+    y = xf * inv
+    if p is not None:  # folded (weightless) norms pass None — DESIGN.md §3
+        y = y * p["g"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float):
+    """cos/sin tables for given integer positions, shape (..., head_dim/2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (b, s, h, d). cos/sin: (b, s, d/2) or (s, d/2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    if cos.ndim == 2:
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+_CHUNK_Q_THRESHOLD = 8192   # switch to query-chunked attention beyond this
+_CHUNK_Q = 512
+_FLASH_KV_CHUNK = 1024
+_FLASH_Q_CHUNK = 512
+
+
+def flash_attention(q, k, v, *, causal: bool, q_offset=0,
+                    length=None, bf16_io: bool = True):
+    """Online-softmax (FlashAttention-style) GQA in pure XLA.
+
+    Double scan over (q-chunk × kv-chunk) with running (max, sum, acc)
+    carries: the (sq × sk) probability matrix NEVER materializes in HBM —
+    traffic drops from O(s²) to O(s·d) per pass.  This is the XLA twin of
+    the Pallas flash kernel a TPU build fuses; block sizes follow the
+    same VMEM reasoning (q 512 × kv 1024 tiles).  Exact (not approximate):
+    matches naive attention to bf16 rounding.
+    """
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    dv = v.shape[-1]
+    qb = _FLASH_Q_CHUNK if sq % _FLASH_Q_CHUNK == 0 else sq
+    kb = _FLASH_KV_CHUNK if sk % _FLASH_KV_CHUNK == 0 else sk
+    scale = d ** -0.5
+    qg = q.reshape(b, sq, hkv, g, d)
+    nq, nk = sq // qb, sk // kb
+    k_pos0 = jnp.arange(kb)
+    q_pos0 = jnp.arange(qb)
+
+    def q_chunk(_, qi):
+        qc = jax.lax.dynamic_slice_in_dim(qg, qi * qb, qb, 1)
+        q_pos = q_pos0 + qi * qb + q_offset
+
+        def kv_chunk(carry, ki):
+            m, l, acc = carry
+            kc = jax.lax.dynamic_slice_in_dim(k, ki * kb, kb, 1)
+            vc = jax.lax.dynamic_slice_in_dim(v, ki * kb, kb, 1)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qc.astype(jnp.float32),
+                           kc.astype(jnp.float32)) * scale
+            k_pos = k_pos0 + ki * kb
+            mask = jnp.ones((qb, kb), bool)
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if length is not None:
+                mask &= k_pos[None, :] < jnp.asarray(length).reshape(-1)[0]
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            p_cast = p.astype(jnp.bfloat16) if bf16_io else p
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p_cast,
+                            vc if bf16_io else vc.astype(jnp.float32))
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv.astype(
+                jnp.float32)
+            return (m_new, l_new, acc_new), ()
+
+        init = (jnp.full((b, hkv, g, qb), -jnp.inf, jnp.float32),
+                jnp.zeros((b, hkv, g, qb), jnp.float32),
+                jnp.zeros((b, hkv, g, qb, dv), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_chunk, init, jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # (b, hkv, g, qb, dv) → (b, qb, hq, dv)
+        out = jnp.moveaxis(out, 3, 1).reshape(b, qb, hq, dv)
+        return (), out
+
+    _, chunks = jax.lax.scan(q_chunk, (), jnp.arange(nq))
+    out = jnp.moveaxis(chunks, 0, 1).reshape(b, sq, hq, dv)
+    return out.astype(q.dtype)
+
+
+def attention_scores(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     causal: bool, q_offset: jax.Array | int = 0,
+                     window: int = 0, length: jax.Array | None = None,
+                     bf16_io: bool = False) -> jax.Array:
+    """Grouped-query attention core.
+
+    q: (b, sq, hq, d); k/v: (b, sk, hkv, d); hq % hkv == 0.
+    ``q_offset``: absolute position of q[0] (decode: cache length).
+    ``window``: sliding-window size (0 = full).  ``length``: valid kv
+    prefix length for decode against a preallocated cache.
+    """
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    if sq > _CHUNK_Q_THRESHOLD and sq % _CHUNK_Q == 0:
+        # Long-prefill path: scan over query chunks so the logits tensor
+        # is (chunk, sk) not (sq, sk) — O(sq·sk) FLOPs, O(chunk·sk) memory.
+        def one_chunk(carry, idx):
+            qc = jax.lax.dynamic_slice_in_dim(q, idx * _CHUNK_Q, _CHUNK_Q, 1)
+            oc = attention_scores(
+                qc, k, v, causal=causal,
+                q_offset=(jnp.asarray(q_offset) + idx * _CHUNK_Q),
+                window=window, length=length)
+            return carry, oc
+        _, chunks = jax.lax.scan(one_chunk, (),
+                                 jnp.arange(sq // _CHUNK_Q))
+        # chunks: (n, b, CHUNK, hq, d) → (b, sq, hq, d)
+        return jnp.moveaxis(chunks, 0, 1).reshape(b, sq, hq, v.shape[-1])
+    group = hq // hkv
+    qg = q.reshape(b, sq, hkv, group, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (d ** -0.5)
+    q_pos = jnp.arange(sq) + q_offset
+    k_pos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    if length is not None:
+        mask &= k_pos[None, :] < jnp.asarray(length).reshape(-1)[0]
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    if bf16_io:  # cast before P·V: cotangents (and any TP collectives on
+        # them) stay bf16 — halves backward wire bytes (§Perf)
+        probs = probs.astype(jnp.bfloat16)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.bfloat16))
+    else:
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, v.shape[-1]).astype(q.dtype)  # v dim ≠ qk dim in MLA
+
+
+def init_attn(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 4)
+    hd, hq, hkv = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+    return {
+        "wq": init_linear(ks[0], cfg.d_model, hq * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": init_linear(ks[1], cfg.d_model, hkv * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": init_linear(ks[2], cfg.d_model, hkv * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": init_linear(ks[3], hq * hd, cfg.d_model, dtype=dtype),
+        "ln": init_rms(cfg.d_model, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# KV cache (bf16 or int8-quantized storage)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KVCache:
+    """Per-stack KV cache; leading axis = layer (scanned).
+
+    int8 mode stores codes + per (b, s, h) scales — 2× HBM saving, the
+    serving-path default (QuantPolicy.kv_cache_bits = 8).
+    """
+
+    k: jax.Array                     # (L, b, S, hkv, d) bf16|int8
+    v: jax.Array
+    k_scale: jax.Array | None        # (L, b, S, hkv, 1) f32 when int8
+    v_scale: jax.Array | None
+    length: jax.Array                # () int32 — tokens filled
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
+
+def init_kv_cache(cfg: ModelConfig, n_layers: int, batch: int, max_len: int,
+                  *, bits: int | None = None, dtype=jnp.bfloat16,
+                  head_dim: int | None = None, kv_heads: int | None = None) -> KVCache:
+    hkv = cfg.num_kv_heads if kv_heads is None else kv_heads
+    hd = cfg.head_dim if head_dim is None else head_dim
+    if cfg.attn_window:
+        max_len = min(max_len, cfg.attn_window)
+    shape = (n_layers, batch, max_len, hkv, hd)
+    if bits == 8:
+        return KVCache(
+            k=jnp.zeros(shape, jnp.int8), v=jnp.zeros(shape, jnp.int8),
+            k_scale=jnp.zeros((*shape[:4], 1), jnp.float32),
+            v_scale=jnp.zeros((*shape[:4], 1), jnp.float32),
+            length=jnp.zeros((), jnp.int32),
+        )
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   k_scale=None, v_scale=None, length=jnp.zeros((), jnp.int32))
+
+
+def _quant_kv(x: jax.Array):
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.where(absmax == 0, 1.0, absmax) / 127.0
+    return jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                    ).astype(jnp.int8), scale
+
+
+def cache_update(layer_kv: dict, k_new: jax.Array, v_new: jax.Array,
+                 length: jax.Array, *, window: int = 0):
+    """Write new k/v at position ``length`` into one layer's cache slice.
+
+    layer_kv: dict(k, v[, k_scale, v_scale]) with shapes (b, S, h, d).
+    Sliding-window caches write modulo the window (ring buffer).
+    """
+    S = layer_kv["k"].shape[1]
+    pos = (length % S) if window else length
+    def put(buf, val):
+        return jax.lax.dynamic_update_slice(
+            buf, val.astype(buf.dtype), (0, pos, 0, 0))
+    out = dict(layer_kv)
+    if "k_scale" in layer_kv and layer_kv["k_scale"] is not None:
+        kq, ks = _quant_kv(k_new)
+        vq, vs = _quant_kv(v_new)
+        out["k"], out["v"] = put(layer_kv["k"], kq), put(layer_kv["v"], vq)
+        out["k_scale"] = jax.lax.dynamic_update_slice(
+            layer_kv["k_scale"], ks, (0, pos, 0, 0))
+        out["v_scale"] = jax.lax.dynamic_update_slice(
+            layer_kv["v_scale"], vs, (0, pos, 0, 0))
+    else:
+        out["k"], out["v"] = put(layer_kv["k"], k_new), put(layer_kv["v"], v_new)
+    return out
+
+
+def cache_read(layer_kv: dict):
+    """Dequantized (k, v) views of one layer's cache slice."""
+    k, v = layer_kv["k"], layer_kv["v"]
+    if layer_kv.get("k_scale") is not None:
+        k = (k.astype(jnp.float32) * layer_kv["k_scale"]).astype(jnp.bfloat16)
+        v = (v.astype(jnp.float32) * layer_kv["v_scale"]).astype(jnp.bfloat16)
+    return k, v
+
+
+def flash_decode(q, layer_kv: dict, valid, *, dp_spec) -> jax.Array:
+    """Distributed online-softmax decode over a SEQUENCE-sharded KV cache.
+
+    Each model-shard scores its local KV slice (dequantizing int8 codes
+    locally — the full cache never leaves its shard), computes a local
+    (max, sum, partial output), and three tiny psums combine them:
+    wire per layer drops from the (b,h,1,S) f32 logits all-gather
+    (~137 MB for llama decode_32k) to (b,h,[1+1+hd]) f32 (~0.5 MB).
+    q: (b, 1, hq, d); cache slices (b, S, hkv, ·).  §Perf cell C it2.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.sharding.get_abstract_mesh()
+    b, sq, hq, d = q.shape
+    S = layer_kv["k"].shape[1]
+    quantized = layer_kv.get("k_scale") is not None
+
+    def local(qc, k, v, ks, vs, valid_):
+        idx = jax.lax.axis_index("model")
+        b_loc, sq_, hq_, d_ = qc.shape  # LOCAL shapes (batch may be sharded)
+        s_loc = k.shape[1]
+        if quantized:
+            k = (k.astype(jnp.float32) * ks).astype(jnp.bfloat16)
+            v = (v.astype(jnp.float32) * vs).astype(jnp.bfloat16)
+        hkv = k.shape[2]
+        g = hq_ // hkv
+        qg = qc.reshape(b_loc, sq_, hkv, g, d_)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                       k.astype(jnp.float32)) * (d ** -0.5)
+        pos = jnp.arange(s_loc) + idx * s_loc  # global slot positions
+        mask = pos[None, None, None, None, :] < valid_
+        s = jnp.where(mask, s, -1e30)
+        m_loc = s.max(-1)                                    # (b,h,g,1)
+        m_glob = jax.lax.pmax(m_loc, "model")
+        p = jnp.exp(s - m_glob[..., None])
+        l = jax.lax.psum(p.sum(-1), "model")                 # (b,h,g,1)
+        o = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(jnp.float32),
+                       v.astype(jnp.float32))
+        o = jax.lax.psum(o, "model")
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(out, 3, 1).reshape(
+            b_loc, sq_, hq_, v.shape[-1]).astype(qc.dtype)
+
+    kv_spec = P(dp_spec, "model", None, None)
+    ks = layer_kv.get("k_scale")
+    vs = layer_kv.get("v_scale")
+    scale_spec = kv_spec if quantized else P()
+    return jax.shard_map(
+        local,
+        in_specs=(P(dp_spec, None, None, None), kv_spec, kv_spec,
+                  scale_spec, scale_spec, P()),
+        out_specs=P(dp_spec, None, None, None),
+        check_vma=False,
+    )(q, layer_kv["k"], layer_kv["v"],
+      ks if quantized else jnp.zeros((), jnp.float32),
+      vs if quantized else jnp.zeros((), jnp.float32),
+      jnp.asarray(valid))
+
+
+def _flash_decode_ok(cfg: ModelConfig, q, layer_kv) -> tuple[bool, Any]:
+    """Eligibility + the dp spec for flash_decode under the ambient mesh."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return False, None
+    b, sq = q.shape[0], q.shape[1]
+    S, hkv = layer_kv["k"].shape[1], layer_kv["k"].shape[2]
+    if sq != 1 or cfg.attn_window or S % mesh.shape["model"]:
+        return False, None
+    if hkv % mesh.shape["model"] == 0:
+        return False, None  # head-sharded caches don't need it
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+    dp_spec = (dp if len(dp) > 1 else dp[0]) if (dp and b % size == 0) \
+        else None
+    return True, dp_spec
+
+
+def attn_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
+               layer_kv: dict | None = None, length: jax.Array | int = 0,
+               policy: QuantPolicy | None = None, taps: dict | None = None):
+    """Full attention block (pre-norm). Returns (y, updated layer_kv)."""
+    b, s, _ = x.shape
+    hd, hq, hkv = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+    h = rms_norm(x, p.get("ln"), cfg.norm_eps)
+    if taps is not None:  # q/k/v share this input (paper §III-A)
+        taps["k_proj"] = h
+    q = dense(h, p["wq"], policy).reshape(b, s, hq, hd)
+    k = dense(h, p["wk"], policy).reshape(b, s, hkv, hd)
+    v = dense(h, p["wv"], policy).reshape(b, s, hkv, hd)
+    pos = jnp.arange(s) + length
+    cos, sin = rope_angles(pos, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if layer_kv is not None:  # decode / cached prefill
+        layer_kv = cache_update(layer_kv, k, v, length, window=cfg.attn_window)
+        valid = jnp.minimum(jnp.asarray(length) + s, layer_kv["k"].shape[1])
+        use_fd, dp_spec = (False, None)
+        if cfg.decode_flash:
+            use_fd, dp_spec = _flash_decode_ok(cfg, q, layer_kv)
+        if use_fd:
+            out = flash_decode(q, layer_kv, valid, dp_spec=dp_spec)
+        else:
+            kc, vc = cache_read(layer_kv)
+            # Ring-buffer caches: every stored slot is within the window
+            # and causally valid; keys carry absolute RoPE so slot order
+            # is irrelevant (attention is permutation-invariant over
+            # keys).  Cached prefill (s > 1, non-ring) additionally needs
+            # the causal mask since cache slots ARE absolute positions.
+            out = attention_scores(q, kc, vc, causal=(s > 1),
+                                   q_offset=length, window=0, length=valid,
+                                   bf16_io=cfg.attn_bf16_io)
+    elif cfg.attn_impl == "flash" and not cfg.attn_window:
+        out = flash_attention(q, k, v, causal=True,
+                              bf16_io=cfg.attn_bf16_io)
+    else:
+        out = attention_scores(q, k, v, causal=True, window=cfg.attn_window,
+                               bf16_io=cfg.attn_bf16_io)
+    o_in = out.reshape(b, s, hq * hd)
+    if taps is not None:
+        taps["o_proj"] = o_in
+    y = dense(o_in, p["wo"], policy)
+    return x + y, layer_kv
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "wg": init_linear(ks[0], d_model, d_ff, dtype=dtype),
+        "wu": init_linear(ks[1], d_model, d_ff, dtype=dtype),
+        "wd": init_linear(ks[2], d_ff, d_model, dtype=dtype),
+        "ln": init_rms(d_model, dtype),
+    }
+
+
+def mlp_apply(p: Params, x: jax.Array, cfg: ModelConfig,
+              policy: QuantPolicy | None = None, *, residual: bool = True,
+              taps: dict | None = None):
+    h = rms_norm(x, p.get("ln"), cfg.norm_eps) if "ln" in p and p["ln"] is not None else x
+    if taps is not None:  # gate/up share this input (paper §III-A)
+        taps["gate_proj"] = h
+    g = dense(h, p["wg"], policy)
+    u = dense(h, p["wu"], policy)
+    a = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    if taps is not None:
+        taps["down_proj"] = a
+    y = dense(a, p["wd"], policy)
+    return x + y if residual else y
+
+
+# ---------------------------------------------------------------------------
+# embedding / loss
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.bfloat16) -> Params:
+    return {"e": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)}
+
+
+def embed(p: Params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["e"], tokens, axis=0)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logits.astype(jnp.float32), labels[..., None],
+                             axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# layer stacking
+# ---------------------------------------------------------------------------
+
+
+def stack_layer_params(keys, init_fn):
+    """vmap an init over layer keys → params stacked on axis 0."""
+    return jax.vmap(init_fn)(keys)
+
+
+def scan_layers(block_fn, params_stacked, x, *, remat: bool, extras=None,
+                sp: bool = False, remat_policy: str = "full"):
+    """Run ``block_fn(layer_params, x, extra) -> (x, y)`` over the stack.
+
+    ``extras``: optional pytree with leading layer axis scanned alongside
+    (e.g. per-layer KV cache slices).  Returns (x, stacked ys).
+    ``sp``: sequence-parallel the residual stream between blocks.
+    ``remat_policy='dots_no_batch'``: save linear (no-batch-dim) dot
+    outputs, recompute attention scores/probs in backward — one fewer
+    weight all-gather pass than full remat, and no s² residency (the
+    contract a fused flash-attention backward provides on TPU).
+    """
+    group = 1
+    if remat and remat_policy.startswith("group"):
+        group = int(remat_policy[len("group"):] or 2)
+        fn = block_fn
+    elif remat and remat_policy == "dots_no_batch":
+        fn = jax.checkpoint(
+            block_fn,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    elif remat:
+        fn = jax.checkpoint(block_fn)
+    else:
+        fn = block_fn
+
+    if group > 1:
+        # grouped remat: one residual stored per GROUP of g layers (126
+        # layers × 134 MB does not fit HBM at 405B scale; 126/g does) —
+        # backward recomputes the g-layer group once.
+        L = jax.tree.leaves(params_stacked)[0].shape[0]
+        if L % group:
+            group = 1  # fall back silently for non-divisible stacks
+    if group > 1:
+        regroup = lambda t: jax.tree.map(
+            lambda a: a.reshape(a.shape[0] // group, group, *a.shape[1:]), t)
+        pg = regroup(params_stacked)
+        eg = regroup(extras) if extras is not None else None
+
+        # inner layers carry the dots-no-batch policy so the group's
+        # backward live-set holds linear outputs only (never s² probs)
+        inner_fn = jax.checkpoint(
+            block_fn,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+        @jax.checkpoint
+        def group_step(carry, group_in):
+            lp_g, extra_g = group_in
+
+            def inner(c, one):
+                lp, ex = one
+                c, y = inner_fn(lp, c, ex)
+                return shard_act(c, sp=sp), y
+
+            carry, ys = jax.lax.scan(inner, carry, (lp_g, extra_g))
+            return carry, ys
+
+        x, ys = jax.lax.scan(group_step, shard_act(x, sp=sp), (pg, eg))
+        ys = jax.tree.map(
+            lambda a: a.reshape(a.shape[0] * a.shape[1], *a.shape[2:]), ys)
+        return x, ys
+
+    def step(carry, layer_in):
+        lp, extra = layer_in
+        carry, y = fn(lp, carry, extra)
+        return shard_act(carry, sp=sp), y
+
+    x, ys = jax.lax.scan(step, shard_act(x, sp=sp), (params_stacked, extras))
+    return x, ys

@@ -1,0 +1,199 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with a SHARED attention+FFN
+block invoked after every ``attn_every`` SSM blocks (weight sharing is
+the Zamba signature — one transformer block's parameters reused at every
+invocation, each with its own KV cache).
+
+Decode is O(1) in context for the SSM part plus one KV lookup per shared
+-attention invocation → ``long_500k`` runs natively (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models import mamba2 as mb
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class HybridCache:
+    ssm: jax.Array     # (L_mamba, b, h, p, n)
+    conv: jax.Array    # (L_mamba, b, k-1, c)
+    attn: cm.KVCache   # (n_invocations, b, S, hkv, hd)
+    length: jax.Array
+
+
+def _groups(cfg: ModelConfig) -> list[tuple[int, int, bool]]:
+    """[(lo, hi, attn_after)] covering cfg.num_layers mamba blocks."""
+    out, lo = [], 0
+    while lo < cfg.num_layers:
+        hi = min(lo + cfg.attn_every, cfg.num_layers)
+        out.append((lo, hi, hi - lo == cfg.attn_every))
+        lo = hi
+    return out
+
+
+def n_attn_invocations(cfg: ModelConfig) -> int:
+    return sum(1 for *_x, a in _groups(cfg) if a)
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    k_emb, k_layers, k_shared, k_out = jax.random.split(key, 4)
+    ka, km = jax.random.split(k_shared)
+    return {
+        "embed": cm.init_embedding(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": cm.stack_layer_params(
+            jax.random.split(k_layers, cfg.num_layers),
+            lambda k: mb.init_mamba_block(k, cfg, dtype)),
+        "shared": {"attn": cm.init_attn(ka, cfg, dtype),
+                   "mlp": cm.init_mlp(km, cfg.d_model, cfg.d_ff, dtype)},
+        "final_ln": cm.init_rms(cfg.d_model, dtype),
+        "lm_head": cm.init_linear(k_out, cfg.d_model, cfg.vocab_size, dtype=dtype),
+    }
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               bits: int | None = None) -> HybridCache:
+    return HybridCache(
+        ssm=jnp.zeros((cfg.num_layers, batch, cfg.ssm_nheads, cfg.ssm_headdim,
+                       cfg.ssm_state), jnp.float32),
+        conv=jnp.zeros((cfg.num_layers, batch, cfg.ssm_conv - 1,
+                        mb.conv_channels(cfg)), jnp.bfloat16),
+        attn=cm.init_kv_cache(cfg, n_attn_invocations(cfg), batch, max_len,
+                              bits=bits),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def _slice_tree(tree, lo, hi):
+    return jax.tree.map(lambda a: a[lo:hi], tree)
+
+
+def _backbone(params, cfg: ModelConfig, h, *, cache: HybridCache | None = None,
+              policy=None, collect_taps=False):
+    length = 0 if cache is None else cache.length
+    taps_all = [] if collect_taps else None
+    ssm_out, conv_out, kv_out = [], [], []
+    attn_idx = 0
+    for lo, hi, attn_after in _groups(cfg):
+        lp = _slice_tree(params["layers"], lo, hi)
+
+        def block(lp_one, x, extra):
+            taps = {} if collect_taps else None
+            x, st = mb.mamba_apply(lp_one, x, cfg, state=extra, policy=policy,
+                                   taps=taps)
+            return x, (taps if collect_taps else st)
+
+        if cache is None:
+            h, ys = cm.scan_layers(lambda q, x, _: block(q, x, None), lp, h,
+                                   remat=cfg.remat)
+            if collect_taps:
+                taps_all.append(ys)
+        else:
+            extras = {"ssm": cache.ssm[lo:hi], "conv": cache.conv[lo:hi]}
+            h, st = cm.scan_layers(block, lp, h, remat=False, extras=extras)
+            ssm_out.append(st["ssm"])
+            conv_out.append(st["conv"])
+        if attn_after:
+            sp = params["shared"]
+            if cache is None:
+                h, _ = cm.attn_apply(sp["attn"], h, cfg, policy=policy)
+            else:
+                kv = {"k": cache.attn.k[attn_idx], "v": cache.attn.v[attn_idx]}
+                if cache.attn.quantized:
+                    kv.update(k_scale=cache.attn.k_scale[attn_idx],
+                              v_scale=cache.attn.v_scale[attn_idx])
+                h, kv = cm.attn_apply(sp["attn"], h, cfg, layer_kv=kv,
+                                      length=length, policy=policy)
+                kv_out.append(kv)
+            h = cm.mlp_apply(sp["mlp"], h, cfg, policy)
+            attn_idx += 1
+    x = cm.rms_norm(h, params.get("final_ln"), cfg.norm_eps)
+    new_cache = None
+    if cache is not None:
+        stack = lambda xs: jax.tree.map(lambda *a: jnp.stack(a, 0), *xs) \
+            if len(xs) > 1 else jax.tree.map(lambda a: a[None], xs[0])
+        kvs = stack(kv_out)
+        new_cache = HybridCache(
+            ssm=jnp.concatenate(ssm_out, 0), conv=jnp.concatenate(conv_out, 0),
+            attn=cm.KVCache(k=kvs["k"], v=kvs["v"],
+                            k_scale=kvs.get("k_scale"),
+                            v_scale=kvs.get("v_scale"),
+                            length=cache.attn.length + h.shape[1]),
+            length=cache.length + h.shape[1],
+        )
+    if collect_taps:
+        merged = jax.tree.map(lambda *a: jnp.concatenate(a, 0), *taps_all) \
+            if len(taps_all) > 1 else taps_all[0]
+        return x, new_cache, merged
+    return x, new_cache, None
+
+
+def forward(params, cfg: ModelConfig, tokens=None, *, embeds=None, policy=None):
+    h = cm.embed(params["embed"], tokens) if embeds is None else embeds
+    x, _, _ = _backbone(params, cfg, h, policy=policy)
+    return cm.dense(x, params["lm_head"], policy)
+
+
+def forward_with_taps(params, cfg: ModelConfig, tokens=None, *, embeds=None):
+    h = cm.embed(params["embed"], tokens) if embeds is None else embeds
+    x, _, taps = _backbone(params, cfg, h, collect_taps=True)
+    return cm.dense(x, params["lm_head"]), taps
+
+
+def train_loss(params, cfg: ModelConfig, batch):
+    logits = forward(params, cfg, batch.get("tokens"), embeds=batch.get("embeds"))
+    return cm.cross_entropy(logits[:, :-1], batch["labels"][:, 1:],
+                            batch.get("mask"))
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache: HybridCache,
+                policy=None):
+    h = cm.embed(params["embed"], tokens)
+    x, cache, _ = _backbone(params, cfg, h, cache=cache, policy=policy)
+    return cm.dense(x, params["lm_head"], policy), cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache: HybridCache, policy=None):
+    """Hybrid prefill: chunked SSM (threading out true final states) +
+    full-prompt KV writes for each shared-attention invocation."""
+    h = cm.embed(params["embed"], tokens)
+    s = tokens.shape[1]
+    ssm_out, conv_out, kv_out = [], [], []
+    attn_idx = 0
+    for lo, hi, attn_after in _groups(cfg):
+        lp = _slice_tree(params["layers"], lo, hi)
+        h, st = cm.scan_layers(
+            lambda q, x, _: mb.mamba_prefill_block(q, x, cfg, policy),
+            lp, h, remat=False)
+        ssm_out.append(st["ssm"])
+        conv_out.append(st["conv"])
+        if attn_after:
+            sp = params["shared"]
+            kv = {"k": cache.attn.k[attn_idx], "v": cache.attn.v[attn_idx]}
+            if cache.attn.quantized:
+                kv.update(k_scale=cache.attn.k_scale[attn_idx],
+                          v_scale=cache.attn.v_scale[attn_idx])
+            h, kv = cm.attn_apply(sp["attn"], h, cfg, layer_kv=kv, length=0,
+                                  policy=policy)
+            kv_out.append(kv)
+            h = cm.mlp_apply(sp["mlp"], h, cfg, policy)
+            attn_idx += 1
+    x = cm.rms_norm(h, params.get("final_ln"), cfg.norm_eps)
+    stack = lambda xs: jax.tree.map(lambda *a: jnp.stack(a, 0), *xs) \
+        if len(xs) > 1 else jax.tree.map(lambda a: a[None], xs[0])
+    kvs = stack(kv_out)
+    new_cache = HybridCache(
+        ssm=jnp.concatenate(ssm_out, 0), conv=jnp.concatenate(conv_out, 0),
+        attn=cm.KVCache(k=kvs["k"], v=kvs["v"], k_scale=kvs.get("k_scale"),
+                        v_scale=kvs.get("v_scale"),
+                        length=cache.attn.length + s),
+        length=cache.length + s,
+    )
+    logits = cm.dense(x[:, -1:], params["lm_head"], policy)
+    return logits, new_cache

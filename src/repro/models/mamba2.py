@@ -1,0 +1,306 @@
+"""Mamba2 (SSD — state-space duality) in chunked, MXU-friendly form.
+
+The SSD algorithm (arXiv:2405.21060) computes the selective-SSM output
+with matmuls over chunks: an intra-chunk quadratic term (masked by the
+decay kernel L), per-chunk boundary states, an inter-chunk scan of
+states, and a low-rank inter-chunk correction — all einsums of size
+(chunk × chunk) or (chunk × d_state), which is exactly what the MXU
+wants (DESIGN.md §3).  Decode keeps an O(1) recurrent state per layer:
+h ← exp(dtA)·h + dt·B⊗x, y = C·h — this is what makes ``long_500k``
+native for the SSM/hybrid archs.
+
+Quantization sites (the paper's technique): in_proj / out_proj are
+standard linears and go through the same fold+quantize pipeline; the
+recurrence itself is not a weight matmul and stays bf16 (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.qlinear import QuantPolicy
+from repro.models import common as cm
+
+Params = dict[str, Any]
+
+
+def conv_channels(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+
+
+def init_mamba_block(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 5)
+    d, di, h = cfg.d_model, cfg.d_inner, cfg.ssm_nheads
+    gn = cfg.ssm_ngroups * cfg.ssm_state
+    d_in_proj = 2 * di + 2 * gn + h  # z, x, B, C, dt
+    return {
+        "in_proj": cm.init_linear(ks[0], d, d_in_proj, dtype=dtype),
+        "out_proj": cm.init_linear(ks[1], di, d, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.ssm_conv, conv_channels(cfg)),
+                                     jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_channels(cfg),), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": (jax.random.uniform(ks[3], (h,), jnp.float32) * 2 - 4.0),
+        "ln": cm.init_rms(d, dtype),
+        "gate_ln": cm.init_rms(di, dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, gn, h = cfg.d_inner, cfg.ssm_ngroups * cfg.ssm_state, cfg.ssm_nheads
+    z = zxbcdt[..., :di]
+    xc = zxbcdt[..., di:2 * di + 2 * gn]      # conv input: x ++ B ++ C
+    dt = zxbcdt[..., 2 * di + 2 * gn:]
+    return z, xc, dt
+
+
+def _causal_conv(xc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along time. xc (b, l, c); w (k, c)."""
+    k = w.shape[0]
+    pad = jnp.pad(xc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xc.shape[1], :] * w[i][None, None] for i in range(k))
+    return jax.nn.silu((out + b[None, None]).astype(jnp.float32))
+
+
+def _split_conv_out(cfg: ModelConfig, conv_out: jax.Array):
+    di, g, n = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    x = conv_out[..., :di]
+    B = conv_out[..., di:di + g * n]
+    C = conv_out[..., di + g * n:]
+    return x, B, C
+
+
+def ssd_chunked(x, dt, A, B, C, D, *, chunk: int, h_init=None):
+    """SSD scan. x (b,l,h,p); dt (b,l,h) post-softplus; A (h,) negative;
+    B,C (b,l,g,n).  Returns (y (b,l,h,p), final state (b,h,p,n))."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Q = chunk
+    l_orig = l
+    if l % Q:  # pad to a chunk multiple: dt=0 ⇒ no decay, no contribution
+        pad = Q - l % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        l = l + pad
+    nc = l // Q
+    xr = x.reshape(b, nc, Q, h, p)
+    dtr = dt.reshape(b, nc, Q, h)
+    Br = jnp.repeat(B.reshape(b, nc, Q, g, n), rep, axis=3)   # (b,c,Q,h,n)
+    Cr = jnp.repeat(C.reshape(b, nc, Q, g, n), rep, axis=3)
+    dA = dtr * A[None, None, None]                             # (b,c,Q,h) ≤ 0
+    cum = jnp.cumsum(dA, axis=2)                               # within-chunk
+    total = cum[:, :, -1]                                      # (b,c,h)
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i ≥ j
+    Lmat = jnp.exp(cum[:, :, :, None] - cum[:, :, None, :])    # (b,c,Q,Q,h)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    Lmat = jnp.where(causal[None, None, :, :, None], Lmat, 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Cr.astype(jnp.float32),
+                        Br.astype(jnp.float32)) * Lmat
+    xdt = xr.astype(jnp.float32) * dtr[..., None]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xdt)
+    # chunk boundary states: S_c = Σ_j exp(total - cum_j) dt_j B_j ⊗ x_j
+    decay_out = jnp.exp(total[:, :, None] - cum)               # (b,c,Q,h)
+    Sc = jnp.einsum("bcjhn,bcjh,bcjhp->bchpn", Br.astype(jnp.float32),
+                    decay_out, xdt)
+    # inter-chunk recurrence over c
+    if h_init is None:
+        h_init = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(S, inp):
+        Sc_c, tot_c = inp
+        S_new = S * jnp.exp(tot_c)[:, :, None, None] + Sc_c
+        return S_new, S  # emit state BEFORE this chunk
+
+    S_final, S_prev = jax.lax.scan(
+        step, h_init, (jnp.moveaxis(Sc, 1, 0), jnp.moveaxis(total, 1, 0)))
+    S_prev = jnp.moveaxis(S_prev, 0, 1)                        # (b,c,h,p,n)
+    y_inter = jnp.einsum("bcihn,bchpn->bcihp", Cr.astype(jnp.float32),
+                         S_prev) * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y[:, :l_orig], S_final
+
+
+def mamba_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                state: dict | None = None, policy: QuantPolicy | None = None,
+                taps: dict | None = None):
+    """Full Mamba2 block. ``state`` (decode): dict(ssm (b,h,p,n),
+    conv (b, k-1, conv_ch)).  Returns (y, new_state)."""
+    bsz, l, _ = x.shape
+    h_heads, pd = cfg.ssm_nheads, cfg.ssm_headdim
+    res = x
+    hid = cm.rms_norm(x, p.get("ln"), cfg.norm_eps)
+    if taps is not None:
+        taps["in_proj"] = hid
+    zxbcdt = cm.dense(hid, p["in_proj"], policy)
+    z, xc, dt = _split_proj(cfg, zxbcdt)
+    A = -jnp.exp(p["A_log"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+
+    if state is None:  # chunked prefill/train
+        conv_out = _causal_conv(xc, p["conv_w"], p["conv_b"])
+        xs, B, C = _split_conv_out(cfg, conv_out)
+        y, _ = ssd_chunked(
+            xs.reshape(bsz, l, h_heads, pd).astype(jnp.float32), dt, A,
+            B.reshape(bsz, l, cfg.ssm_ngroups, cfg.ssm_state),
+            C.reshape(bsz, l, cfg.ssm_ngroups, cfg.ssm_state),
+            p["D"], chunk=min(cfg.ssm_chunk, l))
+        new_state = None
+    else:  # single-token decode: O(1) state update
+        conv_buf = jnp.concatenate([state["conv"], xc.astype(state["conv"].dtype)],
+                                   axis=1)          # (b, k, c)
+        k = p["conv_w"].shape[0]
+        conv_buf = conv_buf[:, -k:]
+        conv_out = jax.nn.silu(
+            (jnp.einsum("bkc,kc->bc", conv_buf.astype(jnp.float32),
+                        p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+             ).astype(jnp.float32))[:, None]
+        xs, B, C = _split_conv_out(cfg, conv_out)
+        xh = xs.reshape(bsz, h_heads, pd).astype(jnp.float32)
+        Bh = jnp.repeat(B.reshape(bsz, cfg.ssm_ngroups, cfg.ssm_state),
+                        h_heads // cfg.ssm_ngroups, axis=1)
+        Ch = jnp.repeat(C.reshape(bsz, cfg.ssm_ngroups, cfg.ssm_state),
+                        h_heads // cfg.ssm_ngroups, axis=1)
+        dt1 = dt[:, 0]                               # (b, h)
+        S = state["ssm"] * jnp.exp(dt1 * A[None])[:, :, None, None] \
+            + jnp.einsum("bhn,bh,bhp->bhpn", Bh, dt1, xh)
+        y = jnp.einsum("bhn,bhpn->bhp", Ch, S) + xh * p["D"][None, :, None]
+        y = y.reshape(bsz, 1, h_heads, pd)
+        new_state = {"ssm": S, "conv": conv_buf[:, -(k - 1):]}
+
+    y = y.reshape(bsz, l, cfg.d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = cm.rms_norm(y, p.get("gate_ln"), cfg.norm_eps)
+    if taps is not None:  # gated, normed SSM output — the down_proj analog
+        taps["out_proj"] = y
+    return res + cm.dense(y, p["out_proj"], policy), new_state
+
+
+# ---------------------------------------------------------------------------
+# full SSM model (mamba2-780m)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SSMCache:
+    ssm: jax.Array    # (L, b, h, p, n) f32
+    conv: jax.Array   # (L, b, k-1, conv_ch) bf16
+    length: jax.Array
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    k_emb, k_layers, k_out = jax.random.split(key, 3)
+    return {
+        "embed": cm.init_embedding(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": cm.stack_layer_params(
+            jax.random.split(k_layers, cfg.num_layers),
+            lambda k: init_mamba_block(k, cfg, dtype)),
+        "final_ln": cm.init_rms(cfg.d_model, dtype),
+        "lm_head": cm.init_linear(k_out, cfg.d_model, cfg.vocab_size, dtype=dtype),
+    }
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               bits: int | None = None) -> SSMCache:
+    del max_len, bits  # O(1) state regardless of context length
+    return SSMCache(
+        ssm=jnp.zeros((cfg.num_layers, batch, cfg.ssm_nheads, cfg.ssm_headdim,
+                       cfg.ssm_state), jnp.float32),
+        conv=jnp.zeros((cfg.num_layers, batch, cfg.ssm_conv - 1,
+                        conv_channels(cfg)), jnp.bfloat16),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def _backbone(params, cfg, h, *, cache=None, policy=None, collect_taps=False):
+    def block(lp, x, extra):
+        taps = {} if collect_taps else None
+        st = extra
+        x, st_new = mamba_apply(lp, x, cfg, state=st, policy=policy, taps=taps)
+        return x, (taps if collect_taps else st_new)
+
+    if cache is None:
+        x, ys = cm.scan_layers(lambda lp, x, _: block(lp, x, None),
+                               params["layers"], h, remat=cfg.remat,
+                               sp=cfg.seq_parallel,
+                               remat_policy=cfg.remat_policy)
+        new_cache = ys if collect_taps else None
+    else:
+        extras = {"ssm": cache.ssm, "conv": cache.conv}
+        x, st = cm.scan_layers(block, params["layers"], h, remat=False,
+                               extras=extras)
+        new_cache = SSMCache(ssm=st["ssm"], conv=st["conv"],
+                             length=cache.length + h.shape[1])
+    x = cm.rms_norm(x, params.get("final_ln"), cfg.norm_eps)
+    return x, new_cache
+
+
+def forward(params, cfg: ModelConfig, tokens=None, *, embeds=None, policy=None):
+    h = cm.embed(params["embed"], tokens) if embeds is None else embeds
+    x, _ = _backbone(params, cfg, h, policy=policy)
+    return cm.dense(x, params["lm_head"], policy)
+
+
+def forward_with_taps(params, cfg: ModelConfig, tokens=None, *, embeds=None):
+    h = cm.embed(params["embed"], tokens) if embeds is None else embeds
+    x, taps = _backbone(params, cfg, h, collect_taps=True)
+    return cm.dense(x, params["lm_head"]), taps
+
+
+def train_loss(params, cfg: ModelConfig, batch):
+    logits = forward(params, cfg, batch.get("tokens"), embeds=batch.get("embeds"))
+    return cm.cross_entropy(logits[:, :-1], batch["labels"][:, 1:],
+                            batch.get("mask"))
+
+
+def mamba_prefill_block(lp, x, cfg: ModelConfig, policy=None):
+    """Chunked forward of one block that ALSO returns the decode state
+    (final SSM state + conv tail) — used by SSM/hybrid prefill."""
+    bsz, l, _ = x.shape
+    res = x
+    hid = cm.rms_norm(x, lp.get("ln"), cfg.norm_eps)
+    zxbcdt = cm.dense(hid, lp["in_proj"], policy)
+    z, xc, dt = _split_proj(cfg, zxbcdt)
+    A = -jnp.exp(lp["A_log"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"][None, None])
+    conv_out = _causal_conv(xc, lp["conv_w"], lp["conv_b"])
+    xs, B, C = _split_conv_out(cfg, conv_out)
+    y, S = ssd_chunked(
+        xs.reshape(bsz, l, cfg.ssm_nheads, cfg.ssm_headdim).astype(jnp.float32),
+        dt, A, B.reshape(bsz, l, cfg.ssm_ngroups, cfg.ssm_state),
+        C.reshape(bsz, l, cfg.ssm_ngroups, cfg.ssm_state),
+        lp["D"], chunk=min(cfg.ssm_chunk, l))
+    y = y.reshape(bsz, l, cfg.d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = cm.rms_norm(y, lp.get("gate_ln"), cfg.norm_eps)
+    x = res + cm.dense(y, lp["out_proj"], policy)
+    conv_tail = xc[:, -(cfg.ssm_conv - 1):].astype(jnp.bfloat16)
+    return x, {"ssm": S, "conv": conv_tail}
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache: SSMCache, policy=None):
+    """SSM prefill: chunked scan, threading out the true final state."""
+    h = cm.embed(params["embed"], tokens)
+    x, st = cm.scan_layers(
+        lambda lp, x, _: mamba_prefill_block(lp, x, cfg, policy),
+        params["layers"], h, remat=False)
+    x = cm.rms_norm(x, params.get("final_ln"), cfg.norm_eps)
+    logits = cm.dense(x[:, -1:], params["lm_head"], policy)
+    return logits, SSMCache(ssm=st["ssm"], conv=st["conv"],
+                            length=cache.length + tokens.shape[1])
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache: SSMCache, policy=None):
+    h = cm.embed(params["embed"], tokens)
+    x, cache = _backbone(params, cfg, h, cache=cache, policy=policy)
+    return cm.dense(x, params["lm_head"], policy), cache

@@ -1,0 +1,43 @@
+"""Modality frontends for the audio (MusicGen) and VLM (InternVL2) archs.
+
+Per the task spec these are STUBS: the transformer BACKBONE is the real
+model (repro.models.transformer); ``input_specs()`` supplies precomputed
+frame/patch embeddings.  The functions here generate such embeddings
+deterministically from raw-ish inputs so the examples and smoke tests
+have an end-to-end path, and document what a production frontend would
+compute (EnCodec tokens → codebook embeddings; ViT patches → projected
+visual tokens).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["encodec_frame_embeddings", "vit_patch_embeddings"]
+
+
+def encodec_frame_embeddings(key, cfg: ModelConfig, batch: int, seq: int,
+                             n_codebooks: int = 4) -> jax.Array:
+    """Stand-in for EnCodec→embedding: sums n_codebooks codebook embeddings
+    per frame (MusicGen's delay-pattern flattening is upstream of the
+    backbone and out of scope per the task spec)."""
+    ks = jax.random.split(key, n_codebooks + 1)
+    tables = [jax.random.normal(k, (cfg.vocab_size, cfg.d_model)) * 0.02
+              for k in ks[:n_codebooks]]
+    tokens = jax.random.randint(ks[-1], (batch, seq, n_codebooks), 0,
+                                cfg.vocab_size)
+    emb = sum(jnp.take(t, tokens[..., i], axis=0) for i, t in enumerate(tables))
+    return emb.astype(jnp.bfloat16)
+
+
+def vit_patch_embeddings(key, cfg: ModelConfig, batch: int, seq: int,
+                         patch: int = 14, channels: int = 3) -> jax.Array:
+    """Stand-in for InternViT: projects random 'pixel patches' to d_model
+    (a real frontend runs the ViT tower + pixel-shuffle + MLP projector)."""
+    k_img, k_proj = jax.random.split(key)
+    pixels = jax.random.normal(k_img, (batch, seq, patch * patch * channels))
+    proj = jax.random.normal(k_proj, (patch * patch * channels, cfg.d_model)) * 0.02
+    return (pixels @ proj).astype(jnp.bfloat16)

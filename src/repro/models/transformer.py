@@ -1,0 +1,121 @@
+"""Decoder-only dense transformer (LLaMA family; also the audio/VLM
+backbones, whose modality frontends are stubs supplying embeddings).
+
+Exposes the uniform model API consumed by launch/ and serving/:
+
+    init(key, cfg)                          → params
+    forward(params, cfg, tokens|embeds, …)  → logits
+    train_loss(params, cfg, batch)          → scalar
+    prefill / decode_step                   → serving path (+ KV cache)
+    forward_with_taps                       → calibration taps per module
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.qlinear import QuantPolicy
+from repro.models import common as cm
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    k_emb, k_layers, k_out = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+
+    def init_layer(k):
+        ka, km = jax.random.split(k)
+        return {"attn": cm.init_attn(ka, cfg, dtype),
+                "mlp": cm.init_mlp(km, cfg.d_model, cfg.d_ff, dtype)}
+
+    return {
+        "embed": cm.init_embedding(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": cm.stack_layer_params(layer_keys, init_layer),
+        "final_ln": cm.init_rms(cfg.d_model, dtype),
+        "lm_head": cm.init_linear(k_out, cfg.d_model, cfg.vocab_size, dtype=dtype),
+    }
+
+
+def _block(cfg: ModelConfig, policy: QuantPolicy | None, collect_taps: bool):
+    def block(lp, x, layer_kv_and_len):
+        layer_kv, length = (None, 0) if layer_kv_and_len is None else layer_kv_and_len
+        taps: dict | None = {} if collect_taps else None
+        x, layer_kv = cm.attn_apply(lp["attn"], x, cfg, layer_kv=layer_kv,
+                                    length=length, policy=policy, taps=taps)
+        x = cm.mlp_apply(lp["mlp"], x, cfg, policy, taps=taps)
+        out = taps if collect_taps else layer_kv
+        return x, out
+    return block
+
+
+def _backbone(params, cfg: ModelConfig, h, *, cache=None, length=0,
+              policy=None, collect_taps=False):
+    block = _block(cfg, policy, collect_taps)
+    if cache is None:
+        extras = None
+        def fn(lp, x, _):
+            return block(lp, x, None)
+        x, ys = cm.scan_layers(fn, params["layers"], h, remat=cfg.remat,
+                               extras=None, sp=cfg.seq_parallel,
+                               remat_policy=cfg.remat_policy)
+        new_cache = ys if collect_taps else None
+    else:
+        kv = {"k": cache.k, "v": cache.v}
+        if cache.quantized:
+            kv.update(k_scale=cache.k_scale, v_scale=cache.v_scale)
+        def fn(lp, x, layer_kv):
+            return block(lp, x, (layer_kv, length))
+        x, kv_new = cm.scan_layers(fn, params["layers"], h, remat=False,
+                                   extras=kv)
+        new_cache = cm.KVCache(
+            k=kv_new["k"], v=kv_new["v"],
+            k_scale=kv_new.get("k_scale"), v_scale=kv_new.get("v_scale"),
+            length=cache.length + h.shape[1],
+        )
+    x = cm.rms_norm(x, params.get("final_ln"), cfg.norm_eps)
+    return x, new_cache
+
+
+def forward(params, cfg: ModelConfig, tokens=None, *, embeds=None,
+            policy: QuantPolicy | None = None):
+    h = cm.embed(params["embed"], tokens) if embeds is None else embeds
+    x, _ = _backbone(params, cfg, h, policy=policy)
+    return cm.dense(x, params["lm_head"], policy)
+
+
+def forward_with_taps(params, cfg: ModelConfig, tokens=None, *, embeds=None):
+    h = cm.embed(params["embed"], tokens) if embeds is None else embeds
+    x, taps = _backbone(params, cfg, h, collect_taps=True)
+    return cm.dense(x, params["lm_head"]), taps
+
+
+def train_loss(params, cfg: ModelConfig, batch):
+    logits = forward(params, cfg, batch.get("tokens"),
+                     embeds=batch.get("embeds"))
+    labels, mask = batch["labels"], batch.get("mask")
+    return cm.cross_entropy(logits[:, :-1], labels[:, 1:],
+                            None if mask is None else mask[:, 1:])
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               bits: int | None = None) -> cm.KVCache:
+    return cm.init_kv_cache(cfg, cfg.num_layers, batch, max_len, bits=bits)
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache: cm.KVCache,
+            policy: QuantPolicy | None = None):
+    h = cm.embed(params["embed"], tokens)
+    x, cache = _backbone(params, cfg, h, cache=cache, length=0, policy=policy)
+    logits = cm.dense(x[:, -1:], params["lm_head"], policy)
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache: cm.KVCache,
+                policy: QuantPolicy | None = None):
+    """One token per sequence against the cache."""
+    h = cm.embed(params["embed"], tokens)
+    x, cache = _backbone(params, cfg, h, cache=cache, length=cache.length,
+                         policy=policy)
+    logits = cm.dense(x, params["lm_head"], policy)
+    return logits, cache

@@ -1,0 +1,35 @@
+"""Learning-rate schedules (warmup + cosine / linear decay)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "warmup_linear", "constant"]
+
+
+def constant(peak: float):
+    return lambda step: jnp.asarray(peak, jnp.float32)
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak * (step + 1) / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos).astype(jnp.float32)
+    return fn
+
+
+def warmup_linear(peak: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.0):
+    def fn(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak * (step + 1) / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        lin = peak * (1 - (1 - floor) * prog)
+        return jnp.where(step < warmup_steps, warm, lin).astype(jnp.float32)
+    return fn

@@ -1,0 +1,4 @@
+"""Fault-tolerance runtime: preemption, heartbeats, stragglers, elastic."""
+from repro.runtime.fault_tolerance import (
+    PreemptionHandler, Heartbeat, StragglerPolicy, elastic_mesh,
+)

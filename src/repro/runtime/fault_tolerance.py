@@ -1,0 +1,123 @@
+"""Fault-tolerance runtime: preemption handling, heartbeats, straggler
+policy, and elastic-restart glue.
+
+On a real cluster each host runs this manager next to the training loop:
+
+  * ``PreemptionHandler`` — SIGTERM/SIGINT → set a flag the step loop
+    checks; the loop performs an emergency checkpoint and exits cleanly
+    (TPU preemption notices arrive ~30 s ahead).
+  * ``Heartbeat`` — background thread touching a per-host file (or KV
+    entry); the coordinator declares a host dead after ``timeout`` and
+    triggers an elastic restart with the surviving host set.
+  * ``StragglerPolicy`` — per-step wall-time EWMA; a step exceeding
+    ``factor``× the EWMA flags the host as a straggler.  The documented
+    mitigation at the data level: the coordinator re-dispatches that
+    host's batch shard and excludes the straggler from the next mesh
+    (elastic re-shard via checkpoint restore under the new mesh —
+    repro.checkpoint restores are mesh-agnostic by design).
+  * ``elastic_mesh`` — rebuild the largest (data, model) mesh that fits
+    the surviving device count, preferring to shrink the data axis
+    (model-parallel groups must stay intact).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+import threading
+import time
+
+import jax
+
+__all__ = ["PreemptionHandler", "Heartbeat", "StragglerPolicy", "elastic_mesh"]
+
+
+class PreemptionHandler:
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
+        self._flag = threading.Event()
+        self._prev = {}
+        for s in signals:
+            try:
+                self._prev[s] = signal.signal(s, self._on_signal)
+            except ValueError:  # non-main thread (tests)
+                pass
+
+    def _on_signal(self, signum, frame):
+        self._flag.set()
+
+    @property
+    def should_stop(self) -> bool:
+        return self._flag.is_set()
+
+    def trigger(self):  # for tests / manual drains
+        self._flag.set()
+
+
+class Heartbeat:
+    """Touches ``path`` every ``interval`` s; ``alive(path, timeout)``
+    is the coordinator-side check."""
+
+    def __init__(self, path: str, interval: float = 5.0):
+        self.path = path
+        self.interval = interval
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+
+    def start(self):
+        self._thread.start()
+        return self
+
+    def _run(self):
+        while not self._stop.is_set():
+            with open(self.path, "w") as f:
+                f.write(str(time.time()))
+            self._stop.wait(self.interval)
+
+    def stop(self):
+        self._stop.set()
+        self._thread.join(timeout=2)
+
+    @staticmethod
+    def alive(path: str, timeout: float = 30.0) -> bool:
+        try:
+            with open(path) as f:
+                return time.time() - float(f.read()) < timeout
+        except (OSError, ValueError):
+            return False
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    """EWMA step-time tracker; flags steps slower than factor× the mean."""
+
+    factor: float = 3.0
+    alpha: float = 0.1
+    _ewma: float = 0.0
+    _n: int = 0
+    flagged: int = 0
+
+    def observe(self, step_seconds: float) -> bool:
+        is_straggler = (self._n > 3 and
+                        step_seconds > self.factor * self._ewma)
+        if is_straggler:
+            self.flagged += 1
+        self._ewma = (step_seconds if self._n == 0
+                      else (1 - self.alpha) * self._ewma + self.alpha * step_seconds)
+        self._n += 1
+        return is_straggler
+
+
+def elastic_mesh(n_devices: int, *, model_parallel: int = 16,
+                 axis_names=("data", "model")):
+    """Largest (data, model) mesh from n_devices, keeping the model axis
+    intact (TP groups cannot shrink without resharding weights within a
+    group — data-parallel replicas are the elastic dimension)."""
+    if n_devices < model_parallel:
+        model_parallel = 1 << (n_devices.bit_length() - 1)
+    data = n_devices // model_parallel
+    devices = jax.devices()[: data * model_parallel]
+    import numpy as np
+
+    arr = np.asarray(devices).reshape(data, model_parallel)
+    return jax.sharding.Mesh(arr, axis_names)

@@ -1,0 +1,1 @@
+"""Serving stack: fold+quantize pipeline, KV caches, batched engine."""

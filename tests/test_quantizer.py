@@ -1,0 +1,83 @@
+"""Unit + property tests for the symmetric RTN quantizer (paper Eq. 1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantizer import (
+    QuantConfig, dequantize, fake_quantize, pack_int4, qmax, quantize,
+    unpack_int4,
+)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("gran", ["per_token", "per_channel", "per_tensor"])
+def test_roundtrip_error_bound(bits, gran):
+    """RTN error is bounded by Δ/2 per element (Eq. 1)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 64)) * 3.0
+    cfg = QuantConfig(bits=bits, granularity=gran)
+    q, scale = quantize(x, cfg)
+    err = jnp.abs(x - dequantize(q, scale))
+    assert float(err.max()) <= float(scale.max()) / 2 + 1e-6
+
+
+def test_codes_in_grid():
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 32)) * 100
+    for bits in (4, 8):
+        q, _ = quantize(x, QuantConfig(bits=bits))
+        lim = qmax(bits)
+        assert int(q.min()) >= -lim and int(q.max()) <= lim
+
+
+def test_absmax_is_exact():
+    """max|X| per token maps exactly to ±levels (no clipping, §III-B)."""
+    x = jnp.array([[1.0, -7.0, 3.0], [0.5, 0.25, -0.125]])
+    q, scale = quantize(x, QuantConfig(bits=4, granularity="per_token"))
+    np.testing.assert_array_equal(np.abs(np.asarray(q)).max(axis=1), [7, 7])
+
+
+def test_zero_row_safe():
+    x = jnp.zeros((4, 16))
+    q, scale = quantize(x, QuantConfig(bits=4))
+    assert np.isfinite(np.asarray(scale)).all()
+    assert (np.asarray(q) == 0).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 60), st.integers(1, 40), st.sampled_from([4, 8]))
+def test_property_quant_error_below_uniform_bound(rows, cols, bits):
+    """Quantization noise variance ≤ Δ²/12·(1+slack) (paper §II-B)."""
+    key = jax.random.PRNGKey(rows * 100 + cols)
+    x = jax.random.normal(key, (rows, cols))
+    cfg = QuantConfig(bits=bits, granularity="per_token")
+    q, scale = quantize(x, cfg)
+    err = np.asarray(x - dequantize(q, scale))
+    step = np.asarray(scale)
+    assert (np.abs(err) <= step / 2 + 1e-7).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 64))
+def test_property_pack_unpack_roundtrip(rows, half_cols):
+    key = jax.random.PRNGKey(rows * 977 + half_cols)
+    q = jax.random.randint(key, (rows, 2 * half_cols), -8, 8, jnp.int8)
+    np.testing.assert_array_equal(np.asarray(unpack_int4(pack_int4(q))),
+                                  np.asarray(q))
+
+
+def test_fake_quantize_idempotent_on_grid():
+    """Values already on the grid survive fake-quant exactly."""
+    cfg = QuantConfig(bits=4, granularity="per_tensor")
+    x = jnp.arange(-7, 8, dtype=jnp.float32)[None] / 7.0
+    y = fake_quantize(x, cfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-6)
+
+
+def test_stochastic_rounding_unbiased():
+    cfg = QuantConfig(bits=8, granularity="per_tensor", stochastic=True)
+    x = jnp.full((200, 200), 0.3)
+    keys = jax.random.split(jax.random.PRNGKey(3), 8)
+    means = [float(fake_quantize(x, cfg, key=k).mean()) for k in keys]
+    assert abs(np.mean(means) - 0.3) < 2e-3

@@ -1,0 +1,151 @@
+"""Sharding-rule tests: divisibility fallbacks, param/cache specs,
+strategies, and the flash/naive + SP model invariants."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import get_config
+from repro.launch.mesh import make_test_mesh
+from repro.launch.sharding import (
+    axis_if, batch_spec, cache_specs, param_specs, set_strategy,
+)
+from repro.models.api import get_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _reset_strategy():
+    set_strategy("2d")
+    yield
+    set_strategy("2d")
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def test_axis_if_divisibility():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    assert axis_if(mesh, "model", 32) == "model"
+    assert axis_if(mesh, "model", 20) is None          # 20 % 16 != 0
+    assert axis_if(mesh, ("data", "model"), 256) == ("data", "model")
+    assert axis_if(mesh, ("data", "model"), 64) is None
+    assert axis_if(mesh, "pod", 8) is None             # axis absent
+
+
+def test_batch_spec_fallbacks():
+    mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+    assert batch_spec(mesh, 256) == P(("pod", "data"), None)
+    assert batch_spec(mesh, 16) == P("data", None)     # pod×data=32 ∤ 16
+    assert batch_spec(mesh, 1) == P(None, None)        # replicate
+
+
+def test_param_specs_cover_all_leaves():
+    """Every arch's param tree gets a spec whose sharded dims divide."""
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    for arch in ("stablelm_3b", "arctic_480b", "deepseek_v2_lite_16b",
+                 "mamba2_780m", "zamba2_12b", "llama3_405b"):
+        cfg = get_config(arch)
+        model = get_model(cfg)
+        shapes = jax.eval_shape(lambda k, c=cfg, m=model: m.init(k, c),
+                                jax.random.PRNGKey(0))
+        specs = param_specs(shapes, cfg, mesh)
+        for (path, leaf), (_, spec) in zip(
+                jax.tree_util.tree_flatten_with_path(shapes)[0],
+                jax.tree_util.tree_flatten_with_path(
+                    specs, is_leaf=lambda x: isinstance(x, P))[0]):
+            for dim, ax in zip(leaf.shape, tuple(spec)):
+                if ax is None:
+                    continue
+                size = np.prod([mesh.shape[a] for a in
+                                ((ax,) if isinstance(ax, str) else ax)])
+                assert dim % size == 0, (arch, path, leaf.shape, spec)
+
+
+def test_cache_specs_sequence_sharding_for_few_heads():
+    """kv_heads < model ⇒ cache sequence is sharded over model (§Perf C)."""
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    cfg = get_config("llama3_405b")  # kv=8 < 16
+    model = get_model(cfg)
+    cache = jax.eval_shape(lambda: model.make_cache(cfg, 128, 1024, bits=8))
+    specs = cache_specs(cfg, mesh, cache)
+    k_spec = specs.k
+    assert k_spec[2] == "model"      # S axis
+    assert k_spec[3] is None         # heads unshardable
+
+
+def test_cache_specs_head_sharding_when_divisible():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    cfg = get_config("stablelm_3b")  # kv=32 ≥ 16
+    model = get_model(cfg)
+    cache = jax.eval_shape(lambda: model.make_cache(cfg, 128, 1024))
+    specs = cache_specs(cfg, mesh, cache)
+    assert specs.k[3] == "model"
+
+
+def test_fsdp_strategy_shards_over_all_axes():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    set_strategy("fsdp")
+    cfg = get_config("stablelm_3b")
+    model = get_model(cfg)
+    shapes = jax.eval_shape(lambda k: model.init(k, cfg),
+                            jax.random.PRNGKey(0))
+    specs = param_specs(shapes, cfg, mesh)
+    wq = specs["layers"]["attn"]["wq"]["w"]
+    assert wq[1] == ("data", "model")  # c_in over all 256 devices
+    assert batch_spec(mesh, 256) == P(("data", "model"), None)
+
+
+def test_quantized_param_specs():
+    """Quantized trees (QuantizedWeight leaves) get coherent specs."""
+    from repro.core.qlinear import QuantPolicy
+    from repro.core.transforms import TransformPlan
+    from repro.serving.fold import fold_quantize
+
+    mesh = _FakeMesh({"data": 2, "model": 2})
+    cfg = get_config("stablelm_3b").reduced()
+    model = get_model(cfg)
+    shapes = jax.eval_shape(lambda k: model.init(k, cfg),
+                            jax.random.PRNGKey(0))
+    policy = QuantPolicy(use_kernels="never")
+    qshapes = jax.eval_shape(
+        lambda p: fold_quantize(p, cfg, policy=policy,
+                                plan=TransformPlan(attn_in="rotate",
+                                                   attn_out="rotate",
+                                                   mlp_in="rotate",
+                                                   mlp_out="rotate")),
+        shapes)
+    specs = param_specs(qshapes, cfg, mesh)
+    for (path, leaf), (_, spec) in zip(
+            jax.tree_util.tree_flatten_with_path(qshapes)[0],
+            jax.tree_util.tree_flatten_with_path(
+                specs, is_leaf=lambda x: isinstance(x, P))[0]):
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax is None:
+                continue
+            size = np.prod([mesh.shape[a] for a in
+                            ((ax,) if isinstance(ax, str) else ax)])
+            assert dim % size == 0, (path, leaf.shape, spec)
+
+
+def test_sp_and_strategy_model_forward_unchanged(test_mesh):
+    """Perf options must not change numerics: SP + flash + bf16io forward
+    matches the baseline on a reduced model."""
+    cfg = get_config("stablelm_3b").reduced()
+    cfg_opt = dataclasses.replace(cfg, attn_impl="flash", attn_bf16_io=True,
+                                  seq_parallel=True,
+                                  remat_policy="dots_no_batch")
+    model = get_model(cfg)
+    params = model.init(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    l0 = np.asarray(model.forward(params, cfg, toks), np.float32)
+    l1 = np.asarray(model.forward(params, cfg_opt, toks), np.float32)
+    assert np.abs(l0 - l1).max() / (np.abs(l0).max() + 1e-9) < 0.03

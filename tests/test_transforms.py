@@ -1,0 +1,146 @@
+"""Equivalent-transformation tests (paper Eq. 3-4, §IV) incl. the paper's
+central quantitative claims as properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.difficulty import (
+    layerwise_error, layerwise_error_transformed, quantization_difficulty,
+)
+from repro.core.outliers import OutlierSpec, massive_outlier_token, synth_activations
+from repro.core.quantizer import QuantConfig
+from repro.core.transforms import (
+    TRANSFORMS, TransformPlan, get_transform, rotate, smooth, smooth_rotate,
+    smoothing_scales,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("kind", list(TRANSFORMS))
+@pytest.mark.parametrize("d", [128, 1536, 1408])
+def test_numerical_equivalence(kind, d):
+    """Eq. (3): x̂ŵ == xw for every transform, incl. Paley dims."""
+    x = jax.random.normal(KEY, (16, d))
+    w = jax.random.normal(jax.random.PRNGKey(1), (d, 32)) * 0.1
+    xh, wh = TRANSFORMS[kind](x, w)
+    ref = np.asarray(x @ w)
+    got = np.asarray(xh @ wh)
+    np.testing.assert_allclose(got, ref, atol=5e-3 * max(1, np.abs(ref).max()))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from([64, 128, 256]), st.floats(0.2, 0.8),
+       st.integers(0, 1000))
+def test_property_smooth_equivalence_any_alpha(d, alpha, seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (8, d)) * 5
+    w = jax.random.normal(jax.random.fold_in(key, 1), (d, 16)) * 0.05
+    xh, wh = smooth(x, w, alpha)
+    np.testing.assert_allclose(np.asarray(xh @ wh), np.asarray(x @ w),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_smoothing_scales_formula():
+    """Eq. (4) with α = 0.5: max|X̂_j| == max|Ŵ_j| == √(max|X_j|·max|W_j|)."""
+    x = jax.random.normal(KEY, (32, 64)) * jnp.linspace(0.1, 30, 64)
+    w = jax.random.normal(jax.random.PRNGKey(2), (64, 48)) * 0.3
+    xh, wh = smooth(x, w, 0.5)
+    ax = np.abs(np.asarray(xh)).max(0)
+    aw = np.abs(np.asarray(wh)).max(1)
+    expected = np.sqrt(np.abs(np.asarray(x)).max(0)
+                       * np.abs(np.asarray(w)).max(1))
+    np.testing.assert_allclose(ax, expected, rtol=1e-4)
+    np.testing.assert_allclose(aw, expected, rtol=1e-4)
+
+
+def test_smoothing_flattens_systematic_outliers():
+    spec = OutlierSpec(n_tokens=64, d=256, n_systematic=5)
+    x = synth_activations(KEY, spec)
+    w = jax.random.normal(jax.random.PRNGKey(3), (256, 64)) * 0.05
+    xh, _ = smooth(x, w)
+    assert float(quantization_difficulty(xh)) < float(quantization_difficulty(x))
+
+
+def test_rotation_reduces_error_on_systematic_outliers():
+    """§IV-D: rotation beats identity (and usually smoothing) absent
+    massive outliers."""
+    spec = OutlierSpec(n_tokens=64, d=256, n_systematic=5)
+    x = synth_activations(KEY, spec)
+    w = jax.random.normal(jax.random.PRNGKey(4), (256, 64)) * 0.05
+    e_none = float(layerwise_error(x, w))
+    e_rot = float(layerwise_error_transformed(x, w, rotate))
+    assert e_rot < e_none
+
+
+def test_rotation_worse_with_massive_outliers():
+    """The paper's counterintuitive finding (§IV-D): with token-level
+    massive outliers, rotation can exceed the UNTRANSFORMED error —
+    while smooth-rotation stays below rotation."""
+    d = 256
+    spec = OutlierSpec(n_tokens=64, d=d, base_std=0.25, n_systematic=0,
+                       n_massive_tokens=2, n_massive_dims=2,
+                       massive_value=2000.0)
+    x = synth_activations(KEY, spec)
+    w = jax.random.normal(jax.random.PRNGKey(5), (d, 64)) * 0.05
+    e_none = float(layerwise_error(x, w))
+    e_rot = float(layerwise_error_transformed(x, w, rotate))
+    e_sr = float(layerwise_error_transformed(x, w, get_transform("smooth_rotate")))
+    assert e_rot > e_none, (e_rot, e_none)
+    assert e_sr < e_rot, (e_sr, e_rot)
+
+
+def test_eq7_centroid_count():
+    """Eq. (7): rotated massive-outlier token clusters at 2^{|O|-1}
+    distinct |value| centroids (signs fold pairs together)."""
+    d = 512
+    for n_out in (1, 2, 3):
+        dims = list(range(0, 7 * n_out, 7))
+        vals = [900.0 + 137 * i for i in range(n_out)]
+        t = massive_outlier_token(KEY, d, dims, vals, sigma=0.0)
+        y = np.asarray(jax.device_get(
+            jnp.matmul(t[None], jnp.asarray(
+                __import__("repro.core.hadamard", fromlist=["hadamard_matrix"]
+                           ).hadamard_matrix(d)))))[0]
+        centroids = np.unique(np.round(np.abs(y), 3))
+        assert len(centroids) == 2 ** (n_out - 1), (n_out, centroids)
+
+
+def test_eq8_max_value():
+    """Eq. (8): max|t̂| = Σ|o_i|/√d + |ε| (σ=0 ⇒ exact)."""
+    d = 1024
+    dims, vals = [3, 100, 511], [1000.0, -800.0, 1200.0]
+    t = massive_outlier_token(KEY, d, dims, vals, sigma=0.0)
+    from repro.core.hadamard import apply_hadamard
+
+    y = np.asarray(apply_hadamard(t[None], d))[0]
+    expected = sum(abs(v) for v in vals) / np.sqrt(d)
+    np.testing.assert_allclose(np.abs(y).max(), expected, rtol=1e-4)
+
+
+def test_eq9_smooth_rotate_max():
+    """Eq. (9): after smooth(α=.5)+rotate, max|t̃| ≈ Σ√(|o_i|·max|W_i|/d)
+    — and is far below rotation-only's Eq. (8) max."""
+    d = 1024
+    dims, vals = [10, 200], [1500.0, 2000.0]
+    t = massive_outlier_token(KEY, d, dims, vals, sigma=0.05)
+    x = jnp.tile(t[None], (8, 1))  # outlier token present in the batch
+    w = jnp.abs(jax.random.normal(jax.random.PRNGKey(6), (d, 64))) * 0.05 + 0.01
+    s = smoothing_scales(x, w, 0.5)
+    from repro.core.hadamard import apply_hadamard
+
+    t_sr = np.asarray(apply_hadamard((t / s)[None], d))[0]
+    wmax = np.abs(np.asarray(w)).max(1)
+    expected = sum(np.sqrt(abs(v) * wmax[j] / d) for j, v in zip(dims, vals))
+    assert abs(np.abs(t_sr).max() - expected) / expected < 0.35
+    rot_only = sum(abs(v) for v in vals) / np.sqrt(d)
+    assert np.abs(t_sr).max() < rot_only
+
+
+def test_transform_plan_default_follows_paper():
+    plan = TransformPlan()
+    assert plan.kind_for("down_proj") == "smooth_rotate"  # §V recommendation
+    assert plan.kind_for("k_proj") == "rotate"
