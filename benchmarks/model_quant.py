@@ -15,6 +15,7 @@ from repro.core.qlinear import QuantPolicy
 from repro.core.transforms import TransformPlan
 from repro.models.api import get_model
 from repro.serving.fold import collect_calibration, fold_quantize
+from repro.launch import compat
 
 PLANS = {
     "none": TransformPlan(attn_in="none", attn_out="none", mlp_in="none",
@@ -27,24 +28,29 @@ PLANS = {
 ARCHS = ("stablelm_3b", "mamba2_780m", "deepseek_v2_lite_16b")
 
 
-def run() -> dict:
+def run(auto_plan: bool = False) -> dict:
     key = jax.random.PRNGKey(0)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     out = {}
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         for arch in ARCHS:
             cfg = get_config(arch).reduced()
             model = get_model(cfg)
             params = model.init(key, cfg)
             toks = jax.random.randint(key, (4, 32), 0, cfg.vocab_size)
             stats = collect_calibration(model, params, cfg,
-                                        [{"tokens": toks}])
+                                        [{"tokens": toks}],
+                                        keep_samples=128 if auto_plan else 0)
             of = model.forward(params, cfg, toks)
             lf = np.asarray(of[0] if isinstance(of, tuple) else of,
                             np.float32)
+            plans = dict(PLANS)
+            if auto_plan:
+                from repro.autoplan import search_plan
+
+                plans["auto"] = search_plan(params, cfg, stats)[0]
             t_us = 0.0
-            for pname, plan in PLANS.items():
+            for pname, plan in plans.items():
                 policy = QuantPolicy(weight_bits=4, act_bits=4,
                                      use_kernels="never")
                 q = fold_quantize(params, cfg, policy=policy, plan=plan,
@@ -67,5 +73,16 @@ def run() -> dict:
     return {f"{a}_{p}": v for (a, p), v in out.items()}
 
 
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--auto-plan", action="store_true",
+                    help="additionally score a searched per-layer plan "
+                         "(repro.autoplan) against the fixed plans")
+    args = ap.parse_args(argv)
+    run(auto_plan=args.auto_plan)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -1,5 +1,6 @@
-"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
-dry-run JSON artifacts (experiments/dryrun/<mesh>/<arch>__<shape>.json).
+"""Generate the EXPERIMENTS.md §Dry-run, §Roofline and §Autoplan tables
+from the JSON artifacts (experiments/dryrun/<mesh>/<arch>__<shape>.json,
+experiments/autoplan/<arch>_telemetry.json).
 
 Usage: PYTHONPATH=src python -m benchmarks.report [--out EXPERIMENTS_tables.md]
 """
@@ -12,6 +13,8 @@ import json
 import os
 
 ROOT = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+AUTOPLAN_ROOT = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                             "autoplan")
 
 
 def load(mesh: str) -> list[dict]:
@@ -54,6 +57,34 @@ def roofline_table(rows: list[dict]) -> str:
     return "\n".join(out)
 
 
+def load_autoplan() -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(AUTOPLAN_ROOT,
+                                              "*_telemetry.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def autoplan_table(rows: list[dict]) -> str:
+    """Per (arch, module): mean pre/post difficulty + summed plan errors
+    from the autoplan telemetry artifacts (repro.autoplan.telemetry)."""
+    out = ["| arch | module | difficulty pre | post | reduction | "
+           "err auto | err fixed §V |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        ea, ef = r.get("error_auto", {}), r.get("error_fixed", {})
+        for m, t in sorted(r["modules"].items()):
+            pre = sum(t["difficulty_pre"]) / max(len(t["difficulty_pre"]), 1)
+            post = sum(t["difficulty_post"]) / max(len(t["difficulty_post"]), 1)
+            red = 0.0 if pre == 0 else 100.0 * (1 - post / pre)
+            sa = sum(ea[m]) if m in ea else float("nan")
+            sf = sum(ef[m]) if m in ef else float("nan")
+            out.append(f"| {r['arch']} | {m} | {pre:.4f} | {post:.4f} | "
+                       f"{red:+.1f}% | {sa:.4g} | {sf:.4g} |")
+    return "\n".join(out)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="")
@@ -67,6 +98,10 @@ def main(argv=None):
         parts.append(dryrun_table(rows))
         parts.append(f"\n### Roofline — mesh {mesh}\n")
         parts.append(roofline_table(rows))
+    ap_rows = load_autoplan()
+    if ap_rows:
+        parts.append(f"\n### Autoplan telemetry ({len(ap_rows)} archs)\n")
+        parts.append(autoplan_table(ap_rows))
     text = "\n".join(parts)
     if args.out:
         with open(args.out, "w") as f:

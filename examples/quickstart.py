@@ -20,13 +20,13 @@ from repro.launch.train import make_train_step
 from repro.models.api import get_model
 from repro.optim import adamw
 from repro.serving.fold import collect_calibration, fold_quantize
+from repro.launch import compat
 
 
 def main():
     key = jax.random.PRNGKey(0)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    with jax.set_mesh(mesh):
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    with compat.set_mesh(mesh):
         # -- 1. a small llama-family model, briefly trained ---------------
         cfg = get_config("stablelm-3b").reduced(num_layers=2, d_model=64,
                                                 vocab_size=64)

@@ -18,13 +18,13 @@ from repro.models.api import get_model
 from repro.optim import adamw
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.fold import collect_calibration, fold_quantize
+from repro.launch import compat
 
 
 def main():
     key = jax.random.PRNGKey(0)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    with jax.set_mesh(mesh):
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    with compat.set_mesh(mesh):
         cfg = get_config("qwen1.5-4b").reduced(num_layers=2, d_model=128,
                                                vocab_size=256)
         model = get_model(cfg)

@@ -1,0 +1,27 @@
+"""Difficulty-guided auto-planning: per-layer transform & α search.
+
+Turns the paper's measurement contribution (quantization difficulty
+predicts layer-wise error, §IV-B) into the deployment brain: a searched
+:class:`LayerwisePlan` that assigns each (layer, module) its own
+equivalent transformation and smoothing strength, consumable by
+``serving.fold.fold_quantize`` alongside the legacy global plan.
+
+CLI: ``python -m repro.autoplan --arch stablelm-3b --reduced``.
+"""
+
+from repro.autoplan.plan import (
+    LayerwisePlan, ModuleChoice, MODULE_ROLES, PLANNABLE_MODULES,
+)
+from repro.autoplan.search import (
+    SearchConfig, candidate_grid, module_weights, plan_errors, search_plan,
+)
+from repro.autoplan.telemetry import (
+    ModuleTelemetry, collect_telemetry, summarize, write_telemetry,
+)
+
+__all__ = [
+    "LayerwisePlan", "ModuleChoice", "MODULE_ROLES", "PLANNABLE_MODULES",
+    "SearchConfig", "candidate_grid", "module_weights", "plan_errors",
+    "search_plan", "ModuleTelemetry", "collect_telemetry", "summarize",
+    "write_telemetry",
+]

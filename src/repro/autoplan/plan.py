@@ -1,0 +1,200 @@
+"""Per-layer, per-module transform plans (the autoplan subsystem's IR).
+
+The paper's §IV-C/§IV-E finding is that the best equivalent
+transformation — and the best smoothing strength α — varies by module
+class AND by layer (massive-outlier layers want SmoothRotation, the rest
+plain rotation; out_proj ≈ 0.7 / gate_proj ≈ 0.65 α sweet spots).  The
+repo's original :class:`~repro.core.transforms.TransformPlan` is one
+global per-module-class policy; a :class:`LayerwisePlan` refines it to a
+(layer × module) grid while staying losslessly convertible back to the
+global plan when uniform.
+
+JSON schema (``LayerwisePlan.to_json``)::
+
+    {
+      "schema": 1,
+      "arch": "stablelm-3b-reduced",         # informational
+      "num_layers": 2,
+      "base": {"attn_in": "rotate", ..., "alpha": 0.5},
+      "modules": {
+        "down_proj": [
+          {"kind": "smooth_rotate", "alpha": 0.7},   # layer 0
+          {"kind": "rotate", "alpha": 0.5}           # layer 1
+        ],
+        ...
+      }
+    }
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Mapping, Sequence
+
+from repro.core.transforms import TransformKind, TransformPlan
+
+__all__ = ["ModuleChoice", "LayerwisePlan", "MODULE_ROLES", "PLANNABLE_MODULES"]
+
+SCHEMA_VERSION = 1
+
+# module name → TransformPlan role (mirrors TransformPlan.kind_for)
+MODULE_ROLES: dict[str, str] = {
+    "q_proj": "attn_in", "k_proj": "attn_in", "v_proj": "attn_in",
+    "kv_up": "attn_in",
+    "o_proj": "attn_out", "out_proj": "attn_out",
+    "gate_proj": "mlp_in", "up_proj": "mlp_in", "in_proj": "mlp_in",
+    "down_proj": "mlp_out",
+}
+
+# canonical tap/module names the search plans over (one per calibration tap)
+PLANNABLE_MODULES = ("k_proj", "o_proj", "gate_proj", "down_proj",
+                     "in_proj", "out_proj", "kv_up")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModuleChoice:
+    """One (transform kind, α) cell of the plan grid."""
+
+    kind: TransformKind
+    alpha: float = 0.5
+
+    def to_json(self) -> dict:
+        return {"kind": self.kind, "alpha": self.alpha}
+
+    @classmethod
+    def from_json(cls, obj: Mapping) -> "ModuleChoice":
+        return cls(kind=obj["kind"], alpha=float(obj.get("alpha", 0.5)))
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerwisePlan:
+    """layer × module → (TransformKind, α), with a global fallback.
+
+    ``modules`` maps a module/tap name to a per-layer tuple of choices
+    (length ``num_layers``); any module absent from the mapping falls
+    back to ``base`` (the repo's global :class:`TransformPlan`), which
+    also covers weight stacks whose layer count differs from the planned
+    stack (e.g. MoE leading dense layers, hybrid shared blocks).
+    """
+
+    num_layers: int
+    modules: Mapping[str, tuple[ModuleChoice, ...]] = dataclasses.field(
+        default_factory=dict)
+    base: TransformPlan = TransformPlan()
+    arch: str = ""
+
+    def __post_init__(self):
+        frozen = {m: tuple(cs) for m, cs in dict(self.modules).items()}
+        for m, cs in frozen.items():
+            if len(cs) != self.num_layers:
+                raise ValueError(
+                    f"module '{m}' has {len(cs)} choices for "
+                    f"{self.num_layers} layers")
+        object.__setattr__(self, "modules", frozen)
+
+    # -- lookups ------------------------------------------------------------
+
+    def choice_for(self, module: str, layer: int) -> ModuleChoice:
+        per_layer = self.modules.get(module)
+        if per_layer is None:
+            return ModuleChoice(self.base.kind_for(module), self.base.alpha)
+        return per_layer[layer]
+
+    def choices_for(self, module: str) -> tuple[ModuleChoice, ...]:
+        """Per-layer choices for ``module`` (base-filled when unplanned)."""
+        per_layer = self.modules.get(module)
+        if per_layer is None:
+            c = ModuleChoice(self.base.kind_for(module), self.base.alpha)
+            return (c,) * self.num_layers
+        return per_layer
+
+    # -- global-plan interop -------------------------------------------------
+
+    def is_uniform(self) -> bool:
+        """True when every planned module uses one choice for all layers."""
+        return all(len(set(cs)) <= 1 for cs in self.modules.values())
+
+    def to_global(self) -> TransformPlan:
+        """Collapse to the legacy global plan (requires uniformity).
+
+        Per-role kinds come from the role's representative module; a
+        single α is required across smoothed modules (the global plan has
+        one α field).
+        """
+        if not self.is_uniform():
+            raise ValueError("plan is layer-dependent; no global equivalent")
+        roles: dict[str, TransformKind] = {}
+        alphas = set()
+        for module, choices in self.modules.items():
+            c = choices[0]
+            roles[MODULE_ROLES.get(module, "attn_in")] = c.kind
+            if c.kind in ("smooth", "smooth_rotate"):
+                alphas.add(round(c.alpha, 6))
+        if len(alphas) > 1:
+            raise ValueError(f"multiple α values {sorted(alphas)}; the global "
+                             "TransformPlan holds a single α")
+        return TransformPlan(
+            attn_in=roles.get("attn_in", self.base.attn_in),
+            attn_out=roles.get("attn_out", self.base.attn_out),
+            mlp_in=roles.get("mlp_in", self.base.mlp_in),
+            mlp_out=roles.get("mlp_out", self.base.mlp_out),
+            alpha=alphas.pop() if alphas else self.base.alpha,
+        )
+
+    @classmethod
+    def from_global(cls, plan: TransformPlan, num_layers: int,
+                    modules: Sequence[str] = PLANNABLE_MODULES,
+                    arch: str = "") -> "LayerwisePlan":
+        """Broadcast a global plan onto the (layer × module) grid."""
+        grid = {m: tuple(ModuleChoice(plan.kind_for(m), plan.alpha)
+                         for _ in range(num_layers)) for m in modules}
+        return cls(num_layers=num_layers, modules=grid, base=plan, arch=arch)
+
+    # -- (de)serialization ---------------------------------------------------
+
+    def to_json(self) -> dict:
+        return {
+            "schema": SCHEMA_VERSION,
+            "arch": self.arch,
+            "num_layers": self.num_layers,
+            "base": {
+                "attn_in": self.base.attn_in, "attn_out": self.base.attn_out,
+                "mlp_in": self.base.mlp_in, "mlp_out": self.base.mlp_out,
+                "alpha": self.base.alpha,
+            },
+            "modules": {m: [c.to_json() for c in cs]
+                        for m, cs in sorted(self.modules.items())},
+        }
+
+    @classmethod
+    def from_json(cls, obj: Mapping) -> "LayerwisePlan":
+        if obj.get("schema") != SCHEMA_VERSION:
+            raise ValueError(f"unsupported plan schema {obj.get('schema')!r}")
+        base = TransformPlan(**obj.get("base", {}))
+        modules = {m: tuple(ModuleChoice.from_json(c) for c in cs)
+                   for m, cs in obj.get("modules", {}).items()}
+        return cls(num_layers=int(obj["num_layers"]), modules=modules,
+                   base=base, arch=obj.get("arch", ""))
+
+    def save(self, path: str):
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=2, sort_keys=True)
+
+    @classmethod
+    def load(cls, path: str) -> "LayerwisePlan":
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+    # -- display -------------------------------------------------------------
+
+    def summary(self) -> str:
+        lines = [f"LayerwisePlan(arch={self.arch or '?'}, "
+                 f"layers={self.num_layers})"]
+        for m, cs in sorted(self.modules.items()):
+            cells = " ".join(
+                f"{c.kind}" + (f"@{c.alpha:g}" if c.kind in
+                               ("smooth", "smooth_rotate") else "")
+                for c in cs)
+            lines.append(f"  {m:10s} {cells}")
+        return "\n".join(lines)

@@ -1,0 +1,310 @@
+"""Difficulty-guided per-layer transform & α search (autoplan's brain).
+
+For every planned module the search evaluates a candidate grid
+
+    {none, rotate} ∪ {smooth(α), smooth_rotate(α) : α ∈ alpha_grid}
+
+on the calibration activations retained per layer
+(:class:`~repro.core.calibration.CalibStats.act_samples`):
+
+1. **Pre-filter** — the paper's quantization-difficulty metric (std of
+   channel magnitudes, §II-B) of the *transformed* activations is cheap
+   (no matmuls, no fake-quant) and correlates r > 0.97 with layer-wise
+   error (§IV-B), so per layer only the ``top_k`` lowest-difficulty
+   candidates survive.  The base plan's own choice is force-included so
+   the searched plan can never score worse than the fixed §V plan.
+2. **Score** — survivors are scored with the exact Eq. (2) layer-wise
+   error ``||XW − Q(X̂)Q(Ŵ)||_F²`` against the UNtransformed product,
+   vmapped/jitted over the layer axis (one compiled program per
+   transform kind, layers batched).
+
+Smoothing scales use the *calibrated* absmax (Eq. 4 offline variant) so
+search-time transforms match exactly what ``fold_quantize`` will fold.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.autoplan.plan import (
+    LayerwisePlan, ModuleChoice, PLANNABLE_MODULES,
+)
+from repro.configs.base import ModelConfig
+from repro.core.calibration import CalibStats, smoothing_scales_from_stats
+from repro.core.difficulty import (
+    layerwise_error_transformed, quantization_difficulty,
+)
+from repro.core.hadamard import apply_hadamard
+from repro.core.quantizer import QuantConfig
+from repro.core.transforms import TransformPlan
+
+__all__ = ["SearchConfig", "candidate_grid", "module_weights",
+           "search_plan", "plan_errors", "transform_xw"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    """Knobs of the per-layer candidate search."""
+
+    alpha_grid: tuple[float, ...] = (0.5, 0.65, 0.7, 0.8)
+    top_k: int = 3                 # difficulty-prefilter survivors per layer
+    weight_bits: int = 4
+    act_bits: int = 4
+
+    @property
+    def act_cfg(self) -> QuantConfig:
+        return QuantConfig(bits=self.act_bits, granularity="per_token")
+
+    @property
+    def w_cfg(self) -> QuantConfig:
+        return QuantConfig(bits=self.weight_bits, granularity="per_channel")
+
+
+def candidate_grid(cfg: SearchConfig) -> tuple[ModuleChoice, ...]:
+    out = [ModuleChoice("none"), ModuleChoice("rotate")]
+    for a in cfg.alpha_grid:
+        out.append(ModuleChoice("smooth", a))
+    for a in cfg.alpha_grid:
+        out.append(ModuleChoice("smooth_rotate", a))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# module → representative weight stacks
+# ---------------------------------------------------------------------------
+
+
+def _w(leaf) -> jax.Array:
+    return leaf["w"] if isinstance(leaf, dict) else leaf
+
+
+def _experts_as_linear(w: jax.Array) -> jax.Array:
+    """(L, E, c_in, f) expert stack → (L, c_in, E·f): the block input sees
+    the union of expert columns (routing picks a subset; scoring on the
+    union is the calibration-free upper bound)."""
+    L, E, c_in, f = w.shape
+    return jnp.swapaxes(w, 1, 2).reshape(L, c_in, E * f)
+
+
+def module_weights(params, cfg: ModelConfig) -> dict[str, jax.Array]:
+    """Stacked (L, c_in, c_out) weight per planned module/tap name.
+
+    Sibling linears sharing one input tap (q/k/v; gate/up) are
+    concatenated along c_out so the search scores their joint error —
+    the folded transform is shared across them anyway.
+    """
+    out: dict[str, jax.Array] = {}
+    if cfg.family in ("dense", "audio", "vlm"):
+        attn, mlp = params["layers"]["attn"], params["layers"]["mlp"]
+        out["k_proj"] = jnp.concatenate(
+            [_w(attn["wq"]), _w(attn["wk"]), _w(attn["wv"])], axis=-1)
+        out["o_proj"] = _w(attn["wo"])
+        out["gate_proj"] = jnp.concatenate(
+            [_w(mlp["wg"]), _w(mlp["wu"])], axis=-1)
+        out["down_proj"] = _w(mlp["wd"])
+    elif cfg.family == "moe":
+        attn, moe = params["moe_layers"]["attn"], params["moe_layers"]["moe"]
+        if cfg.kv_lora_rank:
+            out["k_proj"] = jnp.concatenate(
+                [_w(attn["wq"]), _w(attn["wdkv"])], axis=-1)
+            out["kv_up"] = _w(attn["wukv"])
+        else:
+            out["k_proj"] = jnp.concatenate(
+                [_w(attn["wq"]), _w(attn["wk"]), _w(attn["wv"])], axis=-1)
+        out["o_proj"] = _w(attn["wo"])
+        gate = [_experts_as_linear(_w(moe["wg"])),
+                _experts_as_linear(_w(moe["wu"]))]
+        if "shared" in moe:
+            gate += [_w(moe["shared"]["wg"]), _w(moe["shared"]["wu"])]
+        if "dense" in moe:
+            gate += [_w(moe["dense"]["wg"]), _w(moe["dense"]["wu"])]
+        out["gate_proj"] = jnp.concatenate(gate, axis=-1)
+    elif cfg.family in ("ssm", "hybrid"):
+        layers = params["layers"]
+        out["in_proj"] = _w(layers["in_proj"])
+        out["out_proj"] = _w(layers["out_proj"])
+    else:
+        raise ValueError(cfg.family)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-candidate transform + metrics (vmapped over the layer axis)
+# ---------------------------------------------------------------------------
+
+
+def transform_xw(x: jax.Array, w: jax.Array, am: jax.Array,
+                 kind: str, alpha: float):
+    """(x̂, ŵ) for one layer per the candidate; scales from calibrated
+    absmax (the offline Eq. 4 fold_quantize applies)."""
+    x = x.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    if kind in ("smooth", "smooth_rotate"):
+        s = smoothing_scales_from_stats(am, w, alpha)
+        x = x / s
+        w = w * s[:, None]
+    if kind in ("rotate", "smooth_rotate"):
+        x = apply_hadamard(x)
+        w = apply_hadamard(w, axis=0)
+    return x, w
+
+
+def _difficulty_one(x, w, am, *, kind: str, alpha: float):
+    xh, _ = transform_xw(x, w, am, kind, alpha)
+    return quantization_difficulty(xh)
+
+
+def _error_one(x, w, am, *, kind: str, alpha: float,
+               act_cfg: QuantConfig, w_cfg: QuantConfig):
+    return layerwise_error_transformed(
+        x, w, lambda xx, ww: transform_xw(xx, ww, am, kind, alpha),
+        act_cfg, w_cfg)
+
+
+# alpha stays TRACED (it only feeds smoothing arithmetic): one compiled
+# program per transform kind, reused across the whole α grid
+
+
+@functools.partial(jax.jit, static_argnames=("kind",))
+def _difficulty_layers(x, w, am, alpha, *, kind: str):
+    return jax.vmap(lambda xl, wl, al: _difficulty_one(
+        xl, wl, al, kind=kind, alpha=alpha))(x, w, am)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "act_cfg", "w_cfg"))
+def _error_layers(x, w, am, alpha, *, kind: str,
+                  act_cfg: QuantConfig, w_cfg: QuantConfig):
+    return jax.vmap(lambda xl, wl, al: _error_one(
+        xl, wl, al, kind=kind, alpha=alpha,
+        act_cfg=act_cfg, w_cfg=w_cfg))(x, w, am)
+
+
+# ---------------------------------------------------------------------------
+# the search proper
+# ---------------------------------------------------------------------------
+
+
+def _module_inputs(stats: Mapping[str, CalibStats], module: str,
+                   w: jax.Array):
+    """(samples, absmax) for a module, shaped (L, n, C) / (L, C), or None
+    when the calibration did not retain samples for it."""
+    st = stats.get(module)
+    if st is None or st.act_samples is None:
+        return None
+    x, am = st.act_samples, st.act_absmax
+    if x.ndim == 2:                       # unscanned module → 1-layer stack
+        x, am = x[None], am[None]
+    if x.shape[0] != w.shape[0] or x.shape[-1] != w.shape[-2]:
+        return None
+    return x, am
+
+
+def search_plan(params, cfg: ModelConfig, stats: Mapping[str, CalibStats],
+                search: SearchConfig = SearchConfig(),
+                base: TransformPlan = TransformPlan(),
+                ) -> tuple[LayerwisePlan, dict]:
+    """Derive a per-layer plan from calibration samples.
+
+    Returns (plan, info); ``info[module]`` holds the full difficulty and
+    error matrices (candidates × layers, numpy) for telemetry/reports.
+    """
+    weights = module_weights(params, cfg)
+    # planned layer count = the scanned stack's leading dim (for MoE this
+    # is num_layers − first_dense_layers; leading dense layers keep base)
+    n_layers = next(iter(weights.values())).shape[0]
+    cands = candidate_grid(search)
+    modules: dict[str, tuple[ModuleChoice, ...]] = {}
+    info: dict[str, dict] = {}
+
+    for module, w in weights.items():
+        if w.shape[0] != n_layers:
+            continue
+        xam = _module_inputs(stats, module, w)
+        if xam is None:
+            continue                       # no samples → base plan applies
+        x, am = xam
+        L = w.shape[0]
+        usable = list(cands)
+        base_choice = ModuleChoice(base.kind_for(module), base.alpha)
+        if cfg.family == "moe" and module == "gate_proj":
+            # expert stacks never smooth (no per-expert division in the
+            # dispatch path — DESIGN.md §5); plan only what the fold can
+            # deploy there: per-layer rotation on/off
+            usable = [c for c in usable if c.kind in ("none", "rotate")]
+            base_choice = ModuleChoice(
+                "rotate" if "rotate" in base_choice.kind else "none")
+        if base_choice.kind not in ("smooth", "smooth_rotate"):
+            base_choice = ModuleChoice(base_choice.kind)  # α is irrelevant
+        # force-include the base plan's own choice: the searched plan can
+        # then never be worse than the fixed plan under this metric
+        if base_choice not in usable:
+            usable.append(base_choice)
+
+        diff = np.full((len(usable), L), np.inf, np.float64)
+        for ci, c in enumerate(usable):
+            diff[ci] = np.asarray(
+                _difficulty_layers(x, w, am, c.alpha, kind=c.kind),
+                np.float64)
+
+        # difficulty pre-filter: per layer keep top_k candidates (+ base)
+        k = min(search.top_k, len(usable))
+        order = np.argsort(diff, axis=0)          # (C, L) candidate ranks
+        survive = np.zeros_like(diff, bool)
+        for l in range(L):
+            survive[order[:k, l], l] = True
+        survive[usable.index(base_choice), :] = True
+
+        err = np.full((len(usable), L), np.inf, np.float64)
+        for ci, c in enumerate(usable):
+            layers = np.nonzero(survive[ci])[0]
+            if layers.size == 0:
+                continue
+            idx = jnp.asarray(layers)
+            e = _error_layers(x[idx], w[idx], am[idx], c.alpha, kind=c.kind,
+                              act_cfg=search.act_cfg, w_cfg=search.w_cfg)
+            err[ci, layers] = np.asarray(e, np.float64)
+
+        best = err.argmin(axis=0)
+        modules[module] = tuple(usable[best[l]] for l in range(L))
+        info[module] = {
+            "candidates": [dataclasses.asdict(c) for c in usable],
+            "difficulty": diff,
+            "error": err,
+            "best": best,
+        }
+
+    plan = LayerwisePlan(num_layers=n_layers, modules=modules,
+                         base=base, arch=cfg.name)
+    return plan, info
+
+
+def plan_errors(plan: LayerwisePlan, params, cfg: ModelConfig,
+                stats: Mapping[str, CalibStats],
+                search: SearchConfig = SearchConfig()) -> dict[str, np.ndarray]:
+    """Eq. (2) error per (module, layer) under a given plan — the shared
+    yardstick autoplan_quality uses to compare auto vs fixed plans."""
+    weights = module_weights(params, cfg)
+    out: dict[str, np.ndarray] = {}
+    for module, w in weights.items():
+        xam = _module_inputs(stats, module, w)
+        if xam is None:
+            continue
+        x, am = xam
+        L = w.shape[0]
+        errs = np.zeros(L, np.float64)
+        choices = [plan.choice_for(module, l) for l in range(L)]
+        for choice in set(choices):
+            layers = np.asarray([l for l in range(L) if choices[l] == choice])
+            idx = jnp.asarray(layers)
+            e = _error_layers(x[idx], w[idx], am[idx], choice.alpha,
+                              kind=choice.kind, act_cfg=search.act_cfg,
+                              w_cfg=search.w_cfg)
+            errs[layers] = np.asarray(e, np.float64)
+        out[module] = errs
+    return out

@@ -1,0 +1,110 @@
+"""Pre/post-transform activation profiles per module (autoplan telemetry).
+
+For every planned module and layer, records the paper's three flatness
+lenses on the calibration samples — quantization difficulty (std of
+channel magnitudes, §II-B), excess kurtosis (FlatQuant's lens), and a
+flatness ratio (max/median of the sorted channel-magnitude curve) —
+before and after the plan's chosen transform.  The JSON artifacts land
+in ``experiments/autoplan/`` and feed ``benchmarks/report.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.autoplan.plan import LayerwisePlan
+from repro.autoplan.search import _module_inputs, module_weights, transform_xw
+from repro.configs.base import ModelConfig
+from repro.core.difficulty import channel_magnitudes, kurtosis
+
+__all__ = ["ModuleTelemetry", "collect_telemetry", "telemetry_to_json",
+           "write_telemetry", "summarize"]
+
+
+@dataclasses.dataclass
+class ModuleTelemetry:
+    """Per-layer activation profiles for one module, pre/post transform."""
+
+    module: str
+    kinds: list[str]                 # chosen transform per layer
+    alphas: list[float]
+    difficulty_pre: list[float]
+    difficulty_post: list[float]
+    kurtosis_pre: list[float]
+    kurtosis_post: list[float]
+    flatness_pre: list[float]        # max/median channel magnitude
+    flatness_post: list[float]
+
+
+def _profiles(x: jax.Array):
+    """(difficulty, kurtosis, flatness) of one layer's (n, C) samples."""
+    mags = channel_magnitudes(x)
+    diff = jnp.std(mags)                 # quantization_difficulty, reusing mags
+    flat = jnp.max(mags) / jnp.maximum(jnp.median(mags), 1e-12)
+    return diff, kurtosis(x), flat
+
+
+def collect_telemetry(plan: LayerwisePlan, params, cfg: ModelConfig,
+                      stats: Mapping) -> dict[str, ModuleTelemetry]:
+    out: dict[str, ModuleTelemetry] = {}
+    for module, w in module_weights(params, cfg).items():
+        xam = _module_inputs(stats, module, w)
+        if xam is None:
+            continue
+        x, am = xam
+        L = x.shape[0]
+        tel = ModuleTelemetry(module=module, kinds=[], alphas=[],
+                              difficulty_pre=[], difficulty_post=[],
+                              kurtosis_pre=[], kurtosis_post=[],
+                              flatness_pre=[], flatness_post=[])
+        for l in range(L):
+            choice = plan.choice_for(module, l)
+            xh, _ = transform_xw(x[l], w[l], am[l], choice.kind, choice.alpha)
+            d0, k0, f0 = _profiles(x[l])
+            d1, k1, f1 = _profiles(xh)
+            tel.kinds.append(choice.kind)
+            tel.alphas.append(float(choice.alpha))
+            tel.difficulty_pre.append(float(d0))
+            tel.difficulty_post.append(float(d1))
+            tel.kurtosis_pre.append(float(k0))
+            tel.kurtosis_post.append(float(k1))
+            tel.flatness_pre.append(float(f0))
+            tel.flatness_post.append(float(f1))
+        out[module] = tel
+    return out
+
+
+def telemetry_to_json(arch: str, tel: Mapping[str, ModuleTelemetry],
+                      extra: dict | None = None) -> dict:
+    obj = {"arch": arch,
+           "modules": {m: dataclasses.asdict(t) for m, t in tel.items()}}
+    if extra:
+        obj.update(extra)
+    return obj
+
+
+def write_telemetry(path: str, arch: str, tel: Mapping[str, ModuleTelemetry],
+                    extra: dict | None = None) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(telemetry_to_json(arch, tel, extra), f, indent=2,
+                  sort_keys=True)
+    return path
+
+
+def summarize(tel: Mapping[str, ModuleTelemetry]) -> str:
+    """Human-readable mean difficulty reduction per module."""
+    lines = ["module      mean difficulty pre → post   (reduction)"]
+    for m, t in sorted(tel.items()):
+        pre = float(np.mean(t.difficulty_pre))
+        post = float(np.mean(t.difficulty_post))
+        red = 0.0 if pre == 0 else 100.0 * (1 - post / max(pre, 1e-12))
+        lines.append(f"{m:11s} {pre:12.4f} → {post:9.4f}   ({red:+.1f}%)")
+    return "\n".join(lines)

@@ -25,15 +25,36 @@ class CalibStats:
 
     ``act_absmax`` has shape (layers, c_in) for scanned stacks or (c_in,)
     for unscanned modules; maxima accumulate across calibration batches.
+    ``act_samples`` (optional, autoplan search) retains a capped number
+    of raw activation tokens per layer — (layers, n, c_in) / (n, c_in) —
+    so per-layer transform candidates can be scored on Eq. (2) error.
     """
 
     act_absmax: jax.Array
     n_batches: int = 0
+    act_samples: jax.Array | None = None
 
-    def merge(self, new_absmax: jax.Array) -> "CalibStats":
+    def merge(self, new_absmax: jax.Array,
+              new_samples: jax.Array | None = None,
+              keep_samples: int = 0) -> "CalibStats":
+        samples = self.act_samples
+        if keep_samples and new_samples is not None:
+            if samples is None:
+                samples = new_samples
+            else:
+                samples = jnp.concatenate([samples, new_samples], axis=-2)
+            total = samples.shape[-2]
+            if total > keep_samples:
+                # evenly thin the concatenation so EVERY batch keeps
+                # contributing (a prefix cut would freeze the retained
+                # set once the first batch fills the cap)
+                idx = jnp.round(jnp.linspace(0, total - 1,
+                                             keep_samples)).astype(jnp.int32)
+                samples = samples[..., idx, :]
         return CalibStats(
             act_absmax=jnp.maximum(self.act_absmax, new_absmax),
             n_batches=self.n_batches + 1,
+            act_samples=samples,
         )
 
 
@@ -46,26 +67,50 @@ def _tap_absmax(tap: jax.Array) -> jax.Array:
     return jnp.max(x, axis=reduce_axes)
 
 
+def _tap_samples(tap: jax.Array, n: int) -> jax.Array:
+    """Flatten a tap to (layers?, tokens, c_in) and keep ≤ n evenly-spaced
+    tokens spanning the WHOLE range (not a prefix), so every position in
+    the batch contributes — including late-sequence massive-outlier
+    tokens."""
+    x = tap.astype(jnp.float32)
+    if x.ndim <= 3:                        # (B, T, C) or (T, C)
+        x = x.reshape(-1, x.shape[-1])
+    else:                                  # (L, B, T, C)
+        x = x.reshape(x.shape[0], -1, x.shape[-1])
+    total = x.shape[-2]
+    if total <= n:
+        return x
+    idx = jnp.round(jnp.linspace(0, total - 1, n)).astype(jnp.int32)
+    return x[..., idx, :]
+
+
 def update_stats(stats: dict[str, CalibStats] | None,
-                 taps: Mapping[str, jax.Array]) -> dict[str, CalibStats]:
-    """Fold one batch of taps into running stats (creates on first call)."""
+                 taps: Mapping[str, jax.Array],
+                 keep_samples: int = 0) -> dict[str, CalibStats]:
+    """Fold one batch of taps into running stats (creates on first call).
+
+    ``keep_samples > 0`` additionally retains up to that many activation
+    tokens per module (per layer) for the autoplan error search.
+    """
     out = dict(stats or {})
     for name, tap in taps.items():
         am = _tap_absmax(tap)
+        sm = _tap_samples(tap, keep_samples) if keep_samples else None
         if name in out:
-            out[name] = out[name].merge(am)
+            out[name] = out[name].merge(am, sm, keep_samples)
         else:
-            out[name] = CalibStats(act_absmax=am, n_batches=1)
+            out[name] = CalibStats(act_absmax=am, n_batches=1, act_samples=sm)
     return out
 
 
 def collect_stats(tap_fn: Callable[[dict], Mapping[str, jax.Array]],
-                  batches: Iterable[dict]) -> dict[str, CalibStats]:
+                  batches: Iterable[dict],
+                  keep_samples: int = 0) -> dict[str, CalibStats]:
     """Run ``tap_fn`` (params-closed forward returning taps) over a
     calibration stream and accumulate per-module absmax stats."""
     stats: dict[str, CalibStats] | None = None
     for batch in batches:
-        stats = update_stats(stats, tap_fn(batch))
+        stats = update_stats(stats, tap_fn(batch), keep_samples)
     if stats is None:
         raise ValueError("empty calibration stream")
     return stats

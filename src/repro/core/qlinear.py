@@ -60,6 +60,9 @@ class QuantizedWeight:
     w_q: jax.Array
     scale: jax.Array
     smooth: jax.Array | None = None   # per-channel s (Eq. 4): runtime x/s
+    had_mask: jax.Array | None = None  # per-layer rotation gate (LayerwisePlan
+    #                                    stacks mixing rotated/unrotated layers;
+    #                                    scalar per layer after the scan slice)
     bits: int = dataclasses.field(metadata=dict(static=True), default=4)
     packed: bool = dataclasses.field(metadata=dict(static=True), default=False)
     had_dim: int = dataclasses.field(metadata=dict(static=True), default=0)
@@ -113,24 +116,32 @@ def qlinear(x: jax.Array, qw: QuantizedWeight, policy: QuantPolicy) -> jax.Array
     accumulation — the same arithmetic the Pallas kernel performs in VMEM
     tiles on TPU (see repro/kernels/quant_matmul.py).
     """
+    lead = x.shape[:-1]
+    if policy.use_kernels == "interpret" and qw.had_mask is None:
+        # the fused path applies smooth + online Hadamard itself; mixed
+        # layerwise stacks (had_mask) need the gated XLA path below
+        from repro.kernels import ops  # local import: kernels are optional
+
+        x2 = x.reshape(-1, x.shape[-1])
+        y2 = ops.fused_quant_matmul(x2, qw, act_bits=policy.act_bits,
+                                    interpret=True)
+        return y2.reshape(*lead, qw.c_out).astype(x.dtype)
+
     if qw.smooth is not None:
         x = x / qw.smooth.astype(x.dtype)
     if qw.had_dim:
-        x = hd.apply_hadamard(x, qw.had_dim)
-    lead = x.shape[:-1]
+        xr = hd.apply_hadamard(x, qw.had_dim)
+        # had_mask gates the online rotation per layer (mixed layerwise
+        # plans); the activation quantizer below sees the SELECTED x, so
+        # un-rotated layers quantize their original channel distribution.
+        x = xr if qw.had_mask is None else jnp.where(qw.had_mask > 0, xr, x)
     x2 = x.reshape(-1, x.shape[-1])
-
-    if policy.use_kernels == "interpret":
-        from repro.kernels import ops  # local import: kernels are optional
-
-        y2 = ops.fused_quant_matmul(x2, qw, act_bits=policy.act_bits, interpret=True)
-    else:
-        aq, a_scale = quantize(x2, QuantConfig(bits=policy.act_bits,
-                                               granularity="per_token"))
-        w_int = _unpack(qw)
-        acc = jax.lax.dot_general(
-            aq, w_int, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32,
-        )
-        y2 = acc.astype(jnp.float32) * a_scale * qw.scale
+    aq, a_scale = quantize(x2, QuantConfig(bits=policy.act_bits,
+                                           granularity="per_token"))
+    w_int = _unpack(qw)
+    acc = jax.lax.dot_general(
+        aq, w_int, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    y2 = acc.astype(jnp.float32) * a_scale * qw.scale
     return y2.reshape(*lead, qw.c_out).astype(x.dtype)

@@ -1,0 +1,93 @@
+"""jax version compatibility for mesh construction/activation.
+
+The codebase targets the explicit-sharding API (``jax.set_mesh``,
+``jax.sharding.AxisType``); older jax releases (≤ 0.4.x) predate both.
+These wrappers resolve to the modern API when present and degrade to the
+legacy equivalents (``jax.make_mesh`` without ``axis_types``; the
+``Mesh`` context manager) otherwise, so tests and CPU dry-runs work on
+whichever jax the container bakes in.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+__all__ = ["make_mesh", "set_mesh", "get_abstract_mesh", "shard_map",
+           "jit_shardings"]
+
+_HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+_HAS_SET_MESH = hasattr(jax, "set_mesh")
+_HAS_GET_ABSTRACT = hasattr(jax.sharding, "get_abstract_mesh")
+_HAS_TOP_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """``jax.make_mesh`` with Auto axis types when the API supports them."""
+    if _HAS_AXIS_TYPES:
+        return jax.make_mesh(
+            tuple(axis_shapes), tuple(axis_names),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+
+
+def set_mesh(mesh):
+    """Context manager activating ``mesh`` (``jax.set_mesh`` or legacy
+    ``with mesh:`` resource-env entry)."""
+    if _HAS_SET_MESH:
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def get_abstract_mesh():
+    """The ambient mesh, or None when none is active.
+
+    Modern jax exposes ``jax.sharding.get_abstract_mesh``; legacy jax
+    tracks the ``with mesh:`` resource env in thread-local state.
+    """
+    if _HAS_GET_ABSTRACT:
+        mesh = jax.sharding.get_abstract_mesh()
+        return mesh if mesh is not None and mesh.axis_names else None
+    from jax._src.mesh import thread_resources
+
+    mesh = thread_resources.env.physical_mesh
+    return None if mesh.empty else mesh
+
+
+def shard_map(f, *, mesh=None, in_specs, out_specs):
+    """``jax.shard_map`` over the ambient mesh, without replication checks.
+
+    Legacy jax has only ``jax.experimental.shard_map.shard_map`` (which
+    requires an explicit mesh and spells the check flag ``check_rep``).
+    """
+    if _HAS_TOP_SHARD_MAP:
+        kw = {} if mesh is None else {"mesh": mesh}
+        return jax.shard_map(f, in_specs=in_specs, out_specs=out_specs,
+                             check_vma=False, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    if mesh is None:
+        mesh = get_abstract_mesh()
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
+def jit_shardings(mesh, tree):
+    """A PartitionSpec tree usable as jit in_/out_shardings.
+
+    Modern jax accepts raw PartitionSpecs under an ambient ``set_mesh``;
+    legacy jax requires concrete ``NamedSharding`` objects (``None``
+    leaves meaning "replicated" included).
+    """
+    if _HAS_SET_MESH:
+        return tree
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    def to_sharding(spec):
+        return NamedSharding(mesh, spec if isinstance(spec, PartitionSpec)
+                             else PartitionSpec())
+
+    return jax.tree.map(
+        to_sharding, tree,
+        is_leaf=lambda s: s is None or isinstance(s, PartitionSpec))

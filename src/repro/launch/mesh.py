@@ -6,7 +6,7 @@ state (jax locks the device count on first backend init).
 
 from __future__ import annotations
 
-import jax
+from repro.launch import compat
 
 __all__ = ["make_production_mesh", "make_test_mesh", "dp_axes", "dp_size"]
 
@@ -19,14 +19,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 1, model: int = 1):
     """Small mesh for CPU tests (same axis names as production)."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((data, model), ("data", "model"))
 
 
 def dp_axes(mesh) -> tuple[str, ...]:

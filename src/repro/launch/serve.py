@@ -29,6 +29,7 @@ from repro.launch.mesh import make_test_mesh
 from repro.models.api import get_model
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.fold import collect_calibration, fold_quantize
+from repro.launch import compat
 
 
 def main(argv=None):
@@ -48,6 +49,12 @@ def main(argv=None):
                     help="serve bf16 (baseline)")
     ap.add_argument("--alpha", type=float, default=0.5,
                     help="smoothing migration strength (paper Eq. 4)")
+    ap.add_argument("--auto-plan", action="store_true",
+                    help="search a per-layer transform/α plan from the "
+                         "calibration stream (repro.autoplan)")
+    ap.add_argument("--plan-json", default="",
+                    help="load a saved LayerwisePlan JSON instead of the "
+                         "fixed §V plan (overridden by --auto-plan)")
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args(argv)
 
@@ -58,7 +65,7 @@ def main(argv=None):
     mesh = make_test_mesh()
     key = jax.random.PRNGKey(0)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         params = model.init(key, cfg)
         if args.checkpoint:
             ck = Checkpointer(args.checkpoint)
@@ -72,16 +79,44 @@ def main(argv=None):
             t0 = time.time()
             stats = collect_calibration(
                 model, params, cfg,
-                list(calibration_stream(cfg, n_batches=2, batch=2, seq=64)))
+                list(calibration_stream(cfg, n_batches=2, batch=2, seq=64)),
+                keep_samples=128 if args.auto_plan else 0)
             policy = QuantPolicy(
                 weight_bits=args.weight_bits, act_bits=args.act_bits,
                 kv_cache_bits=args.kv_bits or None, use_kernels="never")
-            params = fold_quantize(params, cfg, policy=policy,
-                                   plan=TransformPlan(alpha=args.alpha),
+            if args.auto_plan:
+                from repro.autoplan import SearchConfig, search_plan
+
+                plan, _ = search_plan(
+                    params, cfg, stats,
+                    search=SearchConfig(weight_bits=args.weight_bits,
+                                        act_bits=args.act_bits),
+                    base=TransformPlan(alpha=args.alpha))
+                plan_desc = "searched per-layer plan (repro.autoplan)"
+            elif args.plan_json:
+                from repro.autoplan import LayerwisePlan
+
+                plan = LayerwisePlan.load(args.plan_json)
+                # a mismatched plan would silently fall back to its base
+                # for every stack — fail loudly instead (the planned stack
+                # excludes MoE leading dense layers)
+                planned_stack = cfg.num_layers - cfg.first_dense_layers
+                if plan.num_layers != planned_stack:
+                    ap.error(f"{args.plan_json} plans {plan.num_layers} "
+                             f"layers but {cfg.name}'s planned stack has "
+                             f"{planned_stack} — searched on a different "
+                             "config?")
+                if plan.arch and plan.arch != cfg.name:
+                    print(f"WARNING: plan searched on {plan.arch!r}, "
+                          f"serving {cfg.name!r}")
+                plan_desc = f"LayerwisePlan from {args.plan_json}"
+            else:
+                plan = TransformPlan(alpha=args.alpha)
+                plan_desc = "SmoothRotation on down_proj — paper §V"
+            params = fold_quantize(params, cfg, policy=policy, plan=plan,
                                    stats=stats)
             print(f"calibrated + folded W{args.weight_bits}A{args.act_bits} "
-                  f"in {time.time() - t0:.1f}s "
-                  f"(plan: SmoothRotation on down_proj — paper §V)")
+                  f"in {time.time() - t0:.1f}s (plan: {plan_desc})")
 
         eng = ServingEngine(model, params, cfg, max_slots=args.max_slots,
                             max_len=args.max_len, policy=policy,

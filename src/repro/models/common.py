@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.qlinear import QuantizedWeight, QuantPolicy, qlinear
+from repro.launch import compat
 
 Params = dict[str, Any]
 
@@ -51,7 +52,7 @@ def shard_act(x: jax.Array, *, sp: bool = False) -> jax.Array:
     replaces each TP all-reduce with a reduce-scatter + all-gather pair
     at half the wire bytes, and layer-boundary residuals shrink 16×.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or not mesh.axis_names or mesh.size == 1:
         return x
     from jax.sharding import PartitionSpec as P
@@ -364,7 +365,7 @@ def flash_decode(q, layer_kv: dict, valid, *, dp_spec) -> jax.Array:
     """
     from jax.sharding import PartitionSpec as P
 
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     b, sq, hq, d = q.shape
     S = layer_kv["k"].shape[1]
     quantized = layer_kv.get("k_scale") is not None
@@ -399,12 +400,11 @@ def flash_decode(q, layer_kv: dict, valid, *, dp_spec) -> jax.Array:
     ks = layer_kv.get("k_scale")
     vs = layer_kv.get("v_scale")
     scale_spec = kv_spec if quantized else P()
-    return jax.shard_map(
+    return compat.shard_map(
         local,
         in_specs=(P(dp_spec, None, None, None), kv_spec, kv_spec,
                   scale_spec, scale_spec, P()),
-        out_specs=P(dp_spec, None, None, None),
-        check_vma=False,
+        out_specs=P(dp_spec, None, None, None)
     )(q, layer_kv["k"], layer_kv["v"],
       ks if quantized else jnp.zeros((), jnp.float32),
       vs if quantized else jnp.zeros((), jnp.float32),
@@ -413,7 +413,7 @@ def flash_decode(q, layer_kv: dict, valid, *, dp_spec) -> jax.Array:
 
 def _flash_decode_ok(cfg: ModelConfig, q, layer_kv) -> tuple[bool, Any]:
     """Eligibility + the dp spec for flash_decode under the ambient mesh."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or "model" not in mesh.axis_names:
         return False, None
     b, sq = q.shape[0], q.shape[1]

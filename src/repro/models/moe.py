@@ -28,6 +28,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.core.qlinear import QuantPolicy
 from repro.models import common as cm
+from repro.launch import compat
 
 Params = dict[str, Any]
 
@@ -141,7 +142,7 @@ def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig,
     p_mean = jnp.mean(probs, axis=0)
     aux = E * jnp.sum(density * p_mean)
 
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     tp = "model" if (mesh is not None and "model" in mesh.axis_names
                      and E % mesh.shape["model"] == 0) else None
 
@@ -150,17 +151,21 @@ def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig,
         if isinstance(leaf, dict) and "qw" in leaf:
             qw = leaf["qw"]
             return ({"codes": qw.w_q, "scale": qw.scale, "packed": qw.packed},
-                    qw.had_dim)
+                    qw.had_dim, qw.had_mask)
         if isinstance(leaf, dict):
-            return {"w": leaf.get("w", leaf)}, 0
-        return {"w": leaf}, 0
+            return {"w": leaf.get("w", leaf)}, 0, None
+        return {"w": leaf}, 0, None
 
-    (mg, g_had), (mu, _), (md, d_had) = (expert_mats(n) for n in ("wg", "wu", "wd"))
+    (mg, g_had, g_mask), (mu, _, _), (md, d_had, _) = (
+        expert_mats(n) for n in ("wg", "wu", "wd"))
     hq = hf
     if g_had:  # gate/up folded with Rᵀ on d_model: rotate tokens once
         from repro.core.hadamard import apply_hadamard
 
-        hq = apply_hadamard(hf, g_had)
+        hr = apply_hadamard(hf, g_had)
+        # g_mask gates per-layer rotation under a mixed LayerwisePlan
+        # (scalar per layer once the scan slices the stack)
+        hq = hr if g_mask is None else jnp.where(g_mask > 0, hr, hf)
     static = {k_: v for m in (mg, mu, md) for k_, v in m.items()
               if isinstance(v, bool)}
     mg, mu, md = ({k_: v for k_, v in m.items() if not isinstance(v, bool)}
@@ -187,12 +192,11 @@ def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig,
         # keep only expert parallelism (every shard sees all tokens)
         xspec = P(dp, None) if hf.shape[0] % dp_sz == 0 else P(None, None)
         espec = jax.tree.map(lambda _: P("model", None, None), mg)
-        out = jax.shard_map(
+        out = compat.shard_map(
             fn,
             in_specs=(xspec, xspec, xspec, espec, espec,
                       jax.tree.map(lambda _: P("model", None, None), md)),
-            out_specs=xspec,
-            check_vma=False,
+            out_specs=xspec
         )(hq, topi, topv, mg, mu, md)
     y = out.reshape(b, s, d)
     if "shared" in p:

@@ -47,8 +47,10 @@ class ServingEngine:
         self.policy = policy
         self.max_slots, self.max_len = max_slots, max_len
         self.eos_id = eos_id
+        self.kv_bits = kv_bits
         self.queue: deque[Request] = deque()
         self.slots: list[Request | None] = [None] * max_slots
+        self.retired: list[Request] = []
         # one independent cache per slot (slot-batched decode batches them)
         self.caches = [model.make_cache(cfg, 1, max_len, bits=kv_bits)
                        for _ in range(max_slots)]
@@ -64,17 +66,25 @@ class ServingEngine:
         self.queue.append(req)
 
     def _admit(self):
-        for i, slot in enumerate(self.slots):
-            if slot is None and self.queue:
+        for i in range(self.max_slots):
+            while self.slots[i] is None and self.queue:
                 req = self.queue.popleft()
                 cache = self.model.make_cache(self.cfg, 1, self.max_len,
-                                              bits=None)
+                                              bits=self.kv_bits)
                 toks = jnp.asarray(req.prompt[None, :], jnp.int32)
                 logits, cache = self._prefill(self.params, toks, cache)
                 self.caches[i] = cache
-                nxt = self._sample(logits[:, -1], req.temperature)
-                req.out_tokens.append(int(nxt[0]))
-                self.slots[i] = req
+                nxt = int(self._sample(logits[:, -1], req.temperature)[0])
+                req.out_tokens.append(nxt)
+                # the prefill-sampled token can already finish the request
+                # (EOS or max_new_tokens=1): retire without occupying the
+                # slot, and keep admitting into it
+                if (nxt == self.eos_id or
+                        len(req.out_tokens) >= req.max_new_tokens):
+                    req.done = True
+                    self.retired.append(req)
+                else:
+                    self.slots[i] = req
 
     def _sample(self, logits, temperature: float):
         if temperature <= 0:
@@ -102,13 +112,22 @@ class ServingEngine:
             if (nxt == self.eos_id or
                     len(req.out_tokens) >= req.max_new_tokens):
                 req.done = True
+                self.retired.append(req)
                 self.slots[i] = None
         return active
 
+    def pop_retired(self) -> list[Request]:
+        """Drain and return retired requests (callers driving step()
+        directly should call this periodically — the engine does not
+        retain retired requests once handed out)."""
+        out, self.retired = self.retired, []
+        return out
+
     def run(self, max_ticks: int = 1000) -> list[Request]:
-        finished: list[Request] = []
-        submitted = list(self.queue)
+        """Tick until queue and slots drain (or the tick budget runs out);
+        returns every retired request not yet handed out — including ones
+        already occupying a slot beforehand or submitted mid-run."""
         while (self.queue or any(self.slots)) and max_ticks > 0:
             self.step()
             max_ticks -= 1
-        return [r for r in submitted if r.done]
+        return self.pop_retired()

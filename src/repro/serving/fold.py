@@ -22,18 +22,23 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable
+from typing import Any, Callable, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.autoplan.plan import LayerwisePlan, ModuleChoice
 from repro.configs.base import ModelConfig
-from repro.core.calibration import CalibStats, smoothing_scales_from_stats, update_stats
+from repro.core.calibration import (
+    CalibStats, collect_stats, smoothing_scales_from_stats,
+)
 from repro.core.hadamard import apply_hadamard
 from repro.core.qlinear import QuantPolicy, QuantizedWeight, quantize_weight
 from repro.core.transforms import TransformKind, TransformPlan
 
 Params = dict[str, Any]
+PlanLike = Union[TransformPlan, LayerwisePlan]
 
 
 # ---------------------------------------------------------------------------
@@ -41,19 +46,20 @@ Params = dict[str, Any]
 # ---------------------------------------------------------------------------
 
 
-def collect_calibration(model, params, cfg: ModelConfig, batches) -> dict[str, CalibStats]:
+def collect_calibration(model, params, cfg: ModelConfig, batches,
+                        keep_samples: int = 0) -> dict[str, CalibStats]:
     """Run the model's with-taps forward over calibration batches and
-    accumulate per-module per-channel absmax (taps stacked over layers)."""
+    accumulate per-module per-channel absmax (taps stacked over layers).
+
+    ``keep_samples > 0`` also retains that many raw activation tokens per
+    module per layer (CalibStats.act_samples) for the autoplan search.
+    """
     tap_fn = jax.jit(
         lambda toks=None, embeds=None: model.forward_with_taps(
             params, cfg, toks, embeds=embeds)[1])
-    stats: dict[str, CalibStats] | None = None
-    for batch in batches:
-        taps = tap_fn(batch.get("tokens"), batch.get("embeds"))
-        stats = update_stats(stats, taps)
-    if stats is None:
-        raise ValueError("empty calibration stream")
-    return stats
+    return collect_stats(
+        lambda batch: tap_fn(batch.get("tokens"), batch.get("embeds")),
+        batches, keep_samples)
 
 
 # ---------------------------------------------------------------------------
@@ -129,11 +135,123 @@ def _effective(kind: TransformKind, stat) -> TransformKind:
     return kind
 
 
-def _fold_linear_leaf(leaf: Params, kind: TransformKind, stat, *, alpha,
+# ---------------------------------------------------------------------------
+# plan resolution (global TransformPlan | per-layer LayerwisePlan)
+# ---------------------------------------------------------------------------
+
+
+def _base_plan(plan: PlanLike) -> TransformPlan:
+    return plan.base if isinstance(plan, LayerwisePlan) else plan
+
+
+def _resolve(plan: PlanLike, module: str, w: jax.Array):
+    """(kind, alpha) for a uniform fold, or per-layer ModuleChoices when
+    the plan is layer-dependent AND matches this stack's layer count.
+
+    Mismatched stacks (MoE leading dense layers, hybrid shared blocks,
+    unstacked linears) fall back to the plan's global base — the same
+    conservative reuse the uniform path always applied.
+    """
+    if isinstance(plan, LayerwisePlan):
+        choices = plan.modules.get(module)
+        if (choices is not None and w.ndim >= 3
+                and w.shape[0] == len(choices)):
+            if len(set(choices)) > 1:
+                return tuple(choices)
+            return choices[0].kind, choices[0].alpha
+        base = plan.base
+        return base.kind_for(module), base.alpha
+    return plan.kind_for(module), plan.alpha
+
+
+def _fold_stacked_layerwise(w: jax.Array, choices: tuple[ModuleChoice, ...],
+                            act_absmax: jax.Array | None, *,
+                            policy: QuantPolicy,
+                            bias: jax.Array | None = None) -> Params:
+    """Mixed per-layer kinds/αs on a (L, c_in, c_out) stack.
+
+    The scan shares ONE QuantizedWeight structure across layers, so the
+    static metadata must be uniform: rotated and un-rotated layers
+    coexist through the traced ``had_mask`` gate, and smoothing uses
+    identity scales on layers that don't smooth.  Layers are grouped by
+    (kind, α) and each group folds through the same vmapped math as the
+    uniform path.
+    """
+    if w.ndim != 3:
+        raise ValueError("layerwise fold expects a (L, c_in, c_out) stack")
+    L, c_in, _ = w.shape
+    wf = w.astype(jnp.float32)
+    smooth = jnp.ones((L, c_in), jnp.float32)
+    rot = np.zeros(L, bool)
+    any_smooth = False
+
+    groups: dict[tuple[TransformKind, float], list[int]] = {}
+    for l, c in enumerate(choices):
+        eff = _effective(c.kind, act_absmax)
+        groups.setdefault((eff, c.alpha), []).append(l)
+
+    for (kind, alpha), idx in groups.items():
+        ia = jnp.asarray(idx)
+        wi = wf[ia]
+        if kind in ("smooth", "smooth_rotate"):
+            am = (act_absmax[ia] if act_absmax.ndim == 2
+                  else jnp.broadcast_to(act_absmax, (len(idx), c_in)))
+            s = smoothing_scales_from_stats(am, wi, alpha)
+            wi = wi * s[..., None]
+            smooth = smooth.at[ia].set(s)
+            any_smooth = True
+        if kind in ("rotate", "smooth_rotate"):
+            wi = apply_hadamard(wi, axis=-2)
+            rot[idx] = True
+        wf = wf.at[ia].set(wi)
+
+    had_dim = c_in if rot.any() else 0
+    q = functools.partial(quantize_weight, bits=policy.weight_bits,
+                          pack=policy.pack_weights, had_dim=had_dim)
+    if any_smooth:
+        qw = jax.vmap(lambda ww, ss: q(ww, smooth=ss))(wf, smooth)
+    else:
+        qw = jax.vmap(lambda ww: q(ww))(wf)
+    if had_dim and not rot.all():
+        qw = dataclasses.replace(qw, had_mask=jnp.asarray(rot, jnp.float32))
+    out: Params = {"qw": qw}
+    if bias is not None:
+        out["b"] = bias
+    return out
+
+
+def _fold_linear_leaf(leaf: Params, plan: PlanLike, module: str, stat, *,
                       policy) -> Params:
-    kind = _effective(kind, stat)
-    return _fold_stacked(leaf["w"], kind, stat, alpha=alpha, policy=policy,
-                         bias=leaf.get("b"))
+    spec = _resolve(plan, module, leaf["w"])
+    if isinstance(spec[0], str):           # uniform (kind, alpha)
+        kind, alpha = spec
+        kind = _effective(kind, stat)
+        return _fold_stacked(leaf["w"], kind, stat, alpha=alpha,
+                             policy=policy, bias=leaf.get("b"))
+    return _fold_stacked_layerwise(leaf["w"], spec, stat, policy=policy,
+                                   bias=leaf.get("b"))
+
+
+def _fold_experts_rotation(w: jax.Array, rot: np.ndarray, *,
+                           policy: QuantPolicy) -> Params:
+    """Per-layer rotate/none on an (L, E, c_in, c_out) expert stack.
+
+    Experts never smooth (per-expert division is not in the dispatch
+    path; DESIGN.md §5), so a layerwise plan reduces to a per-layer
+    rotation choice — realized with the same had_mask gate the dense
+    layerwise fold uses (moe dispatch rotates the block input once and
+    selects per layer)."""
+    wf = w.astype(jnp.float32)
+    if rot.any():
+        ia = jnp.asarray(np.nonzero(rot)[0])
+        wf = wf.at[ia].set(apply_hadamard(wf[ia], axis=-2))
+    had_dim = w.shape[-2] if rot.any() else 0
+    q = functools.partial(quantize_weight, bits=policy.weight_bits,
+                          pack=policy.pack_weights, had_dim=had_dim)
+    qw = jax.vmap(jax.vmap(q))(wf)
+    if had_dim and not rot.all():
+        qw = dataclasses.replace(qw, had_mask=jnp.asarray(rot, jnp.float32))
+    return {"qw": qw}
 
 
 # ---------------------------------------------------------------------------
@@ -141,55 +259,63 @@ def _fold_linear_leaf(leaf: Params, kind: TransformKind, stat, *, alpha,
 # ---------------------------------------------------------------------------
 
 
-def _fold_attn(attn: Params, stats, plan: TransformPlan, policy: QuantPolicy) -> Params:
-    f = functools.partial(_fold_linear_leaf, alpha=plan.alpha, policy=policy)
+def _fold_attn(attn: Params, stats, plan: PlanLike, policy: QuantPolicy) -> Params:
+    f = functools.partial(_fold_linear_leaf, policy=policy)
     return {
-        "wq": f(attn["wq"], plan.attn_in, _stat(stats, "k_proj")),
-        "wk": f(attn["wk"], plan.attn_in, _stat(stats, "k_proj")),
-        "wv": f(attn["wv"], plan.attn_in, _stat(stats, "k_proj")),
-        "wo": f(attn["wo"], plan.attn_out, _stat(stats, "o_proj")),
+        "wq": f(attn["wq"], plan, "k_proj", _stat(stats, "k_proj")),
+        "wk": f(attn["wk"], plan, "k_proj", _stat(stats, "k_proj")),
+        "wv": f(attn["wv"], plan, "k_proj", _stat(stats, "k_proj")),
+        "wo": f(attn["wo"], plan, "o_proj", _stat(stats, "o_proj")),
         "ln": attn["ln"],
     }
 
 
-def _fold_mla(attn: Params, stats, plan: TransformPlan, policy: QuantPolicy) -> Params:
-    f = functools.partial(_fold_linear_leaf, alpha=plan.alpha, policy=policy)
+def _fold_mla(attn: Params, stats, plan: PlanLike, policy: QuantPolicy) -> Params:
+    f = functools.partial(_fold_linear_leaf, policy=policy)
     return {
-        "wq": f(attn["wq"], plan.attn_in, _stat(stats, "k_proj")),
-        "wdkv": f(attn["wdkv"], plan.attn_in, _stat(stats, "k_proj")),
-        "wukv": f(attn["wukv"], plan.attn_in, _stat(stats, "kv_up")),
-        "wo": f(attn["wo"], plan.attn_out, _stat(stats, "o_proj")),
+        "wq": f(attn["wq"], plan, "k_proj", _stat(stats, "k_proj")),
+        "wdkv": f(attn["wdkv"], plan, "k_proj", _stat(stats, "k_proj")),
+        "wukv": f(attn["wukv"], plan, "kv_up", _stat(stats, "kv_up")),
+        "wo": f(attn["wo"], plan, "o_proj", _stat(stats, "o_proj")),
         "ln": attn["ln"], "kv_ln": attn["kv_ln"],
     }
 
 
-def _fold_mlp(mlp: Params, stats, plan: TransformPlan, policy: QuantPolicy,
+def _fold_mlp(mlp: Params, stats, plan: PlanLike, policy: QuantPolicy,
               *, tap_prefix: str = "") -> Params:
-    f = functools.partial(_fold_linear_leaf, alpha=plan.alpha, policy=policy)
+    f = functools.partial(_fold_linear_leaf, policy=policy)
     out = {
-        "wg": f(mlp["wg"], plan.mlp_in, _stat(stats, tap_prefix + "gate_proj")),
-        "wu": f(mlp["wu"], plan.mlp_in, _stat(stats, tap_prefix + "gate_proj")),
-        "wd": f(mlp["wd"], plan.mlp_out, _stat(stats, tap_prefix + "down_proj")),
+        "wg": f(mlp["wg"], plan, "gate_proj",
+                _stat(stats, tap_prefix + "gate_proj")),
+        "wu": f(mlp["wu"], plan, "gate_proj",
+                _stat(stats, tap_prefix + "gate_proj")),
+        "wd": f(mlp["wd"], plan, "down_proj",
+                _stat(stats, tap_prefix + "down_proj")),
     }
     if "ln" in mlp:
         out["ln"] = mlp["ln"]
     return out
 
 
-def _fold_moe_ffn(moe: Params, stats, plan: TransformPlan, policy: QuantPolicy,
+def _fold_moe_ffn(moe: Params, stats, plan: PlanLike, policy: QuantPolicy,
                   cfg: ModelConfig) -> Params:
     """Experts: per-expert quantization; gate/up get the block input stats
     (routed subsets share the block input → absmax is an upper bound);
     expert down_proj has no per-expert calibration stream → rotation
     (DESIGN.md §5).  Router stays f32 (it is tiny and precision-critical)."""
-    f = functools.partial(_fold_stacked, alpha=plan.alpha, policy=policy)
+    gplan = _base_plan(plan)
+    f = functools.partial(_fold_stacked, alpha=gplan.alpha, policy=policy)
     # experts never get runtime smoothing (per-expert division is not in
-    # the dispatch path; DESIGN.md §5) — rotation-only there:
-    e_kind: TransformKind = "rotate" if "rotate" in plan.mlp_in else "none"
+    # the dispatch path; DESIGN.md §5) — per-layer rotation only:
+    spec = _resolve(plan, "gate_proj", moe["wg"])
+    if isinstance(spec[0], str):           # uniform
+        rot = np.full(moe["wg"].shape[0], "rotate" in spec[0])
+    else:                                  # layerwise gate_proj choices
+        rot = np.asarray(["rotate" in c.kind for c in spec])
     out = {
         "router": moe["router"],
-        "wg": {"qw": f(moe["wg"], e_kind, None)["qw"]},
-        "wu": {"qw": f(moe["wu"], e_kind, None)["qw"]},
+        "wg": _fold_experts_rotation(moe["wg"], rot, policy=policy),
+        "wu": _fold_experts_rotation(moe["wu"], rot, policy=policy),
         "wd": {"qw": f(moe["wd"], "rotate", None)["qw"]},
         "ln": moe["ln"],
     }
@@ -203,11 +329,13 @@ def _fold_moe_ffn(moe: Params, stats, plan: TransformPlan, policy: QuantPolicy,
     return out
 
 
-def _fold_mamba(layer: Params, stats, plan: TransformPlan, policy: QuantPolicy) -> Params:
-    f = functools.partial(_fold_linear_leaf, alpha=plan.alpha, policy=policy)
+def _fold_mamba(layer: Params, stats, plan: PlanLike, policy: QuantPolicy) -> Params:
+    f = functools.partial(_fold_linear_leaf, policy=policy)
     out = dict(layer)
-    out["in_proj"] = f(layer["in_proj"], plan.mlp_in, _stat(stats, "in_proj"))
-    out["out_proj"] = f(layer["out_proj"], plan.mlp_out, _stat(stats, "out_proj"))
+    out["in_proj"] = f(layer["in_proj"], plan, "in_proj",
+                       _stat(stats, "in_proj"))
+    out["out_proj"] = f(layer["out_proj"], plan, "out_proj",
+                        _stat(stats, "out_proj"))
     return out
 
 
@@ -218,13 +346,19 @@ def _fold_mamba(layer: Params, stats, plan: TransformPlan, policy: QuantPolicy) 
 
 def fold_quantize(params: Params, cfg: ModelConfig, *,
                   policy: QuantPolicy = QuantPolicy(),
-                  plan: TransformPlan = TransformPlan(),
+                  plan: PlanLike = TransformPlan(),
                   stats: dict[str, CalibStats] | None = None) -> Params:
-    """bf16 params → serving params (quantized linears, rest untouched)."""
+    """bf16 params → serving params (quantized linears, rest untouched).
+
+    ``plan`` is either the legacy global :class:`TransformPlan` or a
+    per-layer :class:`repro.autoplan.plan.LayerwisePlan`; a uniform
+    layerwise plan folds identically to its global equivalent.
+    """
     out: Params = {"embed": params["embed"], "final_ln": params["final_ln"]}
     if policy.quantize_lm_head:
-        out["lm_head"] = _fold_linear_leaf(
-            params["lm_head"], "rotate", None, alpha=plan.alpha, policy=policy)
+        out["lm_head"] = _fold_stacked(
+            params["lm_head"]["w"], "rotate", None, alpha=_base_plan(plan).alpha,
+            policy=policy, bias=params["lm_head"].get("b"))
     else:
         out["lm_head"] = params["lm_head"]
 
@@ -266,5 +400,8 @@ def _first_layer(stats):
     """Slice layer-stacked stats down to a single (broadcastable) layer."""
     if stats is None:
         return None
-    return {k: dataclasses.replace(v, act_absmax=v.act_absmax[:1])
+    return {k: dataclasses.replace(
+                v, act_absmax=v.act_absmax[:1],
+                act_samples=None if v.act_samples is None
+                else v.act_samples[:1])
             for k, v in stats.items()}

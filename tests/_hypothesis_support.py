@@ -1,0 +1,80 @@
+"""Optional-import shim for ``hypothesis``.
+
+The property tests use a small, fixed subset of the hypothesis API
+(``given``, ``settings``, ``st.integers`` / ``st.floats`` /
+``st.sampled_from``).  When hypothesis is installed (requirements-dev.txt)
+the real library is used unchanged; when it is absent the fallback below
+replays a deterministic pseudo-random sample of examples so the property
+tests still execute instead of killing collection with an ImportError.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised when hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Minimal strategy: a callable drawing one example from an RNG."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    st = _Strategies()
+
+    _DEFAULT_EXAMPLES = 10
+
+    def settings(max_examples: int = _DEFAULT_EXAMPLES, **_kw):
+        """Record max_examples on the (already given-wrapped) test."""
+
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        """Run the test over a deterministic sample of drawn examples."""
+
+        def deco(fn):
+            # NOTE: the wrapper must take NO parameters — pytest resolves
+            # wrapper signature params as fixtures, and functools.wraps
+            # would re-expose the strategy params through __wrapped__.
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                rng = random.Random(0)
+                for _ in range(n):
+                    drawn = tuple(s.example(rng) for s in strategies)
+                    fn(*drawn)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

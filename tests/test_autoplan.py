@@ -1,0 +1,317 @@
+"""Autoplan subsystem tests: LayerwisePlan serde/interop, layerwise fold
+(uniform round-trip + mixed kinds via had_mask), the difficulty-guided
+search, calibration sample retention, fold degradation paths, and the
+ServingEngine regression fixes that ride in the same PR."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.autoplan import (
+    LayerwisePlan, ModuleChoice, SearchConfig, collect_telemetry,
+    plan_errors, search_plan,
+)
+from repro.configs.base import get_config
+from repro.core.calibration import update_stats
+from repro.core.qlinear import QuantPolicy
+from repro.core.transforms import TransformPlan
+from repro.models.api import get_model
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.fold import collect_calibration, fold_quantize
+
+KEY = jax.random.PRNGKey(0)
+POLICY = QuantPolicy(weight_bits=4, act_bits=4, use_kernels="never")
+
+
+def _setup(arch="stablelm_3b", keep_samples=0, **overrides):
+    cfg = get_config(arch).reduced(**overrides)
+    model = get_model(cfg)
+    params = model.init(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    stats = collect_calibration(model, params, cfg, [{"tokens": toks}],
+                                keep_samples=keep_samples)
+    return cfg, model, params, toks, stats
+
+
+# --- plan IR ---------------------------------------------------------------
+
+
+def test_plan_json_roundtrip():
+    plan = LayerwisePlan(
+        num_layers=2,
+        modules={"down_proj": (ModuleChoice("smooth_rotate", 0.7),
+                               ModuleChoice("rotate")),
+                 "k_proj": (ModuleChoice("rotate"), ModuleChoice("none"))},
+        base=TransformPlan(alpha=0.6), arch="test")
+    again = LayerwisePlan.from_json(plan.to_json())
+    assert again == plan
+    assert again.choice_for("down_proj", 0) == ModuleChoice("smooth_rotate", 0.7)
+    # unplanned module falls back to base
+    assert again.choice_for("o_proj", 1).kind == "rotate"
+    assert again.choice_for("o_proj", 1).alpha == 0.6
+
+
+def test_plan_global_interop():
+    g = TransformPlan(alpha=0.65)
+    lw = LayerwisePlan.from_global(g, num_layers=3)
+    assert lw.is_uniform()
+    assert lw.to_global() == g
+    mixed = LayerwisePlan(
+        num_layers=2,
+        modules={"k_proj": (ModuleChoice("rotate"), ModuleChoice("none"))})
+    assert not mixed.is_uniform()
+    with pytest.raises(ValueError):
+        mixed.to_global()
+
+
+def test_plan_validates_layer_count():
+    with pytest.raises(ValueError):
+        LayerwisePlan(num_layers=3,
+                      modules={"k_proj": (ModuleChoice("rotate"),)})
+
+
+def test_transform_plan_kind_for_fallback():
+    """Unknown module names get the conservative rotation default."""
+    plan = TransformPlan(attn_in="none", attn_out="none", mlp_in="none",
+                         mlp_out="none")
+    assert plan.kind_for("some_new_proj") == "rotate"
+    assert plan.kind_for("q_proj") == "none"
+
+
+# --- layerwise fold --------------------------------------------------------
+
+
+def test_fold_uniform_layerwise_matches_global():
+    """Acceptance: global plan and its uniform LayerwisePlan broadcast
+    fold to IDENTICAL serving params (and logits)."""
+    cfg, model, params, toks, stats = _setup()
+    g = TransformPlan()
+    lw = LayerwisePlan.from_global(g, cfg.num_layers, arch=cfg.name)
+    qg = fold_quantize(params, cfg, policy=POLICY, plan=g, stats=stats)
+    ql = fold_quantize(params, cfg, policy=POLICY, plan=lw, stats=stats)
+    la, lb = jax.tree.leaves(qg), jax.tree.leaves(ql)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    og = model.forward(qg, cfg, toks, policy=POLICY)
+    ol = model.forward(ql, cfg, toks, policy=POLICY)
+    np.testing.assert_array_equal(np.asarray(og), np.asarray(ol))
+
+
+def test_fold_mixed_kinds_per_layer():
+    """A rotate/none mixed stack folds each layer with its own kind:
+    per-layer weights match the corresponding uniform folds, and the
+    had_mask gates the online rotation."""
+    cfg, model, params, toks, stats = _setup()
+    mixed = LayerwisePlan(
+        num_layers=cfg.num_layers,
+        modules={"k_proj": (ModuleChoice("rotate"), ModuleChoice("none"))})
+    qm = fold_quantize(params, cfg, policy=POLICY, plan=mixed, stats=stats)
+    rot = fold_quantize(params, cfg, policy=POLICY,
+                        plan=TransformPlan(attn_in="rotate"), stats=stats)
+    none = fold_quantize(params, cfg, policy=POLICY,
+                         plan=TransformPlan(attn_in="none"), stats=stats)
+    qw_m = qm["layers"]["attn"]["wq"]["qw"]
+    qw_r = rot["layers"]["attn"]["wq"]["qw"]
+    qw_n = none["layers"]["attn"]["wq"]["qw"]
+    assert qw_m.had_dim == cfg.d_model
+    np.testing.assert_array_equal(np.asarray(qw_m.had_mask), [1.0, 0.0])
+    np.testing.assert_array_equal(np.asarray(qw_m.w_q[0]),
+                                  np.asarray(qw_r.w_q[0]))
+    np.testing.assert_array_equal(np.asarray(qw_m.w_q[1]),
+                                  np.asarray(qw_n.w_q[1]))
+    logits = model.forward(qm, cfg, toks, policy=POLICY)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+def test_fold_mixed_alphas_per_layer():
+    """Same kind, different α per layer: folds via the grouped path and
+    stays numerically sane end to end."""
+    cfg, model, params, toks, stats = _setup()
+    mixed = LayerwisePlan(
+        num_layers=cfg.num_layers,
+        modules={"down_proj": (ModuleChoice("smooth_rotate", 0.5),
+                               ModuleChoice("smooth_rotate", 0.8))})
+    qm = fold_quantize(params, cfg, policy=POLICY, plan=mixed, stats=stats)
+    qw = qm["layers"]["mlp"]["wd"]["qw"]
+    assert qw.had_mask is None          # both layers rotate → no gate
+    assert qw.smooth is not None and qw.smooth.shape[0] == cfg.num_layers
+    lf = np.asarray(model.forward(params, cfg, toks), np.float32)
+    lq = np.asarray(model.forward(qm, cfg, toks, policy=POLICY), np.float32)
+    assert np.linalg.norm(lq - lf) / np.linalg.norm(lf) < 1.0
+
+
+def test_fold_moe_experts_honor_per_layer_rotation():
+    """A mixed gate_proj plan reaches the EXPERT stacks too: rotated
+    layers fold Rᵀ into wg/wu and the dispatch path gates the online
+    rotation with had_mask."""
+    cfg, model, params, toks, stats = _setup("arctic_480b")
+    assert cfg.first_dense_layers == 0 and cfg.num_layers == 2
+    mixed = LayerwisePlan(
+        num_layers=cfg.num_layers,
+        modules={"gate_proj": (ModuleChoice("rotate"), ModuleChoice("none"))})
+    qm = fold_quantize(params, cfg, policy=POLICY, plan=mixed, stats=stats)
+    qw = qm["moe_layers"]["moe"]["wg"]["qw"]
+    assert qw.had_dim == cfg.d_model
+    np.testing.assert_array_equal(np.asarray(qw.had_mask), [1.0, 0.0])
+    out = model.forward(qm, cfg, toks, policy=POLICY)
+    logits = out[0] if isinstance(out, tuple) else out
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+def test_search_moe_gate_proj_rotation_only():
+    """The search must not plan smoothing for moe gate_proj — experts
+    cannot deploy it (no per-expert division in the dispatch path)."""
+    cfg, model, params, toks, stats = _setup("deepseek_v2_lite_16b",
+                                             keep_samples=32)
+    plan, _ = search_plan(params, cfg, stats,
+                          search=SearchConfig(alpha_grid=(0.5,), top_k=10))
+    assert "gate_proj" in plan.modules
+    for c in plan.choices_for("gate_proj"):
+        assert c.kind in ("none", "rotate")
+
+
+@pytest.mark.parametrize("arch", ["mamba2_780m", "deepseek_v2_lite_16b"])
+def test_fold_layerwise_other_families(arch):
+    """ssm/moe families accept a searched LayerwisePlan end to end."""
+    cfg, model, params, toks, stats = _setup(arch, keep_samples=32)
+    plan, _ = search_plan(params, cfg, stats,
+                          search=SearchConfig(alpha_grid=(0.5, 0.7), top_k=2))
+    q = fold_quantize(params, cfg, policy=POLICY, plan=plan, stats=stats)
+    out = model.forward(q, cfg, toks, policy=POLICY)
+    logits = out[0] if isinstance(out, tuple) else out
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+# --- fold degradation paths (previously untested) --------------------------
+
+
+def test_fold_degrades_smooth_rotate_to_rotate_without_stats():
+    cfg, model, params, toks, _ = _setup()
+    q = fold_quantize(params, cfg, policy=POLICY,
+                      plan=TransformPlan(mlp_out="smooth_rotate"), stats=None)
+    qw = q["layers"]["mlp"]["wd"]["qw"]
+    assert qw.had_dim > 0               # rotation survived
+    assert qw.smooth is None            # smoothing silently dropped
+
+
+def test_fold_degrades_smooth_to_none_without_stats():
+    cfg, model, params, toks, _ = _setup()
+    q = fold_quantize(params, cfg, policy=POLICY,
+                      plan=TransformPlan(attn_in="smooth", attn_out="smooth",
+                                         mlp_in="smooth", mlp_out="smooth"),
+                      stats=None)
+    qw = q["layers"]["mlp"]["wd"]["qw"]
+    assert qw.had_dim == 0 and qw.smooth is None
+
+
+# --- calibration sample retention ------------------------------------------
+
+
+def test_calibration_keeps_samples_capped():
+    cfg, model, params, toks, stats = _setup(keep_samples=16)
+    st = stats["down_proj"]
+    L = cfg.num_layers
+    assert st.act_samples is not None
+    assert st.act_samples.shape == (L, 16, cfg.d_ff)   # down_proj input = d_ff
+    # a second batch must not grow past the cap — but MUST contribute:
+    # merging thins evenly instead of freezing on the first batch's prefix
+    taps = {"down_proj": jnp.full((L, 2, 16, cfg.d_ff), 7.0)}
+    stats2 = update_stats(stats, taps, keep_samples=16)
+    s2 = stats2["down_proj"].act_samples
+    assert s2.shape == (L, 16, cfg.d_ff)
+    assert bool(jnp.any(s2 == 7.0))        # second batch represented
+    assert bool(jnp.any(s2 != 7.0))        # first batch still represented
+    assert stats2["down_proj"].n_batches == st.n_batches + 1
+
+
+def test_calibration_without_samples_unchanged():
+    cfg, model, params, toks, stats = _setup(keep_samples=0)
+    assert all(v.act_samples is None for v in stats.values())
+
+
+# --- the search ------------------------------------------------------------
+
+
+def test_search_beats_or_matches_fixed_plan():
+    """The searched plan force-includes the fixed plan's choices, so its
+    summed Eq. (2) error can never exceed the fixed §V plan's."""
+    cfg, model, params, toks, stats = _setup(keep_samples=64)
+    search = SearchConfig(alpha_grid=(0.5, 0.7), top_k=2)
+    auto, info = search_plan(params, cfg, stats, search=search)
+    fixed = LayerwisePlan.from_global(TransformPlan(), auto.num_layers)
+    e_auto = sum(float(np.sum(v)) for v in
+                 plan_errors(auto, params, cfg, stats, search).values())
+    e_fixed = sum(float(np.sum(v)) for v in
+                  plan_errors(fixed, params, cfg, stats, search).values())
+    assert e_auto <= e_fixed * (1 + 1e-6), (e_auto, e_fixed)
+    assert auto.modules                 # actually planned something
+    for module, mi in info.items():
+        assert np.isfinite(mi["error"][mi["best"],
+                                       np.arange(len(mi["best"]))]).all()
+
+
+def test_telemetry_profiles():
+    cfg, model, params, toks, stats = _setup(keep_samples=32)
+    plan, _ = search_plan(params, cfg, stats,
+                          search=SearchConfig(alpha_grid=(0.5,), top_k=2))
+    tel = collect_telemetry(plan, params, cfg, stats)
+    assert set(tel) == set(plan.modules)
+    for t in tel.values():
+        assert len(t.difficulty_pre) == plan.num_layers
+        assert all(np.isfinite(t.difficulty_post))
+
+
+# --- ServingEngine regressions ---------------------------------------------
+
+
+def test_engine_admit_preserves_kv_bits():
+    """_admit used to rebuild slot caches with bits=None, silently
+    discarding the configured KV-cache quantization."""
+    cfg = get_config("stablelm_3b").reduced()
+    model = get_model(cfg)
+    params = model.init(KEY, cfg)
+    eng = ServingEngine(model, params, cfg, max_slots=1, max_len=32,
+                        kv_bits=8)
+    assert eng.caches[0].quantized
+    eng.submit(Request(uid=0, prompt=np.asarray([1, 2, 3], np.int32),
+                       max_new_tokens=2))
+    eng.step()
+    assert eng.caches[0].quantized      # admitted cache kept int8 storage
+
+
+def test_engine_respects_max_new_tokens_one():
+    """The prefill-sampled token can already complete a request; the old
+    admit path parked it in a slot and decoded one token too many."""
+    cfg = get_config("stablelm_3b").reduced()
+    model = get_model(cfg)
+    params = model.init(KEY, cfg)
+    eng = ServingEngine(model, params, cfg, max_slots=1, max_len=32)
+    req = Request(uid=0, prompt=np.asarray([1, 2, 3], np.int32),
+                  max_new_tokens=1)
+    eng.submit(req)
+    done = eng.run(max_ticks=10)
+    assert [r.uid for r in done] == [0]
+    assert len(req.out_tokens) == 1
+
+
+def test_engine_run_returns_all_retired():
+    """run() used to snapshot the queue and lose requests admitted before
+    or submitted after the snapshot."""
+    cfg = get_config("stablelm_3b").reduced()
+    model = get_model(cfg)
+    params = model.init(KEY, cfg)
+    eng = ServingEngine(model, params, cfg, max_slots=1, max_len=64)
+    r1 = Request(uid=1, prompt=np.asarray([1, 2, 3], np.int32),
+                 max_new_tokens=3)
+    eng.submit(r1)
+    eng.step()                          # r1 admitted into a slot (not queue)
+    r2 = Request(uid=2, prompt=np.asarray([4, 5], np.int32),
+                 max_new_tokens=3)
+    eng.submit(r2)                      # submitted "mid-run"
+    done = eng.run(max_ticks=50)
+    assert {r.uid for r in done} == {1, 2}
+    assert all(r.done for r in done)

@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.launch import compat
 from repro.launch.hlo_analysis import (
     HloMetrics, _is_s2_tensor, _type_bytes, analyze_hlo,
 )
@@ -69,10 +70,9 @@ def test_nested_scan_trips():
 
 
 def test_collective_detection_and_wire():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     # single-device: no collectives expected — the parser must return 0
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         compiled = _compile(lambda a: jnp.sum(a),
                             jax.ShapeDtypeStruct((8, 8), jnp.float32))
     m = analyze_hlo(compiled.as_text())

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_support import given, settings, st
 
 from repro.core.qlinear import QuantPolicy, qlinear, quantize_weight
 from repro.kernels import ops, ref
@@ -95,6 +95,43 @@ def test_fused_path_matches_qlinear_xla():
     # by ~Δa·Δw; compare at the tensor level
     rel = np.linalg.norm(y_kernel - y_xla) / np.linalg.norm(y_xla)
     assert rel < 0.05, rel
+
+
+def test_qlinear_interpret_policy_matches_xla():
+    """qlinear's interpret dispatch must hand the fused path the RAW
+    activation — smooth/rotation are the fused path's job (regression:
+    they used to be applied twice, x/s² and H(Hx))."""
+    d = 256
+    x = jax.random.normal(KEY, (8, d)).astype(jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(3), (d, 64)) * 0.05
+    from repro.core.hadamard import apply_hadamard
+
+    s = jnp.abs(jax.random.normal(jax.random.PRNGKey(4), (d,))) + 0.5
+    wf = apply_hadamard((w * s[:, None]).astype(jnp.float32), axis=0)
+    qw = quantize_weight(wf, bits=4, pack=True, had_dim=d, smooth=s)
+    y_interp = np.asarray(
+        qlinear(x, qw, QuantPolicy(use_kernels="interpret")), np.float32)
+    y_xla = np.asarray(
+        qlinear(x, qw, QuantPolicy(use_kernels="never")), np.float32)
+    rel = np.linalg.norm(y_interp - y_xla) / np.linalg.norm(y_xla)
+    assert rel < 0.05, rel
+
+
+def test_qlinear_interpret_with_had_mask_falls_back_to_xla():
+    """Mixed layerwise stacks (had_mask) aren't supported by the fused
+    path; qlinear must take the gated XLA path — identical output."""
+    import dataclasses as dc
+
+    d = 256
+    x = jax.random.normal(KEY, (4, d)).astype(jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(5), (d, 32)) * 0.05
+    qw = quantize_weight(w.astype(jnp.float32), bits=4, pack=True, had_dim=d)
+    qw = dc.replace(qw, had_mask=jnp.asarray(0.0))   # un-rotated layer
+    y_interp = np.asarray(
+        qlinear(x, qw, QuantPolicy(use_kernels="interpret")), np.float32)
+    y_xla = np.asarray(
+        qlinear(x, qw, QuantPolicy(use_kernels="never")), np.float32)
+    np.testing.assert_array_equal(y_interp, y_xla)
 
 
 @settings(max_examples=10, deadline=None)

@@ -15,6 +15,7 @@ from repro.optim import (
     adamw, apply_error_feedback, compress_decompress, global_norm,
     warmup_cosine, warmup_linear,
 )
+from repro.launch import compat
 from repro.runtime.fault_tolerance import (
     Heartbeat, PreemptionHandler, StragglerPolicy,
 )
@@ -74,15 +75,14 @@ def test_compressed_psum_inside_shard_map():
 
     from repro.optim import compressed_psum
 
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("pod",))
     g = jax.random.normal(KEY, (1, 128)) * 0.01
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         def f(gl):
             return compressed_psum({"g": gl[0]}, jax.random.PRNGKey(1),
                                    axis="pod")["g"]
-        out = jax.jit(jax.shard_map(f, in_specs=(P("pod", None),),
+        out = jax.jit(compat.shard_map(f, in_specs=(P("pod", None),),
                                     out_specs=P()))(g)
     expected = np.asarray(g.sum(0))
     got = np.asarray(out)
@@ -126,8 +126,7 @@ def test_elastic_restore_under_different_sharding(tmp_path):
     """Checkpoints are mesh-agnostic: restore into any target sharding."""
     tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
     save_pytree(tree, str(tmp_path / "ck"))
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     template = {"w": jax.device_put(jnp.zeros((4, 4)),
