@@ -15,6 +15,8 @@ import os
 ROOT = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
 AUTOPLAN_ROOT = os.path.join(os.path.dirname(__file__), "..", "experiments",
                              "autoplan")
+SERVING_PATH = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                            "serving", "throughput.json")
 
 
 def load(mesh: str) -> list[dict]:
@@ -85,6 +87,29 @@ def autoplan_table(rows: list[dict]) -> str:
     return "\n".join(out)
 
 
+def load_serving() -> list[dict]:
+    if not os.path.exists(SERVING_PATH):
+        return []
+    with open(SERVING_PATH) as f:
+        return json.load(f)
+
+
+def serving_table(rows: list[dict]) -> str:
+    """Batched vs per-slot engine throughput (serving_throughput.py)."""
+    out = ["| arch | slots | engine | tok/s | dispatches/tick | "
+           "tick GFLOPs (roofline) | batched ≥ per-slot |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        for eng in ("batched", "per_slot"):
+            e = r[eng]
+            out.append(
+                f"| {r['arch']} | {r['max_slots']} | {eng} | "
+                f"{e['tok_s']:.1f} | {e['dispatches_per_tick']:.2f} | "
+                f"{r['tick_gflops_roofline']:.4g} | "
+                f"{'yes' if r['batched_ge_per_slot'] else 'NO'} |")
+    return "\n".join(out)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="")
@@ -102,6 +127,10 @@ def main(argv=None):
     if ap_rows:
         parts.append(f"\n### Autoplan telemetry ({len(ap_rows)} archs)\n")
         parts.append(autoplan_table(ap_rows))
+    sv_rows = load_serving()
+    if sv_rows:
+        parts.append(f"\n### Serving throughput ({len(sv_rows)} archs)\n")
+        parts.append(serving_table(sv_rows))
     text = "\n".join(parts)
     if args.out:
         with open(args.out, "w") as f:

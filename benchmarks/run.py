@@ -14,7 +14,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (
         activation_distributions, error_vs_difficulty, kernel_bench,
-        massive_outliers, model_quant, transform_comparison,
+        massive_outliers, model_quant, serving_throughput,
+        transform_comparison,
     )
 
     modules = [
@@ -24,6 +25,7 @@ def main() -> None:
         ("fig 5 massive outliers + eqs 7-9", massive_outliers),
         ("kernel microbench", kernel_bench),
         ("model-level quantization", model_quant),
+        ("serving throughput (batched vs per-slot)", serving_throughput),
     ]
     failures = []
     for label, mod in modules:

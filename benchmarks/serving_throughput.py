@@ -1,0 +1,130 @@
+"""Serving-engine throughput: batched-slot decode vs the per-slot loop.
+
+The batched ``ServingEngine`` issues ONE ``(max_slots, 1)`` jitted decode
+dispatch per tick; the ``PerSlotServingEngine`` baseline issues one
+``(1, 1)`` dispatch per ACTIVE slot — same useful FLOPs
+(``launch.roofline.serving_tick_flops``), ``max_slots``× the dispatch and
+weight-stream overhead.  This module serves an identical request set
+through both engines, reports tokens/s and decode dispatches/tick, and
+cross-checks the batched tick against the roofline decode-cell shape.
+
+Writes ``experiments/serving/throughput.json`` for benchmarks/report.py
+(§Serving table).  CSV rows (benchmarks.run idiom):
+``serving_<arch>_<engine>,us_per_token,tok_s=..;dispatches_per_tick=..``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import get_config
+from repro.launch.roofline import serving_tick_flops
+from repro.models.api import get_model
+from repro.serving.engine import PerSlotServingEngine, Request, ServingEngine
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "serving", "throughput.json")
+
+ENGINES = {"batched": ServingEngine, "per_slot": PerSlotServingEngine}
+
+
+def _requests(cfg, n: int, max_new: int) -> list[Request]:
+    rng = np.random.default_rng(0)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=(4 + i % 5,)),
+                    max_new_tokens=max_new) for i in range(n)]
+
+
+def _serve(engine_cls, model, params, cfg, *, max_slots, max_len, n_requests,
+           max_new):
+    eng = engine_cls(model, params, cfg, max_slots=max_slots, max_len=max_len)
+    for r in _requests(cfg, n_requests, max_new):
+        eng.submit(r)
+    t0 = time.perf_counter()
+    done = eng.run(max_ticks=10_000)
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    return {
+        "tokens": toks,
+        "seconds": round(dt, 4),
+        "tok_s": round(toks / max(dt, 1e-9), 2),
+        "decode_dispatches": eng.decode_dispatches,
+        "ticks": eng.ticks,
+        "dispatches_per_tick": round(eng.decode_dispatches / max(eng.ticks, 1),
+                                     3),
+        "outputs": {r.uid: list(r.out_tokens) for r in done},
+    }
+
+
+def bench_arch(arch: str, *, max_slots: int = 4, max_len: int = 64,
+               n_requests: int = 8, max_new: int = 8) -> dict:
+    cfg = get_config(arch).reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    row = {"arch": arch, "max_slots": max_slots, "n_requests": n_requests,
+           "max_new": max_new,
+           # roofline cross-check: one batched tick == one decode cell of
+           # global_batch=max_slots (2·N_active·max_slots useful FLOPs)
+           "tick_gflops_roofline": round(
+               serving_tick_flops(cfg, max_slots) / 1e9, 6)}
+    for name, cls in ENGINES.items():
+        # warmup populates the shared jit caches (prefill per prompt
+        # length + this engine's decode shape) so timing excludes
+        # compiles; max_new=2 reaches every compile at minimal token cost
+        _serve(cls, model, params, cfg, max_slots=max_slots, max_len=max_len,
+               n_requests=n_requests, max_new=2)
+        row[name] = _serve(cls, model, params, cfg, max_slots=max_slots,
+                           max_len=max_len, n_requests=n_requests,
+                           max_new=max_new)
+    row["greedy_tokens_identical"] = (
+        row["batched"].pop("outputs") == row["per_slot"].pop("outputs"))
+    row["batched_ge_per_slot"] = (
+        row["batched"]["tok_s"] >= row["per_slot"]["tok_s"])
+    return row
+
+
+def run(archs=("stablelm_3b",), *, max_slots: int = 4, n_requests: int = 8,
+        max_new: int = 8, out_path: str = ARTIFACT) -> list[dict]:
+    rows = []
+    for arch in archs:
+        row = bench_arch(arch, max_slots=max_slots, n_requests=n_requests,
+                         max_new=max_new)
+        rows.append(row)
+        for name in ENGINES:
+            r = row[name]
+            emit(f"serving_{arch}_{name}",
+                 1e6 * r["seconds"] / max(r["tokens"], 1),
+                 f"tok_s={r['tok_s']};dispatches_per_tick="
+                 f"{r['dispatches_per_tick']}")
+        emit(f"serving_{arch}_batched_ge_per_slot", 0.0,
+             f"holds={row['batched_ge_per_slot']};greedy_identical="
+             f"{row['greedy_tokens_identical']}")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None,
+                    help="repeatable; default stablelm_3b")
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--out", default=ARTIFACT)
+    args = ap.parse_args(argv)
+    run(tuple(args.arch or ("stablelm_3b",)), max_slots=args.max_slots,
+        n_requests=args.requests, max_new=args.max_new, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -20,7 +20,8 @@ from typing import Any
 from repro.configs.base import ModelConfig, ShapeCell
 from repro.launch.hlo_analysis import HloMetrics
 
-__all__ = ["HW", "RooflineReport", "roofline", "model_params", "model_flops"]
+__all__ = ["HW", "RooflineReport", "roofline", "model_params", "model_flops",
+           "serving_decode_cell", "serving_tick_flops"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +103,26 @@ def model_flops(cfg: ModelConfig, cell: ShapeCell) -> float:
         return 2.0 * active * tokens
     tokens = cell.global_batch  # one new token per sequence
     return 2.0 * active * tokens
+
+
+def serving_decode_cell(max_slots: int, max_len: int = 256) -> ShapeCell:
+    """The serving engine's batched decode tick as a roofline shape cell.
+
+    ``ServingEngine.step`` issues ONE ``(max_slots, 1)`` decode program
+    per tick — exactly a ``decode``-kind cell with ``global_batch ==
+    max_slots``, i.e. the shape the ``decode_*`` roofline cells already
+    model.  The per-slot baseline instead issues ``n_active`` batch-1
+    programs for the SAME useful FLOPs, paying the dispatch + weight-
+    stream overhead once per slot; benchmarks/serving_throughput.py uses
+    this cell to cross-check measured tokens/tick against the model.
+    """
+    return ShapeCell(f"serve_decode_b{max_slots}", max_len, max_slots,
+                     "decode")
+
+
+def serving_tick_flops(cfg: ModelConfig, max_slots: int) -> float:
+    """Useful model FLOPs of one batched engine tick (2·N_active·slots)."""
+    return model_flops(cfg, serving_decode_cell(max_slots))
 
 
 @dataclasses.dataclass

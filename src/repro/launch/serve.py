@@ -27,7 +27,7 @@ from repro.core.transforms import TransformPlan
 from repro.data import calibration_stream, synthetic_batches
 from repro.launch.mesh import make_test_mesh
 from repro.models.api import get_model
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import PerSlotServingEngine, Request, ServingEngine
 from repro.serving.fold import collect_calibration, fold_quantize
 from repro.launch import compat
 
@@ -56,6 +56,11 @@ def main(argv=None):
                     help="load a saved LayerwisePlan JSON instead of the "
                          "fixed §V plan (overridden by --auto-plan)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--engine", default="batched",
+                    choices=["batched", "per-slot"],
+                    help="batched: ONE (max_slots, 1) decode dispatch per "
+                         "tick (default); per-slot: the original one-"
+                         "dispatch-per-active-slot baseline")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -118,9 +123,11 @@ def main(argv=None):
             print(f"calibrated + folded W{args.weight_bits}A{args.act_bits} "
                   f"in {time.time() - t0:.1f}s (plan: {plan_desc})")
 
-        eng = ServingEngine(model, params, cfg, max_slots=args.max_slots,
-                            max_len=args.max_len, policy=policy,
-                            kv_bits=args.kv_bits or None)
+        engine_cls = (ServingEngine if args.engine == "batched"
+                      else PerSlotServingEngine)
+        eng = engine_cls(model, params, cfg, max_slots=args.max_slots,
+                         max_len=args.max_len, policy=policy,
+                         kv_bits=args.kv_bits or None)
         rng = np.random.default_rng(0)
         for i in range(args.requests):
             eng.submit(Request(
@@ -132,8 +139,11 @@ def main(argv=None):
         done = eng.run(max_ticks=10_000)
         dt = time.time() - t0
         toks = sum(len(r.out_tokens) for r in done)
+        dpt = eng.decode_dispatches / max(eng.ticks, 1)
         print(f"served {len(done)}/{args.requests} requests, {toks} tokens "
-              f"in {dt:.2f}s ({toks / max(dt, 1e-9):.1f} tok/s)")
+              f"in {dt:.2f}s ({toks / max(dt, 1e-9):.1f} tok/s, "
+              f"{args.engine} engine: {eng.decode_dispatches} decode "
+              f"dispatches over {eng.ticks} ticks = {dpt:.2f}/tick)")
         for r in done[:3]:
             print(f"  req {r.uid}: {r.out_tokens[:12]}...")
 

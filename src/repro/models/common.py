@@ -31,6 +31,7 @@ __all__ = [
     "attention_scores", "init_attn", "attn_apply", "init_mlp", "mlp_apply",
     "init_embedding", "embed", "cross_entropy", "KVCache", "init_kv_cache",
     "cache_update", "cache_read", "stack_layer_params", "scan_layers",
+    "batch_slot_cache", "cache_at", "write_slot",
 ]
 
 
@@ -213,7 +214,9 @@ def attention_scores(q: jax.Array, k: jax.Array, v: jax.Array, *,
     q: (b, sq, hq, d); k/v: (b, sk, hkv, d); hq % hkv == 0.
     ``q_offset``: absolute position of q[0] (decode: cache length).
     ``window``: sliding-window size (0 = full).  ``length``: valid kv
-    prefix length for decode against a preallocated cache.
+    prefix length for decode against a preallocated cache.  ``q_offset``
+    and ``length`` may each be a scalar or a (b,) vector of per-row
+    values (slot-major batched serving, incl. multi-token chunks).
     """
     b, sq, hq, d = q.shape
     _, sk, hkv, _ = k.shape
@@ -225,7 +228,7 @@ def attention_scores(q: jax.Array, k: jax.Array, v: jax.Array, *,
             oc = attention_scores(
                 qc, k, v, causal=causal,
                 q_offset=(jnp.asarray(q_offset) + idx * _CHUNK_Q),
-                window=window, length=length)
+                window=window, length=length, bf16_io=bf16_io)
             return carry, oc
         _, chunks = jax.lax.scan(one_chunk, (),
                                  jnp.arange(sq // _CHUNK_Q))
@@ -235,16 +238,22 @@ def attention_scores(q: jax.Array, k: jax.Array, v: jax.Array, *,
     qg = q.reshape(b, sq, hkv, group, d)
     logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
                         k.astype(jnp.float32)) * (d ** -0.5)
-    q_pos = jnp.arange(sq) + q_offset
+    # q_offset and length may each be a scalar or a (b,) per-row vector
+    # (slot-major batched serving); masks carry a leading broadcast axis
+    # of size B ∈ {1, b} so every combination shares one code path.
+    q_off = jnp.asarray(q_offset).reshape(-1)          # (1,) or (b,)
+    larr = None if length is None else jnp.asarray(length).reshape(-1)
+    B = max(q_off.size, 1 if larr is None else larr.size)
+    q_pos = q_off[:, None] + jnp.arange(sq)[None]      # (1|b, sq)
     k_pos = jnp.arange(sk)
-    mask = jnp.ones((sq, sk), bool)
+    mask = jnp.ones((B, sq, sk), bool)
     if causal:
-        mask &= k_pos[None, :] <= q_pos[:, None]
+        mask &= k_pos[None, None, :] <= q_pos[:, :, None]
     if window:
-        mask &= k_pos[None, :] > q_pos[:, None] - window
-    if length is not None:
-        mask &= k_pos[None, :] < jnp.asarray(length).reshape(-1)[0]
-    logits = jnp.where(mask[None, None, None], logits, -1e30)
+        mask &= k_pos[None, None, :] > q_pos[:, :, None] - window
+    if larr is not None:
+        mask &= k_pos[None, None, :] < larr[:, None, None]
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
     if bf16_io:  # cast before P·V: cotangents (and any TP collectives on
         # them) stay bf16 — halves backward wire bytes (§Perf)
@@ -323,22 +332,30 @@ def cache_update(layer_kv: dict, k_new: jax.Array, v_new: jax.Array,
     """Write new k/v at position ``length`` into one layer's cache slice.
 
     layer_kv: dict(k, v[, k_scale, v_scale]) with shapes (b, S, h, d).
+    ``length`` may be a scalar (all rows at the same position — train /
+    single-sequence serving) or a (b,) vector of per-row positions (the
+    slot-major batched decode, where every slot sits at its own depth).
     Sliding-window caches write modulo the window (ring buffer).
     """
     S = layer_kv["k"].shape[1]
-    pos = (length % S) if window else length
-    def put(buf, val):
-        return jax.lax.dynamic_update_slice(
-            buf, val.astype(buf.dtype), (0, pos, 0, 0))
+    pos = jnp.asarray((length % S) if window else length)
+    if pos.ndim:  # per-slot write positions: vmap the row update
+        def put(buf, val):
+            def row(b1, v1, p1):
+                return jax.lax.dynamic_update_slice(
+                    b1, v1.astype(b1.dtype), (p1,) + (0,) * (b1.ndim - 1))
+            return jax.vmap(row)(buf, val, pos)
+    else:
+        def put(buf, val):
+            return jax.lax.dynamic_update_slice(
+                buf, val.astype(buf.dtype), (0, pos, 0, 0))
     out = dict(layer_kv)
     if "k_scale" in layer_kv and layer_kv["k_scale"] is not None:
         kq, ks = _quant_kv(k_new)
         vq, vs = _quant_kv(v_new)
         out["k"], out["v"] = put(layer_kv["k"], kq), put(layer_kv["v"], vq)
-        out["k_scale"] = jax.lax.dynamic_update_slice(
-            layer_kv["k_scale"], ks, (0, pos, 0, 0))
-        out["v_scale"] = jax.lax.dynamic_update_slice(
-            layer_kv["v_scale"], vs, (0, pos, 0, 0))
+        out["k_scale"] = put(layer_kv["k_scale"], ks)
+        out["v_scale"] = put(layer_kv["v_scale"], vs)
     else:
         out["k"], out["v"] = put(layer_kv["k"], k_new), put(layer_kv["v"], v_new)
     return out
@@ -351,6 +368,58 @@ def cache_read(layer_kv: dict):
         k = (k.astype(jnp.float32) * layer_kv["k_scale"]).astype(jnp.bfloat16)
         v = (v.astype(jnp.float32) * layer_kv["v_scale"]).astype(jnp.bfloat16)
     return k, v
+
+
+# -- slot-major batched caches (serving engine) -----------------------------
+#
+# The serving engine stacks ``max_slots`` independent sequences into ONE
+# cache pytree so a single (max_slots, 1) decode program serves every
+# active slot per tick.  Convention shared by all family caches (KVCache,
+# SSMCache, HybridCache): data leaves carry the slot axis at position 1
+# (layer-major stacking puts layers at axis 0), and bookkeeping leaves
+# (``length``) are scalars per sequence — vectorized to (max_slots,) by
+# :func:`batch_slot_cache` so every slot tracks its own depth.
+
+
+def batch_slot_cache(cache):
+    """Vectorize a cache's scalar ``length`` leaves to per-slot (b,) vectors.
+
+    ``cache`` comes from ``model.make_cache(cfg, max_slots, max_len)``;
+    data leaves already carry the slot axis at position 1 (they are
+    untouched), scalar leaves become (max_slots,) zeros-initialized
+    vectors so decode can thread per-slot positions.
+    """
+    wide = [a for a in jax.tree.leaves(cache) if jnp.ndim(a) >= 2]
+    slots = wide[0].shape[1]
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (slots,)) if jnp.ndim(a) == 0 else a,
+        cache)
+
+
+def cache_at(cache, slot: int):
+    """Batch-1 view of one slot of a slot-major batched cache.
+
+    Per-slot ``length`` vectors collapse back to the scalar the
+    single-sequence prefill/decode path expects, so the view is
+    interchangeable with a fresh ``make_cache(cfg, 1, max_len)``.
+    """
+    return jax.tree.map(
+        lambda a: a[slot] if a.ndim <= 1 else a[:, slot:slot + 1], cache)
+
+
+def write_slot(cache, slot_cache, slot: int):
+    """Write a batch-1 cache (e.g. a freshly prefilled prompt) into slot
+    ``slot`` of a slot-major batched cache.
+
+    Copies the FULL slot extent — including zero (or zero-scale) tail
+    positions — so a reused slot cannot leak stale keys/values or stale
+    int8 dequant scales from the previous occupant.
+    """
+    def put(dst, src):
+        if dst.ndim <= 1:  # per-slot length ← scalar slot length
+            return dst.at[slot].set(jnp.asarray(src).reshape(()).astype(dst.dtype))
+        return dst.at[:, slot].set(src[:, 0].astype(dst.dtype))
+    return jax.tree.map(put, cache, slot_cache)
 
 
 def flash_decode(q, layer_kv: dict, valid, *, dp_spec) -> jax.Array:
@@ -434,7 +503,12 @@ def _flash_decode_ok(cfg: ModelConfig, q, layer_kv) -> tuple[bool, Any]:
 def attn_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
                layer_kv: dict | None = None, length: jax.Array | int = 0,
                policy: QuantPolicy | None = None, taps: dict | None = None):
-    """Full attention block (pre-norm). Returns (y, updated layer_kv)."""
+    """Full attention block (pre-norm). Returns (y, updated layer_kv).
+
+    ``length`` may be a (b,) vector of per-row cache depths (slot-major
+    batched decode): RoPE positions, cache writes, and the valid-length
+    mask are then applied per row.
+    """
     b, s, _ = x.shape
     hd, hq, hkv = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
     h = rms_norm(x, p.get("ln"), cfg.norm_eps)
@@ -443,15 +517,17 @@ def attn_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
     q = dense(h, p["wq"], policy).reshape(b, s, hq, hd)
     k = dense(h, p["wk"], policy).reshape(b, s, hkv, hd)
     v = dense(h, p["wv"], policy).reshape(b, s, hkv, hd)
-    pos = jnp.arange(s) + length
+    larr = jnp.asarray(length)
+    pos = (larr[:, None] + jnp.arange(s)[None]) if larr.ndim \
+        else (jnp.arange(s) + larr)
     cos, sin = rope_angles(pos, hd, cfg.rope_theta)
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
     if layer_kv is not None:  # decode / cached prefill
         layer_kv = cache_update(layer_kv, k, v, length, window=cfg.attn_window)
-        valid = jnp.minimum(jnp.asarray(length) + s, layer_kv["k"].shape[1])
+        valid = jnp.minimum(larr + s, layer_kv["k"].shape[1])
         use_fd, dp_spec = (False, None)
-        if cfg.decode_flash:
+        if cfg.decode_flash and not larr.ndim:  # flash_decode: scalar only
             use_fd, dp_spec = _flash_decode_ok(cfg, q, layer_kv)
         if use_fd:
             out = flash_decode(q, layer_kv, valid, dp_spec=dp_spec)

@@ -154,6 +154,10 @@ def train_loss(params, cfg: ModelConfig, batch):
 
 def decode_step(params, cfg: ModelConfig, tokens, cache: HybridCache,
                 policy=None):
+    """One token per sequence.  Slot-major batched serving: the SSM/conv
+    states are position-free per batch row, and the shared-attention KV
+    lookups thread ``cache.length`` — scalar or per-slot (b,) vector —
+    through ``common.attn_apply`` (per-row RoPE/write/valid-mask)."""
     h = cm.embed(params["embed"], tokens)
     x, cache, _ = _backbone(params, cfg, h, cache=cache, policy=policy)
     return cm.dense(x, params["lm_head"], policy), cache

@@ -301,6 +301,11 @@ def prefill(params, cfg: ModelConfig, tokens, cache: SSMCache, policy=None):
 
 
 def decode_step(params, cfg: ModelConfig, tokens, cache: SSMCache, policy=None):
+    """One token per sequence.  The recurrence is position-free, so the
+    slot-major batched serving path needs no special handling here: each
+    batch row carries its own conv tail + SSM state (axis 1 of the cache
+    leaves), and ``cache.length`` may be a scalar or a per-slot vector —
+    it is pure bookkeeping for this family."""
     h = cm.embed(params["embed"], tokens)
     x, cache = _backbone(params, cfg, h, cache=cache, policy=policy)
     return cm.dense(x, params["lm_head"], policy), cache

@@ -232,7 +232,11 @@ def init_mla(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
 def mla_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
               layer_kv: dict | None = None, length=0,
               policy: QuantPolicy | None = None, taps: dict | None = None):
-    """MLA block. Cache stores the compressed latent (c_kv, k_rope) only."""
+    """MLA block. Cache stores the compressed latent (c_kv, k_rope) only.
+
+    ``length`` may be a (b,) vector of per-row cache depths (slot-major
+    batched decode), mirroring :func:`repro.models.common.attn_apply`.
+    """
     b, s, _ = x.shape
     H = cfg.num_heads
     nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
@@ -243,7 +247,9 @@ def mla_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
     q_nope, q_rope = q[..., :nd], q[..., nd:]
     dkv = cm.dense(h, p["wdkv"], policy)
     c_kv, k_rope = dkv[..., : cfg.kv_lora_rank], dkv[..., cfg.kv_lora_rank:]
-    pos = jnp.arange(s) + length
+    larr = jnp.asarray(length)
+    pos = (larr[:, None] + jnp.arange(s)[None]) if larr.ndim \
+        else (jnp.arange(s) + larr)
     cos, sin = cm.rope_angles(pos, rd, cfg.rope_theta)
     q_rope = cm.apply_rope(q_rope, cos, sin)
     k_rope = cm.apply_rope(k_rope[:, :, None, :], cos, sin)  # (b,s,1,rd)
@@ -421,6 +427,9 @@ def prefill(params, cfg: ModelConfig, tokens, cache, policy=None):
 
 
 def decode_step(params, cfg: ModelConfig, tokens, cache, policy=None):
+    """One token per sequence.  ``cache.length`` may be a scalar or a
+    per-slot (b,) vector (slot-major batched serving) — GQA and MLA
+    attention both thread it as per-row positions."""
     h = cm.embed(params["embed"], tokens)
     x, cache, _ = _backbone(params, cfg, h, cache=cache, length=cache.length,
                             policy=policy)

@@ -113,7 +113,13 @@ def prefill(params, cfg: ModelConfig, tokens, cache: cm.KVCache,
 
 def decode_step(params, cfg: ModelConfig, tokens, cache: cm.KVCache,
                 policy: QuantPolicy | None = None):
-    """One token per sequence against the cache."""
+    """One token per sequence against the cache.
+
+    ``cache.length`` may be a scalar (all rows at the same depth) or a
+    (batch,) vector of per-row depths — the slot-major batched serving
+    path, where each slot carries its own position (RoPE, cache write,
+    valid-length mask are all per row; see ``common.batch_slot_cache``).
+    """
     h = cm.embed(params["embed"], tokens)
     x, cache = _backbone(params, cfg, h, cache=cache, length=cache.length,
                          policy=policy)

@@ -1,23 +1,35 @@
 """Batched serving engine: continuous batching over a fixed slot grid.
 
-The engine owns a slot-structured KV cache (``max_slots`` sequences ×
-``max_len`` positions) and runs two jitted programs:
+The engine owns ONE slot-major cache pytree (``max_slots`` sequences ×
+``max_len`` positions — ``common.batch_slot_cache`` over the family's
+``make_cache``) and runs two jitted programs:
 
-  * ``prefill``    — admit one request into a free slot (prompt → cache)
-  * ``decode_step`` — one token for EVERY active slot (the batched path
-    whose roofline the decode_* shape cells measure)
+  * ``prefill``     — admit one request into a free slot (prompt → a
+    batch-1 cache, copied into the slot with ``common.write_slot``)
+  * ``decode_step`` — ONE ``(max_slots, 1)`` program per tick for EVERY
+    active slot (the batched shape the roofline decode cells model),
+    with per-slot positions threaded through the cache ``length``
+    vector and vectorized sampling over the slot axis.
 
 Requests are queued, admitted as slots free up, sampled greedily or by
 temperature, and retired on EOS/max_tokens — vLLM-style continuous
 batching reduced to its JAX-native core.  Weights may be the bf16 train
 params or the fold+quantized serving params (the paper's pipeline).
+
+``PerSlotServingEngine`` preserves the original one-dispatch-per-slot
+loop as the equivalence/throughput baseline: batched greedy output is
+token-identical to it (tests/test_serving_batched.py), while issuing
+``1`` decode dispatch per tick instead of ``n_active``.
+
+jit caches are shared process-wide per (model, cfg, policy), so
+constructing many engines (property tests, benchmarks) does not retrace.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from collections import deque
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -25,8 +37,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.qlinear import QuantPolicy
+from repro.models import common as cm
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = ["Request", "ServingEngine", "PerSlotServingEngine"]
 
 
 @dataclasses.dataclass
@@ -39,7 +52,41 @@ class Request:
     done: bool = False
 
 
-class ServingEngine:
+@functools.lru_cache(maxsize=None)
+def _jitted(model, cfg: ModelConfig, policy: QuantPolicy | None):
+    """Process-wide (model, cfg, policy) → jitted (prefill, decode_step)."""
+    prefill = jax.jit(lambda p, t, c: model.prefill(p, cfg, t, c, policy=policy))
+    decode = jax.jit(lambda p, t, c: model.decode_step(p, cfg, t, c,
+                                                       policy=policy))
+    return prefill, decode
+
+
+def _sample_key(step: int, uid: int) -> jax.Array:
+    """Per-(tick, request) PRNG key.  Folding in the uid is load-bearing:
+    a step-only fold hands every slot in a tick the SAME key, i.e.
+    identical draws across concurrent requests at temperature > 0."""
+    return jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(7), step), uid)
+
+
+def _sample_one(logits: jax.Array, temperature: float, step: int,
+                uid: int) -> jax.Array:
+    """Sample one token from (1, V) logits (the admit/prefill path)."""
+    if temperature <= 0:
+        return jnp.argmax(logits, -1)
+    return jax.random.categorical(_sample_key(step, uid),
+                                  logits / temperature, axis=-1)
+
+
+# slot writes run jitted with the batched cache donated: one fused program
+# per (shape, slot) that updates the slot in place instead of eagerly
+# re-materializing every cache leaf on each admission
+_write_slot = jax.jit(cm.write_slot, static_argnums=2, donate_argnums=0)
+
+
+class _EngineBase:
+    """Shared scheduling state + request bookkeeping."""
+
     def __init__(self, model, params, cfg: ModelConfig, *, max_slots: int = 4,
                  max_len: int = 256, policy: QuantPolicy | None = None,
                  eos_id: int = -1, kv_bits: int | None = None):
@@ -51,70 +98,48 @@ class ServingEngine:
         self.queue: deque[Request] = deque()
         self.slots: list[Request | None] = [None] * max_slots
         self.retired: list[Request] = []
-        # one independent cache per slot (slot-batched decode batches them)
-        self.caches = [model.make_cache(cfg, 1, max_len, bits=kv_bits)
-                       for _ in range(max_slots)]
-        self._prefill = jax.jit(
-            lambda p, t, c: model.prefill(p, cfg, t, c, policy=policy))
-        self._decode = jax.jit(
-            lambda p, t, c: model.decode_step(p, cfg, t, c, policy=policy))
+        self._prefill, self._decode = _jitted(model, cfg, policy)
         self._step = 0
+        self.decode_dispatches = 0       # jitted decode calls issued
+        self.ticks = 0                   # step() calls that decoded
+        self._init_caches()
 
-    # -- scheduling ---------------------------------------------------------
+    def _init_caches(self):
+        """Build this engine's cache storage (layout differs per engine)."""
+        raise NotImplementedError
 
     def submit(self, req: Request):
         self.queue.append(req)
+
+    def _finished(self, req: Request, tok: int) -> bool:
+        return tok == self.eos_id or len(req.out_tokens) >= req.max_new_tokens
+
+    def _install_slot_cache(self, slot: int, cache):
+        """Store an admitted request's prefilled batch-1 cache for
+        ``slot`` (layout differs per engine)."""
+        raise NotImplementedError
 
     def _admit(self):
         for i in range(self.max_slots):
             while self.slots[i] is None and self.queue:
                 req = self.queue.popleft()
-                cache = self.model.make_cache(self.cfg, 1, self.max_len,
-                                              bits=self.kv_bits)
+                slot_cache = self.model.make_cache(self.cfg, 1, self.max_len,
+                                                   bits=self.kv_bits)
                 toks = jnp.asarray(req.prompt[None, :], jnp.int32)
-                logits, cache = self._prefill(self.params, toks, cache)
-                self.caches[i] = cache
-                nxt = int(self._sample(logits[:, -1], req.temperature)[0])
+                logits, slot_cache = self._prefill(self.params, toks,
+                                                   slot_cache)
+                nxt = int(_sample_one(logits[:, -1], req.temperature,
+                                      self._step, req.uid)[0])
                 req.out_tokens.append(nxt)
                 # the prefill-sampled token can already finish the request
                 # (EOS or max_new_tokens=1): retire without occupying the
                 # slot, and keep admitting into it
-                if (nxt == self.eos_id or
-                        len(req.out_tokens) >= req.max_new_tokens):
+                if self._finished(req, nxt):
                     req.done = True
                     self.retired.append(req)
                 else:
                     self.slots[i] = req
-
-    def _sample(self, logits, temperature: float):
-        if temperature <= 0:
-            return jnp.argmax(logits, -1)
-        key = jax.random.fold_in(jax.random.PRNGKey(7), self._step)
-        return jax.random.categorical(key, logits / temperature, axis=-1)
-
-    # -- one engine tick ----------------------------------------------------
-
-    def step(self) -> int:
-        """Admit + decode one token for every active slot. Returns the
-        number of active sequences."""
-        self._admit()
-        self._step += 1
-        active = 0
-        for i, req in enumerate(self.slots):
-            if req is None:
-                continue
-            active += 1
-            tok = jnp.asarray([[req.out_tokens[-1]]], jnp.int32)
-            logits, self.caches[i] = self._decode(self.params, tok,
-                                                  self.caches[i])
-            nxt = int(self._sample(logits[:, -1], req.temperature)[0])
-            req.out_tokens.append(nxt)
-            if (nxt == self.eos_id or
-                    len(req.out_tokens) >= req.max_new_tokens):
-                req.done = True
-                self.retired.append(req)
-                self.slots[i] = None
-        return active
+                    self._install_slot_cache(i, slot_cache)
 
     def pop_retired(self) -> list[Request]:
         """Drain and return retired requests (callers driving step()
@@ -131,3 +156,107 @@ class ServingEngine:
             self.step()
             max_ticks -= 1
         return self.pop_retired()
+
+
+class ServingEngine(_EngineBase):
+    """Slot-batched continuous batching: one decode dispatch per tick."""
+
+    def _init_caches(self):
+        # ONE slot-major cache: data leaves (layer, slot, ...), lengths
+        # vectorized to (max_slots,) so each slot decodes at its own depth
+        self.cache = cm.batch_slot_cache(
+            self.model.make_cache(self.cfg, self.max_slots, self.max_len,
+                                  bits=self.kv_bits))
+
+    def _install_slot_cache(self, slot: int, cache):
+        # full-extent copy: no stale KV/scales from the slot's previous
+        # occupant survive admission
+        self.cache = _write_slot(self.cache, cache, slot)
+
+    def _sample_batch(self, logits: jax.Array, temps: np.ndarray,
+                      uids: np.ndarray) -> jax.Array:
+        """Vectorized over slots: greedy rows take argmax; temperature
+        rows draw categorically with a per-(tick, uid) key."""
+        greedy = jnp.argmax(logits, -1)
+        if not (temps > 0).any():
+            return greedy
+        keys = jax.vmap(lambda u: _sample_key(self._step, u))(
+            jnp.asarray(uids, jnp.int32))
+        scaled = logits / jnp.maximum(jnp.asarray(temps), 1e-6)[:, None]
+        drawn = jax.vmap(jax.random.categorical)(keys, scaled)
+        return jnp.where(jnp.asarray(temps) > 0, drawn, greedy)
+
+    # -- one engine tick ----------------------------------------------------
+
+    def step(self) -> int:
+        """Admit + decode one token for every active slot with a SINGLE
+        (max_slots, 1) jitted dispatch. Returns the number of active
+        sequences."""
+        self._admit()
+        self._step += 1
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return 0
+        last = np.zeros((self.max_slots, 1), np.int32)
+        temps = np.zeros((self.max_slots,), np.float32)
+        uids = np.zeros((self.max_slots,), np.int32)
+        for i in active:
+            req = self.slots[i]
+            last[i, 0] = req.out_tokens[-1]
+            temps[i] = req.temperature
+            uids[i] = req.uid
+        # inactive slots ride along masked: their rows decode garbage that
+        # is never sampled into a request, and admission overwrites their
+        # slot cache wholesale
+        logits, self.cache = self._decode(self.params, jnp.asarray(last),
+                                          self.cache)
+        self.decode_dispatches += 1
+        self.ticks += 1
+        toks = np.asarray(self._sample_batch(logits[:, -1], temps, uids))
+        for i in active:
+            req = self.slots[i]
+            nxt = int(toks[i])
+            req.out_tokens.append(nxt)
+            if self._finished(req, nxt):
+                req.done = True
+                self.retired.append(req)
+                self.slots[i] = None
+        return len(active)
+
+
+class PerSlotServingEngine(_EngineBase):
+    """The original per-slot loop: one (1, 1) decode dispatch per active
+    slot per tick.  Kept as the equivalence oracle and the throughput
+    baseline (benchmarks/serving_throughput.py); the batched engine must
+    match its greedy tokens exactly."""
+
+    def _init_caches(self):
+        self.caches = [self.model.make_cache(self.cfg, 1, self.max_len,
+                                             bits=self.kv_bits)
+                       for _ in range(self.max_slots)]
+
+    def _install_slot_cache(self, slot: int, cache):
+        self.caches[slot] = cache
+
+    def step(self) -> int:
+        self._admit()
+        self._step += 1
+        active = 0
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            active += 1
+            tok = jnp.asarray([[req.out_tokens[-1]]], jnp.int32)
+            logits, self.caches[i] = self._decode(self.params, tok,
+                                                  self.caches[i])
+            self.decode_dispatches += 1
+            nxt = int(_sample_one(logits[:, -1], req.temperature, self._step,
+                                  req.uid)[0])
+            req.out_tokens.append(nxt)
+            if self._finished(req, nxt):
+                req.done = True
+                self.retired.append(req)
+                self.slots[i] = None
+        if active:
+            self.ticks += 1
+        return active

@@ -276,11 +276,11 @@ def test_engine_admit_preserves_kv_bits():
     params = model.init(KEY, cfg)
     eng = ServingEngine(model, params, cfg, max_slots=1, max_len=32,
                         kv_bits=8)
-    assert eng.caches[0].quantized
+    assert eng.cache.quantized
     eng.submit(Request(uid=0, prompt=np.asarray([1, 2, 3], np.int32),
                        max_new_tokens=2))
     eng.step()
-    assert eng.caches[0].quantized      # admitted cache kept int8 storage
+    assert eng.cache.quantized      # admitted slot kept int8 storage
 
 
 def test_engine_respects_max_new_tokens_one():

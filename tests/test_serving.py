@@ -9,6 +9,7 @@ import pytest
 from repro.configs.base import get_config
 from repro.core.qlinear import QuantPolicy
 from repro.core.transforms import TransformPlan
+from repro.models import common as cm
 from repro.models.api import get_model
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.fold import collect_calibration, fold_quantize
@@ -75,6 +76,34 @@ def test_kv_cache_int8_close_to_bf16():
     l8, c8 = model.prefill(params, cfg, toks, c8)
     a, b = np.asarray(l16, np.float32), np.asarray(l8, np.float32)
     assert np.abs(a - b).max() / (np.abs(a).max() + 1e-9) < 0.1
+
+
+def test_kv_cache_int8_close_to_bf16_batched_slots():
+    """max_slots>1 extension: the slot-stacked int8 cache decoding two
+    slots at DIFFERENT depths in one program stays close to its bf16
+    twin, row for row."""
+    cfg = get_config("stablelm_3b").reduced()
+    model = get_model(cfg)
+    params = model.init(KEY, cfg)
+    prompts = [jax.random.randint(KEY, (1, 12), 0, cfg.vocab_size),
+               jax.random.randint(jax.random.fold_in(KEY, 1), (1, 5), 0,
+                                  cfg.vocab_size)]
+    decoded = {}
+    for bits in (None, 8):
+        cache = cm.batch_slot_cache(model.make_cache(cfg, 2, 32, bits=bits))
+        last = []
+        for i, p in enumerate(prompts):  # per-slot admit at depths 12 and 5
+            sc = model.make_cache(cfg, 1, 32, bits=bits)
+            lg, sc = model.prefill(params, cfg, p, sc)
+            cache = cm.write_slot(cache, sc, i)
+            last.append(int(jnp.argmax(lg[0, -1])))
+        toks = jnp.asarray(last, jnp.int32)[:, None]
+        logits, cache = model.decode_step(params, cfg, toks, cache)
+        decoded[bits] = np.asarray(logits[:, -1], np.float32)
+    a, b = decoded[None], decoded[8]
+    for row in range(2):
+        rel = np.abs(a[row] - b[row]).max() / (np.abs(a[row]).max() + 1e-9)
+        assert rel < 0.1, (row, rel)
 
 
 def test_engine_end_to_end_batched():

@@ -1,0 +1,302 @@
+"""Batched-slot serving engine: cross-family equivalence & stress suite.
+
+Pins the contract the batched engine must keep before anything scales on
+top of it (paged KV, sharded serve):
+
+  * greedy output token-identical to the per-slot seed loop
+    (``PerSlotServingEngine``) for every model family, bf16 AND
+    fold+quantized params;
+  * exactly ONE jitted decode dispatch per tick regardless of the
+    active-slot count;
+  * scheduler invariants under random submit/retire churn (hypothesis
+    property test via tests/_hypothesis_support.py);
+  * temperature sampling draws per-request keys (step-only folding gave
+    every slot in a tick the same draw);
+  * int8 KV slot reuse leaks no stale keys or dequant scales.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hypothesis_support import given, settings, st
+
+from repro.configs.base import get_config
+from repro.core.qlinear import QuantPolicy
+from repro.models import common as cm
+from repro.models.api import get_model
+from repro.serving.engine import (PerSlotServingEngine, Request,
+                                  ServingEngine, _sample_key)
+from repro.serving.fold import collect_calibration, fold_quantize
+
+KEY = jax.random.PRNGKey(0)
+
+# one arch per family (moe uses DeepSeek: MLA latent cache + leading
+# dense layers — the hardest cache layout)
+FAMILY_ARCHS = {
+    "dense": "stablelm_3b",
+    "moe": "deepseek_v2_lite_16b",
+    "ssm": "mamba2_780m",
+    "hybrid": "zamba2_12b",
+}
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(arch: str, quantized: bool):
+    cfg = get_config(arch).reduced()
+    model = get_model(cfg)
+    params = model.init(KEY, cfg)
+    policy = None
+    if quantized:
+        toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+        stats = collect_calibration(model, params, cfg, [{"tokens": toks}])
+        policy = QuantPolicy(weight_bits=8, act_bits=8, pack_weights=False,
+                             use_kernels="never")
+        params = fold_quantize(params, cfg, policy=policy, stats=stats)
+    return cfg, model, params, policy
+
+
+def _mk_requests(cfg, n=3, max_new=4, temperature=0.0):
+    return [Request(uid=i,
+                    prompt=np.random.default_rng(i).integers(
+                        0, cfg.vocab_size, size=(3 + i,)),
+                    max_new_tokens=max_new, temperature=temperature)
+            for i in range(n)]
+
+
+def _count_decodes(eng):
+    """Wrap eng._decode with a call counter (list the test inspects)."""
+    calls = []
+    orig = eng._decode
+
+    def counting(*a):
+        calls.append(1)
+        return orig(*a)
+
+    eng._decode = counting
+    return calls
+
+
+# ---------------------------------------------------------------------------
+# tentpole: greedy equivalence + single dispatch, all families × precisions
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("quantized", [False, True], ids=["bf16", "w8a8"])
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+def test_batched_matches_per_slot_greedy(family, quantized):
+    """Batched decode == seed per-slot loop, token for token, with ONE
+    decode dispatch per tick (the per-slot loop pays one per slot)."""
+    cfg, model, params, policy = _setup(FAMILY_ARCHS[family], quantized)
+    outs, dispatch_ratio = {}, {}
+    for name, cls in (("batched", ServingEngine),
+                      ("per_slot", PerSlotServingEngine)):
+        eng = cls(model, params, cfg, max_slots=2, max_len=32, policy=policy)
+        calls = _count_decodes(eng)
+        reqs = _mk_requests(cfg)
+        for r in reqs:
+            eng.submit(r)
+        while eng.queue or any(eng.slots):
+            before = len(calls)
+            n_active = eng.step()
+            if name == "batched":  # exactly one dispatch, active count ≥ 1
+                assert len(calls) - before == (1 if n_active else 0)
+            else:
+                assert len(calls) - before == n_active
+        done = eng.pop_retired()
+        assert sorted(r.uid for r in done) == [0, 1, 2]
+        outs[name] = {r.uid: list(r.out_tokens) for r in done}
+        dispatch_ratio[name] = len(calls)
+    assert outs["batched"] == outs["per_slot"]
+    # 2 slots busy most ticks → the per-slot loop pays more dispatches
+    assert dispatch_ratio["per_slot"] > dispatch_ratio["batched"]
+
+
+def test_batched_slots_at_different_depths():
+    """Slots admitted at different ticks decode at different cache depths
+    in one program — per-slot RoPE positions and valid-length masks."""
+    cfg, model, params, _ = _setup("stablelm_3b", False)
+    eng = ServingEngine(model, params, cfg, max_slots=2, max_len=32)
+    a = Request(uid=0, prompt=np.arange(1, 8, dtype=np.int64), max_new_tokens=8)
+    eng.submit(a)
+    eng.step()                     # a alone at depth 7
+    b = Request(uid=1, prompt=np.asarray([9, 8, 7]), max_new_tokens=8)
+    eng.submit(b)
+    eng.run(max_ticks=50)
+    # reference: each request served alone
+    for req, uid in ((a, 0), (b, 1)):
+        solo = ServingEngine(model, params, cfg, max_slots=1, max_len=32)
+        ref = Request(uid=uid, prompt=req.prompt, max_new_tokens=8)
+        solo.submit(ref)
+        solo.run(max_ticks=50)
+        assert req.out_tokens == ref.out_tokens, uid
+
+
+# ---------------------------------------------------------------------------
+# sampling: per-request PRNG keys
+# ---------------------------------------------------------------------------
+
+
+def test_sample_key_folds_uid():
+    k0, k1 = _sample_key(3, 0), _sample_key(3, 1)
+    assert not np.array_equal(np.asarray(k0), np.asarray(k1))
+
+
+@pytest.mark.parametrize("cls", [ServingEngine, PerSlotServingEngine])
+def test_temperature_sampling_distinct_across_slots(cls):
+    """Regression: the seed folded the key on the step only, so identical
+    prompts decoding in the same ticks drew IDENTICAL token sequences at
+    temperature > 0."""
+    cfg, model, params, _ = _setup("stablelm_3b", False)
+    eng = cls(model, params, cfg, max_slots=2, max_len=32)
+    prompt = np.asarray([1, 2, 3], np.int64)
+    reqs = [Request(uid=i, prompt=prompt, max_new_tokens=12, temperature=1.0)
+            for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_ticks=50)
+    # same prompt, same ticks, same logits — only the uid fold separates
+    # the draws (P[12 identical draws | distinct keys] ≈ vocab^-12)
+    assert reqs[0].out_tokens != reqs[1].out_tokens
+
+
+# ---------------------------------------------------------------------------
+# scheduler invariants under churn (hypothesis property test)
+# ---------------------------------------------------------------------------
+
+
+def _emitted_token():
+    """A token the greedy model actually emits, for live-EOS examples."""
+    cfg, model, params, _ = _setup("stablelm_3b", False)
+    eng = ServingEngine(model, params, cfg, max_slots=1, max_len=32)
+    req = Request(uid=0, prompt=np.asarray([5, 6, 7]), max_new_tokens=3)
+    eng.submit(req)
+    eng.run(max_ticks=20)
+    return req.out_tokens[0]
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 4),          # initial submissions
+       st.integers(0, 3),          # mid-run submissions
+       st.integers(0, 3),          # ticks before the mid-run burst
+       st.integers(1, 5),          # max_new_tokens (incl. the 1 edge case)
+       st.sampled_from(["none", "live"]),   # EOS placement
+       st.integers(0, 5))          # prompt-length seed
+def test_scheduler_invariants_under_churn(n_init, n_mid, mid_ticks, max_new,
+                                          eos_mode, seed):
+    """No request lost or duplicated, out_tokens ≤ max_new_tokens, and
+    run() + pop_retired() hand each uid back exactly once."""
+    cfg, model, params, _ = _setup("stablelm_3b", False)
+    eos = -1 if eos_mode == "none" else _emitted_token()
+    eng = ServingEngine(model, params, cfg, max_slots=2, max_len=32,
+                        eos_id=eos)
+    rng = np.random.default_rng(seed)
+    uids = list(range(n_init + n_mid))
+
+    def mk(uid):
+        return Request(uid=uid,
+                       prompt=rng.integers(0, cfg.vocab_size,
+                                           size=(int(rng.integers(1, 6)),)),
+                       max_new_tokens=max_new)
+
+    for uid in uids[:n_init]:
+        eng.submit(mk(uid))
+    for _ in range(mid_ticks):
+        eng.step()
+    for uid in uids[n_init:]:
+        eng.submit(mk(uid))          # mid-run churn
+    done = eng.run(max_ticks=200)
+    done += eng.pop_retired()        # must add nothing (run drained all)
+    assert sorted(r.uid for r in done) == uids
+    assert not eng.queue and not any(eng.slots)
+    for r in done:
+        assert r.done
+        assert 1 <= len(r.out_tokens) <= max_new
+        assert all(0 <= t < cfg.vocab_size for t in r.out_tokens)
+        if eos != -1 and eos in r.out_tokens:  # EOS retires immediately
+            assert r.out_tokens.index(eos) == len(r.out_tokens) - 1
+
+
+# ---------------------------------------------------------------------------
+# int8 KV under the slot-major layout
+# ---------------------------------------------------------------------------
+
+
+def test_kv_int8_slot_reuse_no_stale_scales():
+    """A slot reused after retirement must not leak the previous
+    occupant's keys or int8 dequant scales: the reused slot's tokens
+    match a fresh engine's, and scale rows past the new depth are 0."""
+    cfg, model, params, _ = _setup("stablelm_3b", False)
+    long_req = Request(uid=0, prompt=np.arange(1, 13, dtype=np.int64) % 7,
+                       max_new_tokens=6)
+    short = np.asarray([3, 1, 4], np.int64)
+
+    eng = ServingEngine(model, params, cfg, max_slots=1, max_len=32,
+                        kv_bits=8)
+    eng.submit(long_req)
+    eng.run(max_ticks=50)            # slot 0 filled to depth 17
+    reused = Request(uid=1, prompt=short, max_new_tokens=6)
+    eng.submit(reused)
+    eng.run(max_ticks=50)
+
+    fresh_eng = ServingEngine(model, params, cfg, max_slots=1, max_len=32,
+                              kv_bits=8)
+    fresh = Request(uid=2, prompt=short, max_new_tokens=6)
+    fresh_eng.submit(fresh)
+    fresh_eng.run(max_ticks=50)
+    assert reused.out_tokens == fresh.out_tokens
+
+    # the reused request filled 3 (prompt) + 5 (decodes) positions; every
+    # scale row beyond that must be the write_slot-copied zero, not the
+    # long request's stale scale
+    depth = len(short) + len(reused.out_tokens) - 1
+    for leaf in (eng.cache.k_scale, eng.cache.v_scale):
+        tail = np.asarray(leaf)[:, 0, depth:]
+        assert (tail == 0).all()
+
+
+def test_multi_token_chunk_decode_with_vector_lengths():
+    """A multi-token chunk (s=2) against a slot-major cache of 3 slots at
+    DIFFERENT depths: causal mask + RoPE must use each row's own offset
+    (a shared q_pos would silently alias slot positions), and the result
+    must match per-slot sequential decode."""
+    cfg, model, params, _ = _setup("stablelm_3b", False)
+    prompts = [np.arange(1, 8) % 7, np.asarray([3, 1, 4]),
+               np.asarray([9, 8, 7, 6, 5])]        # depths 7, 3, 5
+    cache = cm.batch_slot_cache(model.make_cache(cfg, 3, 32))
+    singles = []
+    for i, p in enumerate(prompts):
+        sc = model.make_cache(cfg, 1, 32)
+        _, sc = model.prefill(params, cfg, jnp.asarray(p)[None].astype(jnp.int32),
+                              sc)
+        cache = cm.write_slot(cache, sc, i)
+        singles.append(sc)
+    chunk = jnp.asarray([[5, 6], [2, 9], [1, 1]], jnp.int32)
+    logits_b, cache = model.decode_step(params, cfg, chunk, cache)
+    assert list(np.asarray(cache.length)) == [9, 5, 7]
+    for i in range(3):
+        sc, lg = singles[i], None
+        for t in np.asarray(chunk[i]):  # sequential single-token reference
+            lg, sc = model.decode_step(params, cfg,
+                                       jnp.asarray([[t]], jnp.int32), sc)
+        np.testing.assert_allclose(np.asarray(logits_b[i, -1], np.float32),
+                                   np.asarray(lg[0, -1], np.float32),
+                                   rtol=1e-3, atol=1e-3, err_msg=str(i))
+
+
+def test_slot_cache_roundtrip_helpers():
+    """cache_at is the inverse of write_slot on the slot-major layout."""
+    cfg, model, params, _ = _setup("stablelm_3b", False)
+    batched = cm.batch_slot_cache(model.make_cache(cfg, 2, 16, bits=8))
+    slot = model.make_cache(cfg, 1, 16, bits=8)
+    _, slot = model.prefill(params, cfg,
+                            jnp.asarray([[1, 2, 3, 4]], jnp.int32), slot)
+    batched = cm.write_slot(batched, slot, 1)
+    view = cm.cache_at(batched, 1)
+    for a, b in zip(jax.tree.leaves(view), jax.tree.leaves(slot)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # untouched slot 0 stayed zero-length
+    assert int(cm.cache_at(batched, 0).length) == 0
