@@ -1,10 +1,29 @@
-"""Kernel micro-benchmarks (infrastructure table): the XLA-native integer
-serving path vs the bf16 baseline, per shape class.  CPU wall times are
-RELATIVE indicators only (the TPU numbers come from the dry-run roofline);
-the derived column carries the arithmetic-intensity facts that transfer.
+"""Kernel micro-benchmarks (infrastructure table).
+
+Two parts:
+
+1. Fused vs staged quant-linear: the one-pass ``ops.fused_qlinear``
+   kernel against the staged ``ops.fused_quant_matmul`` composition it
+   replaces (XLA pre-rotation → hadamard-quant kernel → quant-matmul
+   kernel).  Wall times run through the Pallas INTERPRETER on CPU and
+   are relative indicators only; the transferable facts are the
+   HBM-bytes-moved accounting (3 activation round trips → 1) and the
+   TPU-v5e roofline model derived from it (launch/roofline.py HW
+   constants) — that model is the fused ≥ staged throughput claim.
+   Results land in ``experiments/kernels/BENCH_kernels.json`` so the
+   perf trajectory records across PRs, and benchmarks/report.py renders
+   the §Kernels table from it.
+
+2. The XLA-native integer serving path vs the bf16 baseline per shape
+   class (the seed's original table; unchanged contract).
+
+``--quick`` (CI smoke) runs one small fused-vs-staged shape only.
 """
 
 from __future__ import annotations
+
+import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -13,12 +32,141 @@ from benchmarks.common import emit, timeit
 from repro.core.hadamard import apply_hadamard
 from repro.core.qlinear import QuantPolicy, qlinear, quantize_weight
 from repro.kernels import ops, ref
+from repro.launch.roofline import HW
 
 SHAPES = [(64, 2048, 2048), (128, 4096, 1024)]
 
+# (n, k, m): decode-shaped tall-skinny (max_slots rows) + a prefill tile.
+# Interpret-mode emulation bounds the sizes; HBM/roofline accounting
+# scales exactly, so the ratios transfer to the serving dims.
+FUSED_SHAPES = [(4, 512, 256), (4, 2048, 512), (32, 1024, 512)]
+QUICK_SHAPES = [(4, 512, 256)]
 
-def run() -> dict:
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "kernels", "BENCH_kernels.json")
+
+
+def _has_xla_prestage(k: int) -> bool:
+    """True when the rotation of dim k has leading Kronecker factors that
+    run as XLA matmuls before the kernel (one extra activation round
+    trip on BOTH paths — e.g. 2048 = H_512 ⊗ H_4); single-factor dims
+    (512 = H_512) fuse the whole rotation."""
+    from repro.core.hadamard import plan_hadamard
+
+    return len(plan_hadamard(k).factors) > 1
+
+
+def hbm_bytes(n: int, k: int, m: int, *, packed: bool, fused: bool,
+              act_bytes: int = 2) -> int:
+    """HBM traffic of one quantized linear, by construction of the path.
+
+    staged:
+      [XLA leading factors read x, write x'  (2·n·k·act) — multi-factor k]
+      hadamard-quant kernel reads x', writes codes+Δa   (n·k·act + n·k + 4n)
+      quant-matmul reads codes+Δa+W+Δw, writes y        (n·k + 4n + W + 4m + 2·n·m)
+    fused:
+      [the same XLA leading-factor round trip — multi-factor k]
+      one kernel reads x'+W+Δw, writes y; codes and Δa never leave VMEM.
+    """
+    w = k * m // 2 if packed else k * m
+    out = 2 * n * m
+    pre = 2 * n * k * act_bytes if _has_xla_prestage(k) else 0
+    if fused:
+        return pre + n * k * act_bytes + w + 4 * m + out
+    return (pre
+            + n * k * act_bytes + n * k + 4 * n
+            + n * k + 4 * n + w + 4 * m + out)
+
+
+def activation_roundtrips(k: int, *, fused: bool) -> int:
+    """Activation HBM round trips per linear (the 3 → 1 headline is for
+    multi-factor rotation dims; fully-fusable dims go 2 → 1)."""
+    pre = 1 if _has_xla_prestage(k) else 0
+    return (1 + pre) if fused else (2 + pre)
+
+
+def roofline_terms(n: int, k: int, m: int, bytes_moved: int,
+                   hw: HW = HW()) -> dict:
+    """Modelled step time on TPU v5e: int8 matmul FLOPs vs HBM stream."""
+    compute_s = 2.0 * n * k * m / hw.peak_int8
+    memory_s = bytes_moved / hw.hbm_bw
+    bound = max(compute_s, memory_s)
+    return {"compute_s": compute_s, "memory_s": memory_s,
+            "modeled_tok_s": n / bound if bound else 0.0,
+            "dominant": "memory" if memory_s >= compute_s else "compute"}
+
+
+def bench_fused_vs_staged(shapes) -> list[dict]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for n, k, m in shapes:
+        x = jax.random.normal(key, (n, k)).astype(jnp.bfloat16)
+        w = jax.random.normal(jax.random.fold_in(key, 1), (k, m)) * 0.02
+        wf = apply_hadamard(w.astype(jnp.float32), axis=0)
+        qw = quantize_weight(wf, bits=4, pack=True, had_dim=k)
+
+        # jit both sides so wall time measures interpreter execution, not
+        # per-call retracing (fused_qlinear is deliberately unjitted at
+        # module level; model steps jit around it)
+        staged = jax.jit(lambda a, q: ops.fused_quant_matmul(
+            a, q, interpret=True))
+        fused = jax.jit(lambda a, q: ops.fused_qlinear(a, q, interpret=True))
+        t_staged = timeit(staged, x, qw, warmup=1, iters=3)
+        t_fused = timeit(fused, x, qw, warmup=1, iters=3)
+
+        b_staged = hbm_bytes(n, k, m, packed=True, fused=False)
+        b_fused = hbm_bytes(n, k, m, packed=True, fused=True)
+        r_staged = roofline_terms(n, k, m, b_staged)
+        r_fused = roofline_terms(n, k, m, b_fused)
+        row = {
+            "shape": f"{n}x{k}x{m}", "packed": True, "had_dim": k,
+            "staged_us_interpret": t_staged, "fused_us_interpret": t_fused,
+            "hbm_bytes_staged": b_staged, "hbm_bytes_fused": b_fused,
+            "activation_roundtrips_staged":
+                activation_roundtrips(k, fused=False),
+            "activation_roundtrips_fused":
+                activation_roundtrips(k, fused=True),
+            "memory_s_staged": r_staged["memory_s"],
+            "memory_s_fused": r_fused["memory_s"],
+            "modeled_tok_s_staged": r_staged["modeled_tok_s"],
+            "modeled_tok_s_fused": r_fused["modeled_tok_s"],
+            "fused_ge_staged": (r_fused["modeled_tok_s"]
+                                >= r_staged["modeled_tok_s"]),
+        }
+        rows.append(row)
+        emit(f"kernel_fused_qlinear_{row['shape']}", t_fused,
+             f"hbm_bytes={b_fused};"
+             f"roundtrips={row['activation_roundtrips_fused']};"
+             f"modeled_tok_s={r_fused['modeled_tok_s']:.3e}")
+        emit(f"kernel_staged_qlinear_{row['shape']}", t_staged,
+             f"hbm_bytes={b_staged};"
+             f"roundtrips={row['activation_roundtrips_staged']};"
+             f"modeled_tok_s={r_staged['modeled_tok_s']:.3e};"
+             f"fused_speedup_roofline={b_staged / b_fused:.2f}x")
+    return rows
+
+
+def write_artifact(rows: list[dict], quick: bool = False) -> str:
+    # --quick (CI smoke) writes a sibling file so it never truncates the
+    # committed full-shape perf trajectory that report.py renders
+    path = OUT_PATH.replace(".json", "_quick.json") if quick else OUT_PATH
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    return path
+
+
+def run(quick: bool = False) -> dict:
     out = {}
+    rows = bench_fused_vs_staged(QUICK_SHAPES if quick else FUSED_SHAPES)
+    path = write_artifact(rows, quick)
+    out["fused_vs_staged"] = rows
+    assert all(r["fused_ge_staged"] for r in rows), \
+        "fused path must dominate the staged roofline"
+    emit("kernel_bench_artifact", 0.0, f"wrote={os.path.relpath(path)}")
+    if quick:
+        return out
+
     key = jax.random.PRNGKey(0)
     for n, k, m in SHAPES:
         x = jax.random.normal(key, (n, k)).astype(jnp.bfloat16)
@@ -47,15 +195,14 @@ def run() -> dict:
              f"flops_vs_dense={2*k*sum(s for s in [k])}")
         emit(f"kernel_quantize_token_{tag}", t_qnt, "pass=reduce+round")
         out[tag] = dict(bf16=t_bf16, w4=t_w4, w8=t_w8, had=t_had)
-
-    # interpret-mode Pallas kernels (correctness-path timing, small shape)
-    x = jax.random.normal(key, (16, 512)).astype(jnp.bfloat16)
-    t_pal = timeit(lambda: ops.fused_hadamard_quant(x, block=128,
-                                                    interpret=True))
-    emit("kernel_pallas_fused_hadamard_quant_interpret_16x512", t_pal,
-         "interpret-mode (CPU emulation; TPU target)")
     return out
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: one small fused-vs-staged shape")
+    args = ap.parse_args()
+    run(quick=args.quick)

@@ -1,6 +1,9 @@
-"""Generate the EXPERIMENTS.md §Dry-run, §Roofline and §Autoplan tables
-from the JSON artifacts (experiments/dryrun/<mesh>/<arch>__<shape>.json,
-experiments/autoplan/<arch>_telemetry.json).
+"""Generate the EXPERIMENTS.md §Dry-run, §Roofline, §Autoplan, §Serving
+and §Kernels tables from the JSON artifacts
+(experiments/dryrun/<mesh>/<arch>__<shape>.json,
+experiments/autoplan/<arch>_telemetry.json,
+experiments/serving/throughput.json,
+experiments/kernels/BENCH_kernels.json).
 
 Usage: PYTHONPATH=src python -m benchmarks.report [--out EXPERIMENTS_tables.md]
 """
@@ -17,6 +20,8 @@ AUTOPLAN_ROOT = os.path.join(os.path.dirname(__file__), "..", "experiments",
                              "autoplan")
 SERVING_PATH = os.path.join(os.path.dirname(__file__), "..", "experiments",
                             "serving", "throughput.json")
+KERNELS_PATH = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                            "kernels", "BENCH_kernels.json")
 
 
 def load(mesh: str) -> list[dict]:
@@ -110,6 +115,33 @@ def serving_table(rows: list[dict]) -> str:
     return "\n".join(out)
 
 
+def load_kernels() -> list[dict]:
+    if not os.path.exists(KERNELS_PATH):
+        return []
+    with open(KERNELS_PATH) as f:
+        return json.load(f)
+
+
+def kernels_table(rows: list[dict]) -> str:
+    """Fused one-pass qlinear vs the staged 3-round-trip composition
+    (benchmarks/kernel_bench.py → experiments/kernels/BENCH_kernels.json)."""
+    out = ["| shape (n×k×m) | HBM staged | HBM fused | roundtrips | "
+           "staged µs | fused µs | modeled tok/s staged | fused | "
+           "fused ≥ staged |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['shape']} | {r['hbm_bytes_staged']} | "
+            f"{r['hbm_bytes_fused']} | "
+            f"{r['activation_roundtrips_staged']}→"
+            f"{r['activation_roundtrips_fused']} | "
+            f"{r['staged_us_interpret']:.0f} | {r['fused_us_interpret']:.0f} | "
+            f"{r['modeled_tok_s_staged']:.3g} | "
+            f"{r['modeled_tok_s_fused']:.3g} | "
+            f"{'yes' if r['fused_ge_staged'] else 'NO'} |")
+    return "\n".join(out)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="")
@@ -131,6 +163,11 @@ def main(argv=None):
     if sv_rows:
         parts.append(f"\n### Serving throughput ({len(sv_rows)} archs)\n")
         parts.append(serving_table(sv_rows))
+    kn_rows = load_kernels()
+    if kn_rows:
+        parts.append(f"\n### Kernels — fused vs staged qlinear "
+                     f"({len(kn_rows)} shapes)\n")
+        parts.append(kernels_table(kn_rows))
     text = "\n".join(parts)
     if args.out:
         with open(args.out, "w") as f:

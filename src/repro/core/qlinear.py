@@ -8,8 +8,9 @@ weight (optionally nibble-packed int4) plus per-output-channel scales.
     →  integer matmul (int8 MXU, int32 accumulate)
     →  dequantize with (per-token Δ_a) ⊗ (per-channel Δ_w) epilogue.
 
-Backend dispatch: on TPU the fused Pallas kernels in ``repro.kernels``
-are used; elsewhere (and for the multi-pod dry-run on CPU) the
+Backend dispatch resolves in ``repro.kernels.ops.resolve_backend``
+(docs/kernels.md): on TPU the whole chain is ONE fused Pallas kernel
+per linear; elsewhere (and for the multi-pod dry-run on CPU) the
 XLA-native integer ``dot_general`` path below lowers and shards under
 pjit identically.  Both paths share the pure-jnp oracle in
 ``repro/kernels/ref.py`` for correctness tests.
@@ -112,19 +113,28 @@ def _unpack(qw: QuantizedWeight) -> jax.Array:
 def qlinear(x: jax.Array, qw: QuantizedWeight, policy: QuantPolicy) -> jax.Array:
     """Apply the quantized linear. x: (..., c_in) bf16/f32 → (..., c_out).
 
-    XLA-native path (CPU / dry-run): integer dot_general with int32
-    accumulation — the same arithmetic the Pallas kernel performs in VMEM
-    tiles on TPU (see repro/kernels/quant_matmul.py).
+    Dispatch resolves in ``repro.kernels.ops.resolve_backend`` — ONE
+    place for every call site (models, serving engine, benchmarks):
+
+      use_kernels="auto"      → fused Pallas kernel on TPU, XLA elsewhere
+      use_kernels="interpret" → fused kernel via the Pallas interpreter
+      use_kernels="never"     → XLA-native integer path below
+
+    The fused path (kernels/fused_qlinear.py) applies smooth + online
+    Hadamard + quantize + int matmul in ONE ``pallas_call``, including
+    ``had_mask``-gated mixed layerwise stacks (the gate is a traced
+    scalar multiplexed in-kernel).  The XLA-native path (CPU dry-run,
+    pjit sharding) performs the same arithmetic with int32-accumulated
+    ``dot_general``; both share the ``repro/kernels/ref.py`` oracle.
     """
     lead = x.shape[:-1]
-    if policy.use_kernels == "interpret" and qw.had_mask is None:
-        # the fused path applies smooth + online Hadamard itself; mixed
-        # layerwise stacks (had_mask) need the gated XLA path below
-        from repro.kernels import ops  # local import: kernels are optional
+    from repro.kernels import ops  # local import: kernels layer on core
 
+    mode = ops.resolve_backend(policy.use_kernels)
+    if mode != "xla":
         x2 = x.reshape(-1, x.shape[-1])
-        y2 = ops.fused_quant_matmul(x2, qw, act_bits=policy.act_bits,
-                                    interpret=True)
+        y2 = ops.fused_qlinear(x2, qw, act_bits=policy.act_bits,
+                               interpret=(mode == "interpret"))
         return y2.reshape(*lead, qw.c_out).astype(x.dtype)
 
     if qw.smooth is not None:

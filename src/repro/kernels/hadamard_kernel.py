@@ -26,7 +26,13 @@ from jax.experimental import pallas as pl
 from repro.core.hadamard import sylvester
 from repro.core.quantizer import qmax
 
-__all__ = ["fused_hadamard_quant"]
+__all__ = ["fused_hadamard_quant", "vmem_rotation_factor"]
+
+
+def vmem_rotation_factor(block: int) -> jax.Array:
+    """H_block/√block as f32 — the VMEM-resident trailing rotation factor
+    shared by this kernel and the one-pass ``fused_qlinear``."""
+    return jnp.asarray(sylvester(block).astype("float32") / math.sqrt(block))
 
 
 def _fhq_kernel(x_ref, h_ref, q_ref, s_ref, *, levels: int, block: int):
@@ -58,11 +64,12 @@ def fused_hadamard_quant(x: jax.Array, *, block: int = 128, bits: int = 4,
     n, d = x.shape
     if d % block or block & (block - 1):
         raise ValueError(f"block {block} must be a power of two dividing d={d}")
-    if n % block_n:
-        block_n = 1
-    h = jnp.asarray(sylvester(block).astype("float32") / math.sqrt(block))
-    grid = (n // block_n,)
-    return pl.pallas_call(
+    n_p = -(-n // block_n) * block_n  # pad ragged/tiny-n (decode) row counts
+    if n_p != n:
+        x = jnp.pad(x, ((0, n_p - n), (0, 0)))
+    h = vmem_rotation_factor(block)
+    grid = (n_p // block_n,)
+    q, s = pl.pallas_call(
         functools.partial(_fhq_kernel, levels=qmax(bits), block=block),
         grid=grid,
         in_specs=[
@@ -74,8 +81,9 @@ def fused_hadamard_quant(x: jax.Array, *, block: int = 128, bits: int = 4,
             pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n, d), jnp.int8),
-            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n_p, d), jnp.int8),
+            jax.ShapeDtypeStruct((n_p, 1), jnp.float32),
         ],
         interpret=interpret,
     )(x, h)
+    return q[:n], s[:n]

@@ -1,9 +1,21 @@
-"""Dispatching wrappers around the Pallas kernels.
+"""Dispatching wrappers around the Pallas kernels — the ONE place the
+serving stack resolves which backend executes a quantized matmul.
 
-``backend="auto"`` resolves to the Pallas kernels on TPU and to the
-XLA-native integer path elsewhere (CPU dry-run/tests), keeping one call
-site in the model code.  ``interpret=True`` forces the kernels through
-the Pallas interpreter (CPU correctness tests).
+:func:`resolve_backend` maps ``QuantPolicy.use_kernels`` to an execution
+mode; ``qlinear`` (core/qlinear.py), the serving engine and the
+benchmarks all route through it so no call site hard-codes a path:
+
+    use_kernels="auto"      → "pallas" on TPU, "xla" elsewhere
+    use_kernels="never"     → "xla"   (integer dot_general; pjit/shard ok)
+    use_kernels="interpret" → "interpret" (Pallas interpreter on CPU)
+
+:func:`fused_qlinear` is the one-pass serving kernel (ONE ``pallas_call``
+per quantized linear — kernels/fused_qlinear.py); the staged
+:func:`fused_quant_matmul` composition below is kept as the 3-round-trip
+baseline the kernel benchmark compares against.  ``backend="auto"`` on
+the per-stage wrappers resolves to the Pallas kernels on TPU and to the
+XLA-native integer path elsewhere; ``interpret=True`` forces the Pallas
+interpreter (CPU correctness tests).
 """
 
 from __future__ import annotations
@@ -16,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.core.qlinear import QuantizedWeight
 from repro.kernels import ref
+from repro.kernels.fused_qlinear import fused_qlinear as _fql_kernel
 from repro.kernels.hadamard_kernel import fused_hadamard_quant as _fhq_kernel
 from repro.kernels.quant_matmul import quant_matmul as _qmm_kernel
 from repro.kernels.quant_matmul import quant_matmul_packed as _qmm_packed_kernel
@@ -23,13 +36,16 @@ from repro.kernels.quantize_kernel import quantize_per_token as _q_kernel
 
 __all__ = [
     "use_pallas",
+    "resolve_backend",
     "quantize_per_token",
     "quant_matmul",
     "fused_hadamard_quant",
     "fused_quant_matmul",
+    "fused_qlinear",
 ]
 
 Backend = Literal["auto", "pallas", "xla"]
+KernelMode = Literal["pallas", "xla", "interpret"]
 
 
 def use_pallas(backend: Backend = "auto") -> bool:
@@ -38,6 +54,30 @@ def use_pallas(backend: Backend = "auto") -> bool:
     if backend == "xla":
         return False
     return jax.default_backend() == "tpu"
+
+
+def resolve_backend(use_kernels: Literal["auto", "never", "interpret"]
+                    = "auto") -> KernelMode:
+    """Map a ``QuantPolicy.use_kernels`` setting to the executing backend.
+
+    This is the single dispatch authority (docs/kernels.md): tests pin
+    the table and monkeypatch :func:`use_pallas` to emulate TPU hosts.
+    """
+    if use_kernels == "interpret":
+        return "interpret"
+    if use_kernels == "never":
+        return "xla"
+    if use_kernels != "auto":
+        raise ValueError(f"unknown use_kernels setting: {use_kernels!r}")
+    return "pallas" if use_pallas("auto") else "xla"
+
+
+def fused_qlinear(x, qw: QuantizedWeight, *, act_bits: int = 4,
+                  interpret: bool = False):
+    """One-``pallas_call`` quantized linear: smooth → online Hadamard
+    (had_mask-gated in-kernel) → quantize → int matmul → dequant.
+    x: (n, c_in) → (n, c_out).  See kernels/fused_qlinear.py."""
+    return _fql_kernel(x, qw, act_bits=act_bits, interpret=interpret)
 
 
 def quantize_per_token(x, *, bits: int = 4, backend: Backend = "auto",
@@ -71,12 +111,17 @@ def fused_hadamard_quant(x, *, block: int = 128, bits: int = 4,
 
 def fused_quant_matmul(x, qw: QuantizedWeight, *, act_bits: int = 4,
                        backend: Backend = "auto", interpret: bool = False):
-    """[smooth] → [online Hadamard] → quantize → int matmul, fused.
+    """[smooth] → [online Hadamard] → quantize → int matmul, STAGED.
 
     The full-d Kronecker rotation is split: all factors but the last run
     as XLA matmuls; the trailing power-of-two factor is fused with the
     per-token quantization in one Pallas pass (DESIGN.md §3).  Numerics
     match ``qlinear``'s XLA path (same full rotation).
+
+    This is the 3-HBM-round-trip composition (rotation write → codes
+    write → codes re-read) that :func:`fused_qlinear` collapses into one
+    kernel; it remains as the benchmark baseline and a stage-level
+    correctness cross-check (benchmarks/kernel_bench.py).
     """
     from repro.core.hadamard import apply_hadamard, kernel_fusable_factor
 

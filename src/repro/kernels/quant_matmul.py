@@ -28,12 +28,29 @@ def _cdiv(a: int, b: int) -> int:
     return (a + b - 1) // b
 
 
-def _pick(size: int, target: int) -> int:
-    """Largest divisor of ``size`` not exceeding ``target``."""
-    b = min(size, target)
-    while size % b:
-        b -= 1
-    return b
+def _round_up(a: int, m: int) -> int:
+    return _cdiv(a, m) * m
+
+
+def _pad2(a: jax.Array, rows: int, cols: int) -> jax.Array:
+    """Zero-pad a 2-D array up to (rows, cols)."""
+    pr, pc = rows - a.shape[0], cols - a.shape[1]
+    if pr == 0 and pc == 0:
+        return a
+    return jnp.pad(a, ((0, pr), (0, pc)))
+
+
+def _blocks(n: int, m: int, k: int, block_n: int, block_m: int,
+            block_k: int) -> tuple[int, int, int]:
+    """Hardware-aligned block sizes: pad to tile boundaries instead of the
+    old largest-divisor heuristic, which degenerated to divisor-1 (scalar-
+    ish grids) for prime/odd dims and for the engine's tiny-n decode rows.
+    Sublane/lane minimums: 8 rows, 128 lanes."""
+    bn = min(block_n, _round_up(n, 8))
+    bm = min(block_m, _round_up(m, 128))
+    bk = min(block_k, _round_up(k, 128))
+    bk += bk % 2  # packed nibble pairs must not straddle blocks
+    return bn, bm, bk
 
 
 def _qmm_kernel(aq_ref, wq_ref, as_ref, ws_ref, o_ref, acc_ref, *, k_steps: int):
@@ -112,10 +129,13 @@ def quant_matmul(aq: jax.Array, wq: jax.Array, a_scale: jax.Array,
     """Unpacked int8 × int8 → out_dtype.  aq (n,k), wq (k,m)."""
     n, k = aq.shape
     _, m = wq.shape
-    bn, bm, bk = _pick(n, block_n), _pick(m, block_m), _pick(k, block_k)
-    return _call(_qmm_kernel, aq, wq, a_scale, w_scale, k=k, m=m, n=n,
-                 block_n=bn, block_m=bm, block_k=bk, packed=False,
-                 out_dtype=out_dtype, interpret=interpret)
+    bn, bm, bk = _blocks(n, m, k, block_n, block_m, block_k)
+    n_p, m_p, k_p = _round_up(n, bn), _round_up(m, bm), _round_up(k, bk)
+    y = _call(_qmm_kernel, _pad2(aq, n_p, k_p), _pad2(wq, k_p, m_p),
+              _pad2(a_scale, n_p, 1), _pad2(w_scale, 1, m_p),
+              k=k_p, m=m_p, n=n_p, block_n=bn, block_m=bm, block_k=bk,
+              packed=False, out_dtype=out_dtype, interpret=interpret)
+    return y[:n, :m]
 
 
 @functools.partial(
@@ -126,13 +146,18 @@ def quant_matmul_packed(aq: jax.Array, wq_packed: jax.Array, a_scale: jax.Array,
                         w_scale: jax.Array, *, block_n: int = 128,
                         block_m: int = 128, block_k: int = 512,
                         out_dtype=jnp.bfloat16, interpret: bool = False) -> jax.Array:
-    """int4-packed weights: wq_packed (k/2, m) bytes, k codes along rows."""
+    """int4-packed weights: wq_packed (k/2, m) bytes, k codes along rows.
+
+    Blocks are 128-lane aligned (even), so nibble pairs never straddle a
+    block boundary; padded rows are zero bytes = two zero codes.
+    """
     n, k = aq.shape
     _, m = wq_packed.shape
-    bn, bm = _pick(n, block_n), _pick(m, block_m)
-    bk = _pick(k, block_k)
-    if bk % 2:  # nibble pairs must not straddle blocks
-        bk = _pick(k, block_k + 1) if _pick(k, block_k + 1) % 2 == 0 else 2
-    return _call(_qmm_packed_kernel, aq, wq_packed, a_scale, w_scale, k=k, m=m,
-                 n=n, block_n=bn, block_m=bm, block_k=bk, packed=True,
-                 out_dtype=out_dtype, interpret=interpret)
+    bn, bm, bk = _blocks(n, m, k, block_n, block_m, block_k)
+    n_p, m_p, k_p = _round_up(n, bn), _round_up(m, bm), _round_up(k, bk)
+    y = _call(_qmm_packed_kernel, _pad2(aq, n_p, k_p),
+              _pad2(wq_packed, k_p // 2, m_p), _pad2(a_scale, n_p, 1),
+              _pad2(w_scale, 1, m_p), k=k_p, m=m_p, n=n_p, block_n=bn,
+              block_m=bm, block_k=bk, packed=True, out_dtype=out_dtype,
+              interpret=interpret)
+    return y[:n, :m]

@@ -39,10 +39,11 @@ def quantize_per_token(x: jax.Array, *, bits: int = 4, block_n: int = 8,
     block_n × d × (2B in + 1B out) — e.g. 8 × 53248 ≈ 1.2 MiB.
     """
     n, d = x.shape
-    if n % block_n:
-        block_n = 1
-    grid = (n // block_n,)
-    return pl.pallas_call(
+    n_p = -(-n // block_n) * block_n  # pad ragged/tiny-n (decode) row counts
+    if n_p != n:
+        x = jnp.pad(x, ((0, n_p - n), (0, 0)))
+    grid = (n_p // block_n,)
+    q, s = pl.pallas_call(
         functools.partial(_quantize_kernel, levels=qmax(bits)),
         grid=grid,
         in_specs=[pl.BlockSpec((block_n, d), lambda i: (i, 0))],
@@ -51,8 +52,9 @@ def quantize_per_token(x: jax.Array, *, bits: int = 4, block_n: int = 8,
             pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n, d), jnp.int8),
-            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n_p, d), jnp.int8),
+            jax.ShapeDtypeStruct((n_p, 1), jnp.float32),
         ],
         interpret=interpret,
     )(x)
+    return q[:n], s[:n]

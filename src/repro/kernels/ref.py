@@ -10,13 +10,16 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.hadamard import apply_hadamard
-from repro.core.quantizer import qmax
+from repro.core.hadamard import (
+    apply_hadamard, kernel_fusable_factor, plan_hadamard,
+)
+from repro.core.quantizer import qmax, unpack_int4
 
 __all__ = [
     "quantize_per_token_ref",
     "quant_matmul_ref",
     "fused_hadamard_quant_ref",
+    "fused_qlinear_ref",
     "int_matmul_ref",
 ]
 
@@ -47,6 +50,48 @@ def quant_matmul_ref(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
     aq, a_scale = quantize_per_token_ref(x, act_bits)
     acc = int_matmul_ref(aq, w_q)
     return (acc.astype(jnp.float32) * a_scale * w_scale).astype(out_dtype)
+
+
+def fused_qlinear_ref(x: jax.Array, qw, act_bits: int = 4) -> jax.Array:
+    """Oracle for the one-pass ``kernels.fused_qlinear``: same staging
+    (XLA leading Kronecker factors in x.dtype, trailing factor + smooth +
+    quantize in f32), same had_mask gating, same int32 accumulation.
+
+    ``qw`` is a ``repro.core.qlinear.QuantizedWeight`` (duck-typed here
+    to keep the oracle import-free of the execution layer).
+    """
+    n, k = x.shape
+    smooth, had_mask = qw.smooth, qw.had_mask
+    last = kernel_fusable_factor(qw.had_dim) if qw.had_dim else 0
+    if qw.had_dim and last < 2:          # pure-Paley trailing: XLA rotation
+        if smooth is not None:
+            x = x / smooth.astype(x.dtype)
+        xr = apply_hadamard(x, qw.had_dim)
+        x = xr if had_mask is None else jnp.where(had_mask > 0, xr, x)
+        smooth = had_mask = None
+        block = 0
+    elif qw.had_dim and len(plan_hadamard(qw.had_dim).factors) > 1:
+        if smooth is not None:           # leading factors (and smooth) in XLA
+            x = x / smooth.astype(x.dtype)
+        xpre = apply_hadamard(x, qw.had_dim, skip_last=True)
+        x = xpre if had_mask is None else jnp.where(had_mask > 0, xpre, x)
+        smooth = None
+        block = last
+    else:
+        block = last
+    xf = x.astype(jnp.float32)
+    if smooth is not None:
+        xf = xf / smooth.astype(jnp.float32)[None, :]
+    if block >= 2:
+        xt = apply_hadamard(xf.reshape(n, k // block, block),
+                            block).reshape(n, k)
+        xf = xt if had_mask is None else jnp.where(had_mask > 0, xt, xf)
+    aq, a_scale = quantize_per_token_ref(xf, act_bits)
+    w = qw.w_q
+    if qw.packed:
+        w = jnp.swapaxes(unpack_int4(jnp.swapaxes(w, -1, -2)), -1, -2)
+    acc = int_matmul_ref(aq, w)
+    return (acc.astype(jnp.float32) * a_scale * qw.scale).astype(x.dtype)
 
 
 def fused_hadamard_quant_ref(x: jax.Array, block: int, bits: int = 4):

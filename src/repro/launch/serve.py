@@ -55,6 +55,10 @@ def main(argv=None):
     ap.add_argument("--plan-json", default="",
                     help="load a saved LayerwisePlan JSON instead of the "
                          "fixed §V plan (overridden by --auto-plan)")
+    ap.add_argument("--use-kernels", default="auto",
+                    choices=["auto", "never", "interpret"],
+                    help="matmul backend (resolved by kernels.ops: auto = "
+                         "fused Pallas qlinear on TPU, XLA elsewhere)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--engine", default="batched",
                     choices=["batched", "per-slot"],
@@ -88,7 +92,8 @@ def main(argv=None):
                 keep_samples=128 if args.auto_plan else 0)
             policy = QuantPolicy(
                 weight_bits=args.weight_bits, act_bits=args.act_bits,
-                kv_cache_bits=args.kv_bits or None, use_kernels="never")
+                kv_cache_bits=args.kv_bits or None,
+                use_kernels=args.use_kernels)
             if args.auto_plan:
                 from repro.autoplan import SearchConfig, search_plan
 
@@ -143,7 +148,8 @@ def main(argv=None):
         print(f"served {len(done)}/{args.requests} requests, {toks} tokens "
               f"in {dt:.2f}s ({toks / max(dt, 1e-9):.1f} tok/s, "
               f"{args.engine} engine: {eng.decode_dispatches} decode "
-              f"dispatches over {eng.ticks} ticks = {dpt:.2f}/tick)")
+              f"dispatches over {eng.ticks} ticks = {dpt:.2f}/tick, "
+              f"kernel backend: {eng.kernel_backend})")
         for r in done[:3]:
             print(f"  req {r.uid}: {r.out_tokens[:12]}...")
 

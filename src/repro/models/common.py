@@ -87,7 +87,12 @@ def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
 
 
 def dense(x: jax.Array, p: Params, policy: QuantPolicy | None = None) -> jax.Array:
-    """Apply a linear from either a bf16 or a quantized param leaf."""
+    """Apply a linear from either a bf16 or a quantized param leaf.
+
+    Quantized leaves dispatch through ``qlinear`` → ``kernels.ops``: on
+    TPU the whole smooth→rotate→quantize→matmul chain is ONE fused
+    Pallas kernel per linear (docs/kernels.md) — this is the call site
+    the engine's ``(max_slots, 1)`` decode tick bottoms out in."""
     if "qw" in p:
         y = qlinear(x, p["qw"], policy or QuantPolicy())
     else:

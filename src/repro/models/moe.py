@@ -147,6 +147,11 @@ def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig,
                      and E % mesh.shape["model"] == 0) else None
 
     def expert_mats(name):
+        # NOTE: routed experts keep the ragged dequant-to-bf16 path below
+        # (per-expert codes under shard_map; DESIGN.md §5).  Every DENSE
+        # leaf in this file (attention, shared/parallel FFN, lm_head)
+        # goes through cm.dense → qlinear and rides the one-pass fused
+        # Pallas kernel on TPU (docs/kernels.md).
         leaf = p[name]
         if isinstance(leaf, dict) and "qw" in leaf:
             qw = leaf["qw"]

@@ -108,6 +108,18 @@ class _EngineBase:
         """Build this engine's cache storage (layout differs per engine)."""
         raise NotImplementedError
 
+    @property
+    def kernel_backend(self) -> str:
+        """Resolved matmul backend for this engine's policy ("bf16" when
+        no quantization policy is attached).  repro.kernels.ops is the
+        single dispatch authority (docs/kernels.md): on TPU hosts the
+        quantized decode tick runs the one-pass fused Pallas qlinear."""
+        if self.policy is None:
+            return "bf16"
+        from repro.kernels import ops
+
+        return ops.resolve_backend(self.policy.use_kernels)
+
     def submit(self, req: Request):
         self.queue.append(req)
 

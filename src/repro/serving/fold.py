@@ -8,6 +8,11 @@ leaf is a folded, RTN-quantized :class:`QuantizedWeight`:
                                     Kronecker apply / fused Pallas kernel)
     smooth_rotate: both, scaling FIRST (the paper's hybrid, §IV-E)
 
+    The runtime side of every folded leaf is the ONE-pass fused qlinear
+    kernel (docs/kernels.md); mixed layerwise stacks emit a traced
+    ``had_mask`` gate that the kernel multiplexes in-VMEM, so searched
+    plans stay on the fast path.
+
 The per-module policy is a :class:`repro.core.transforms.TransformPlan`;
 the default follows the paper's §V recommendation (SmoothRotation on
 down_proj-type inputs, rotation elsewhere).  Calibration stats come from

@@ -117,9 +117,11 @@ def test_qlinear_interpret_policy_matches_xla():
     assert rel < 0.05, rel
 
 
-def test_qlinear_interpret_with_had_mask_falls_back_to_xla():
-    """Mixed layerwise stacks (had_mask) aren't supported by the fused
-    path; qlinear must take the gated XLA path — identical output."""
+def test_qlinear_interpret_with_had_mask_stays_fused():
+    """Mixed layerwise stacks (had_mask) run on the fused path — the
+    traced scalar gates the rotation IN-KERNEL (no XLA fallback; the
+    seed forced these onto the XLA route).  Codes may flip ±1 on exact
+    rounding ties (bf16 inputs), so compare at the tensor level."""
     import dataclasses as dc
 
     d = 256
@@ -131,7 +133,79 @@ def test_qlinear_interpret_with_had_mask_falls_back_to_xla():
         qlinear(x, qw, QuantPolicy(use_kernels="interpret")), np.float32)
     y_xla = np.asarray(
         qlinear(x, qw, QuantPolicy(use_kernels="never")), np.float32)
-    np.testing.assert_array_equal(y_interp, y_xla)
+    rel = np.linalg.norm(y_interp - y_xla) / np.linalg.norm(y_xla)
+    assert rel < 0.05, rel
+
+
+@pytest.mark.parametrize("n,k,m", [(5, 250, 66), (3, 130, 7), (1, 384, 96),
+                                   (7, 512, 130)])
+def test_quant_matmul_nondivisible_dims(n, k, m):
+    """Prime/odd dims and tiny decode row counts: blocks pad to tile
+    boundaries (the old largest-divisor heuristic degenerated to
+    divisor-1 scalar-ish grids)."""
+    x = jax.random.normal(KEY, (n, k)).astype(jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(7), (k, m)) * 0.05
+    aq, a_scale = ref.quantize_per_token_ref(x, 4)
+    qw = quantize_weight(w, bits=8, pack=False)
+    y = ops.quant_matmul(aq, qw.w_q, a_scale, qw.scale, interpret=True)
+    acc = ref.int_matmul_ref(aq, qw.w_q)
+    y_ref = (acc.astype(jnp.float32) * a_scale * qw.scale
+             ).astype(jnp.bfloat16)
+    assert y.shape == (n, m)
+    np.testing.assert_array_equal(np.asarray(y, np.float32),
+                                  np.asarray(y_ref, np.float32))
+
+
+def test_quant_matmul_packed_odd_block_k_override():
+    """Caller-specified odd block_k must be repaired, not trace-crash
+    (nibble pairs may not straddle k-blocks)."""
+    n, k, m = 8, 512, 64
+    x = jax.random.normal(KEY, (n, k)).astype(jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(9), (k, m)) * 0.05
+    aq, a_scale = ref.quantize_per_token_ref(x, 4)
+    qw_u = quantize_weight(w, bits=4, pack=False)
+    qw_p = quantize_weight(w, bits=4, pack=True)
+    from repro.kernels.quant_matmul import quant_matmul_packed
+
+    y_p = quant_matmul_packed(aq, qw_p.w_q, a_scale, qw_p.scale,
+                              block_k=255, interpret=True)
+    y_u = ops.quant_matmul(aq, qw_u.w_q, a_scale, qw_u.scale, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_p, np.float32),
+                                  np.asarray(y_u, np.float32))
+
+
+def test_quant_matmul_packed_nondivisible_m():
+    """Packed path with odd m and non-power-of-two k: padding keeps the
+    nibble pairs aligned and the result identical to unpacked."""
+    n, k, m = 7, 384, 66
+    x = jax.random.normal(KEY, (n, k)).astype(jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(8), (k, m)) * 0.05
+    aq, a_scale = ref.quantize_per_token_ref(x, 4)
+    qw_u = quantize_weight(w, bits=4, pack=False)
+    qw_p = quantize_weight(w, bits=4, pack=True)
+    y_u = ops.quant_matmul(aq, qw_u.w_q, a_scale, qw_u.scale, interpret=True)
+    y_p = ops.quant_matmul(aq, qw_p.w_q, a_scale, qw_p.scale, packed=True,
+                           interpret=True)
+    assert y_p.shape == (n, m)
+    np.testing.assert_array_equal(np.asarray(y_u, np.float32),
+                                  np.asarray(y_p, np.float32))
+
+
+@pytest.mark.parametrize("n", [1, 3, 5])
+def test_quantize_kernels_row_padding(n):
+    """Ragged/tiny-n (decode) rows pad up to a full sublane tile and the
+    padding is sliced off — both single-pass quantize kernels."""
+    x = jax.random.normal(KEY, (n, 256)).astype(jnp.bfloat16)
+    qk, sk = ops.quantize_per_token(x, bits=4, interpret=True)
+    qr, sr = ref.quantize_per_token_ref(x, 4)
+    assert qk.shape == (n, 256) and sk.shape == (n, 1)
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-5)
+    _codes_close(qk, qr)
+    qk, sk = ops.fused_hadamard_quant(x, block=128, interpret=True)
+    qr, sr = ref.fused_hadamard_quant_ref(x, 128, 4)
+    assert qk.shape == (n, 256) and sk.shape == (n, 1)
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-4)
+    _codes_close(qk, qr)
 
 
 @settings(max_examples=10, deadline=None)
