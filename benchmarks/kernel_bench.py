@@ -146,20 +146,25 @@ def bench_fused_vs_staged(shapes) -> list[dict]:
     return rows
 
 
-def write_artifact(rows: list[dict], quick: bool = False) -> str:
+def write_artifact(rows: list[dict], quick: bool = False,
+                   out_path: str | None = None) -> str:
     # --quick (CI smoke) writes a sibling file so it never truncates the
-    # committed full-shape perf trajectory that report.py renders
-    path = OUT_PATH.replace(".json", "_quick.json") if quick else OUT_PATH
+    # committed full-shape perf trajectory that report.py renders;
+    # --out redirects entirely (CI emits fresh JSONs OUTSIDE the
+    # checkout so report.py --check compares against the committed
+    # baseline, not the file it just overwrote)
+    path = out_path or (OUT_PATH.replace(".json", "_quick.json") if quick
+                        else OUT_PATH)
     os.makedirs(os.path.dirname(path), exist_ok=True)
     with open(path, "w") as f:
         json.dump(rows, f, indent=1)
     return path
 
 
-def run(quick: bool = False) -> dict:
+def run(quick: bool = False, out_path: str | None = None) -> dict:
     out = {}
     rows = bench_fused_vs_staged(QUICK_SHAPES if quick else FUSED_SHAPES)
-    path = write_artifact(rows, quick)
+    path = write_artifact(rows, quick, out_path)
     out["fused_vs_staged"] = rows
     assert all(r["fused_ge_staged"] for r in rows), \
         "fused path must dominate the staged roofline"
@@ -204,5 +209,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: one small fused-vs-staged shape")
+    ap.add_argument("--out", default="",
+                    help="artifact path override (CI regression gate)")
     args = ap.parse_args()
-    run(quick=args.quick)
+    run(quick=args.quick, out_path=args.out or None)

@@ -2,10 +2,19 @@
 and §Kernels tables from the JSON artifacts
 (experiments/dryrun/<mesh>/<arch>__<shape>.json,
 experiments/autoplan/<arch>_telemetry.json,
-experiments/serving/throughput.json,
+experiments/serving/BENCH_serving.json,
 experiments/kernels/BENCH_kernels.json).
 
 Usage: PYTHONPATH=src python -m benchmarks.report [--out EXPERIMENTS_tables.md]
+
+``--check FRESH.json [...]`` is the CI benchmark-regression gate: each
+freshly emitted ``BENCH_*_quick.json`` is compared against its committed
+``experiments/**/BENCH_*.json`` baseline (the ``_quick`` suffix is
+stripped to find it) and the run FAILS on a >20% throughput regression.
+Wall-clock numbers do not transfer between machines, so the gate
+compares MACHINE-PORTABLE metrics only: the kernels' modeled tok/s (an
+analytic roofline quantity) and the serving engines' throughput ratios
+relative to the per-slot baseline measured in the SAME run.
 """
 
 from __future__ import annotations
@@ -18,10 +27,11 @@ import os
 ROOT = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
 AUTOPLAN_ROOT = os.path.join(os.path.dirname(__file__), "..", "experiments",
                              "autoplan")
-SERVING_PATH = os.path.join(os.path.dirname(__file__), "..", "experiments",
-                            "serving", "throughput.json")
-KERNELS_PATH = os.path.join(os.path.dirname(__file__), "..", "experiments",
-                            "kernels", "BENCH_kernels.json")
+EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "experiments")
+SERVING_PATH = os.path.join(EXPERIMENTS, "serving", "BENCH_serving.json")
+KERNELS_PATH = os.path.join(EXPERIMENTS, "kernels", "BENCH_kernels.json")
+
+CHECK_THRESHOLD = 0.8      # fresh metric must be ≥ 80% of the baseline
 
 
 def load(mesh: str) -> list[dict]:
@@ -100,18 +110,26 @@ def load_serving() -> list[dict]:
 
 
 def serving_table(rows: list[dict]) -> str:
-    """Batched vs per-slot engine throughput (serving_throughput.py)."""
-    out = ["| arch | slots | engine | tok/s | dispatches/tick | "
-           "tick GFLOPs (roofline) | batched ≥ per-slot |",
-           "|---|---|---|---|---|---|---|"]
+    """Paged vs batched vs per-slot engine throughput
+    (serving_throughput.py → BENCH_serving.json)."""
+    out = ["| arch | slots | engine | tok/s | prefill tok/s | "
+           "dispatches/tick | pool occ. peak | paged ≥ per-slot | "
+           "batched prefill ≥ per-req |",
+           "|---|---|---|---|---|---|---|---|---|"]
     for r in rows:
-        for eng in ("batched", "per_slot"):
+        for eng in ("paged", "batched", "per_slot"):
+            if eng not in r:
+                continue
             e = r[eng]
+            occ = (f"{e['page_occupancy_peak']:.2f}"
+                   if "page_occupancy_peak" in e else "—")
             out.append(
                 f"| {r['arch']} | {r['max_slots']} | {eng} | "
-                f"{e['tok_s']:.1f} | {e['dispatches_per_tick']:.2f} | "
-                f"{r['tick_gflops_roofline']:.4g} | "
-                f"{'yes' if r['batched_ge_per_slot'] else 'NO'} |")
+                f"{e['tok_s']:.1f} | {e.get('prefill_tok_s', 0):.1f} | "
+                f"{e['dispatches_per_tick']:.2f} | {occ} | "
+                f"{'yes' if r.get('paged_ge_per_slot') else 'NO'} | "
+                f"{'yes' if r.get('batched_prefill_ge_per_request') else 'NO'}"
+                " |")
     return "\n".join(out)
 
 
@@ -142,10 +160,122 @@ def kernels_table(rows: list[dict]) -> str:
     return "\n".join(out)
 
 
+# ---------------------------------------------------------------------------
+# --check: benchmark-regression gate (CI)
+# ---------------------------------------------------------------------------
+
+
+def _find_baseline(fresh_path: str) -> str | None:
+    """The committed experiments/** baseline for a fresh BENCH JSON.
+
+    Prefer the EXACT basename (quick runs compare against a committed
+    quick baseline — relative speedups shrink with the workload, so a
+    quick-vs-full comparison would be biased); fall back to the
+    ``_quick``-stripped name for purely analytic metrics."""
+    names = [os.path.basename(fresh_path)]
+    stripped = names[0].replace("_quick.json", ".json")
+    if stripped != names[0]:
+        names.append(stripped)
+    for name in names:
+        hits = sorted(glob.glob(os.path.join(EXPERIMENTS, "**", name),
+                                recursive=True))
+        hits = [h for h in hits
+                if os.path.abspath(h) != os.path.abspath(fresh_path)]
+        if hits:
+            return hits[0]
+    return None
+
+
+def _kernel_metrics(rows: list[dict]) -> dict[str, float]:
+    """shape → modeled tok/s of the fused kernel (analytic: transfers
+    across machines), plus the fused≥staged contract as a 0/1 metric."""
+    out = {}
+    for r in rows:
+        out[f"{r['shape']}:modeled_tok_s_fused"] = r["modeled_tok_s_fused"]
+        out[f"{r['shape']}:fused_ge_staged"] = float(r["fused_ge_staged"])
+    return out
+
+
+def _serving_metrics(rows: list[dict]) -> dict[str, float]:
+    """Machine-portable serving throughput metrics.
+
+    Wall-clock tok/s does not transfer across machines, and even
+    same-machine CROSS-run ratios are too noisy at the CI smoke scale —
+    so the gate compares (a) DETERMINISTIC dispatch efficiency (tokens
+    served per decode/prefill dispatch: losing the batched tick or the
+    batched admission collapses these), and (b) the same-run contract
+    booleans, whose two sides share one process and one machine."""
+    out = {}
+    for r in rows:
+        for eng in ("paged", "batched", "per_slot"):
+            if eng not in r:
+                continue
+            e = r[eng]
+            out[f"{r['arch']}:{eng}_tokens_per_decode_dispatch"] = (
+                e["tokens"] / max(e["decode_dispatches"], 1))
+            out[f"{r['arch']}:{eng}_prefill_tokens_per_dispatch"] = (
+                e["prefill_tokens"] / max(e["prefill_dispatches"], 1))
+        for flag in ("paged_ge_per_slot", "batched_prefill_ge_per_request",
+                     "greedy_tokens_identical"):
+            if flag in r:
+                out[f"{r['arch']}:{flag}"] = float(r[flag])
+    return out
+
+
+def _bench_metrics(path: str, rows: list[dict]) -> dict[str, float]:
+    name = os.path.basename(path)
+    if "kernels" in name:
+        return _kernel_metrics(rows)
+    if "serving" in name:
+        return _serving_metrics(rows)
+    raise SystemExit(f"--check: no metric extractor for {name}")
+
+
+def check(paths: list[str]) -> int:
+    """Compare fresh BENCH JSONs against committed baselines; return the
+    number of >20% regressions (0 = gate passes)."""
+    failures = 0
+    for fresh_path in paths:
+        base_path = _find_baseline(fresh_path)
+        if base_path is None:
+            print(f"CHECK SKIP {fresh_path}: no committed baseline")
+            continue
+        with open(fresh_path) as f:
+            fresh = _bench_metrics(fresh_path, json.load(f))
+        with open(base_path) as f:
+            base = _bench_metrics(base_path, json.load(f))
+        shared = sorted(set(fresh) & set(base))
+        if not shared:
+            print(f"CHECK SKIP {fresh_path}: no overlapping rows with "
+                  f"{base_path}")
+            continue
+        for key in shared:
+            b = base[key]
+            ratio = fresh[key] / b if b else 1.0
+            ok = ratio >= CHECK_THRESHOLD
+            tag = "ok  " if ok else "FAIL"
+            print(f"CHECK {tag} {os.path.basename(fresh_path)} {key}: "
+                  f"fresh={fresh[key]:.4g} baseline={b:.4g} "
+                  f"ratio={ratio:.3f} (floor {CHECK_THRESHOLD})")
+            failures += not ok
+    return failures
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="")
+    ap.add_argument("--check", nargs="+", metavar="FRESH_JSON", default=None,
+                    help="benchmark-regression gate: compare fresh BENCH "
+                         "JSONs against the committed experiments/** "
+                         "baselines; exit 1 on a >20%% throughput "
+                         "regression")
     args = ap.parse_args(argv)
+    if args.check is not None:
+        failures = check(args.check)
+        if failures:
+            raise SystemExit(f"--check: {failures} benchmark regression(s)")
+        print("--check: all benchmarks within threshold")
+        return
     parts = []
     for mesh in ("16x16", "2x16x16"):
         rows = load(mesh)

@@ -25,7 +25,8 @@ def main() -> None:
         ("fig 5 massive outliers + eqs 7-9", massive_outliers),
         ("kernel microbench", kernel_bench),
         ("model-level quantization", model_quant),
-        ("serving throughput (batched vs per-slot)", serving_throughput),
+        ("serving throughput (paged vs batched vs per-slot)",
+         serving_throughput),
     ]
     failures = []
     for label, mod in modules:

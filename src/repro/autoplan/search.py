@@ -33,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.autoplan.plan import (
-    LayerwisePlan, ModuleChoice, PLANNABLE_MODULES,
+    LayerwisePlan, ModuleChoice,
 )
 from repro.configs.base import ModelConfig
 from repro.core.calibration import CalibStats, smoothing_scales_from_stats

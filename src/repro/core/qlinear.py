@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import hadamard as hd
-from repro.core.quantizer import QuantConfig, pack_int4, quantize, qmax, unpack_int4
+from repro.core.quantizer import QuantConfig, pack_int4, quantize, unpack_int4
 
 __all__ = ["QuantizedWeight", "quantize_weight", "qlinear", "QuantPolicy"]
 

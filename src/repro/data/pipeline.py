@@ -14,7 +14,6 @@ import dataclasses
 import os
 from typing import Iterator
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -20,7 +20,6 @@ interpreter (CPU correctness tests).
 
 from __future__ import annotations
 
-import functools
 from typing import Literal
 
 import jax

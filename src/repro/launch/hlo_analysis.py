@@ -26,7 +26,6 @@ from __future__ import annotations
 import dataclasses
 import re
 from collections import defaultdict
-from typing import Any
 
 __all__ = ["HloMetrics", "analyze_hlo"]
 

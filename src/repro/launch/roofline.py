@@ -15,13 +15,13 @@ redundant work.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 from repro.configs.base import ModelConfig, ShapeCell
 from repro.launch.hlo_analysis import HloMetrics
 
 __all__ = ["HW", "RooflineReport", "roofline", "model_params", "model_flops",
-           "serving_decode_cell", "serving_tick_flops"]
+           "serving_decode_cell", "serving_tick_flops",
+           "serving_prefill_cell", "serving_prefill_flops"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,6 +123,27 @@ def serving_decode_cell(max_slots: int, max_len: int = 256) -> ShapeCell:
 def serving_tick_flops(cfg: ModelConfig, max_slots: int) -> float:
     """Useful model FLOPs of one batched engine tick (2·N_active·slots)."""
     return model_flops(cfg, serving_decode_cell(max_slots))
+
+
+def serving_prefill_cell(n_admit: int, padded_len: int) -> ShapeCell:
+    """One in-engine batched prefill dispatch as a roofline shape cell.
+
+    ``PagedServingEngine`` admits a whole batch with ONE
+    ``(n_admit, padded_prompt_len)`` ``prefill_paged`` program — a
+    ``prefill``-kind cell with ``global_batch == n_admit``.  The seed
+    admission path instead ran ``n_admit`` batch-1 prefills plus a full
+    slot-extent ``write_slot`` copy each; the padded cell's FLOPs bound
+    the batching overhead (padding rows) the dispatch saving buys.
+    """
+    return ShapeCell(f"serve_prefill_b{n_admit}x{padded_len}", padded_len,
+                     n_admit, "prefill")
+
+
+def serving_prefill_flops(cfg: ModelConfig, n_admit: int,
+                          padded_len: int) -> float:
+    """Useful model FLOPs of one batched admission dispatch
+    (2·N_active·n_admit·padded_len)."""
+    return model_flops(cfg, serving_prefill_cell(n_admit, padded_len))
 
 
 @dataclasses.dataclass

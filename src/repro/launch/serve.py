@@ -20,16 +20,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import Checkpointer, restore_pytree
+from repro.checkpoint import Checkpointer
 from repro.configs.base import get_config
 from repro.core.qlinear import QuantPolicy
 from repro.core.transforms import TransformPlan
-from repro.data import calibration_stream, synthetic_batches
+from repro.data import calibration_stream
+from repro.launch import compat
 from repro.launch.mesh import make_test_mesh
 from repro.models.api import get_model
-from repro.serving.engine import PerSlotServingEngine, Request, ServingEngine
+from repro.serving.engine import (PagedServingEngine, PerSlotServingEngine,
+                                  Request, ServingEngine)
 from repro.serving.fold import collect_calibration, fold_quantize
-from repro.launch import compat
 
 
 def main(argv=None):
@@ -60,11 +61,20 @@ def main(argv=None):
                     help="matmul backend (resolved by kernels.ops: auto = "
                          "fused Pallas qlinear on TPU, XLA elsewhere)")
     ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--engine", default="batched",
-                    choices=["batched", "per-slot"],
-                    help="batched: ONE (max_slots, 1) decode dispatch per "
-                         "tick (default); per-slot: the original one-"
-                         "dispatch-per-active-slot baseline")
+    ap.add_argument("--engine", default="paged",
+                    choices=["paged", "batched", "per-slot"],
+                    help="paged: paged KV pool + in-engine batched prefill "
+                         "(default); batched: dense slot-major cache, ONE "
+                         "(max_slots, 1) decode dispatch per tick; "
+                         "per-slot: the original one-dispatch-per-active-"
+                         "slot baseline")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="paged engine: tokens per KV page")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="paged engine: shared pool size in pages (0 = "
+                         "zero-overcommit sizing, max_slots × pages/slot; "
+                         "smaller pools overcommit and rely on admission "
+                         "backpressure)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -128,11 +138,18 @@ def main(argv=None):
             print(f"calibrated + folded W{args.weight_bits}A{args.act_bits} "
                   f"in {time.time() - t0:.1f}s (plan: {plan_desc})")
 
-        engine_cls = (ServingEngine if args.engine == "batched"
-                      else PerSlotServingEngine)
-        eng = engine_cls(model, params, cfg, max_slots=args.max_slots,
-                         max_len=args.max_len, policy=policy,
-                         kv_bits=args.kv_bits or None)
+        if args.engine == "paged":
+            eng = PagedServingEngine(
+                model, params, cfg, max_slots=args.max_slots,
+                max_len=args.max_len, policy=policy,
+                kv_bits=args.kv_bits or None, page_size=args.page_size,
+                n_pages=args.pool_pages or None)
+        else:
+            engine_cls = (ServingEngine if args.engine == "batched"
+                          else PerSlotServingEngine)
+            eng = engine_cls(model, params, cfg, max_slots=args.max_slots,
+                             max_len=args.max_len, policy=policy,
+                             kv_bits=args.kv_bits or None)
         rng = np.random.default_rng(0)
         for i in range(args.requests):
             eng.submit(Request(
@@ -143,13 +160,19 @@ def main(argv=None):
         t0 = time.time()
         done = eng.run(max_ticks=10_000)
         dt = time.time() - t0
-        toks = sum(len(r.out_tokens) for r in done)
-        dpt = eng.decode_dispatches / max(eng.ticks, 1)
-        print(f"served {len(done)}/{args.requests} requests, {toks} tokens "
-              f"in {dt:.2f}s ({toks / max(dt, 1e-9):.1f} tok/s, "
-              f"{args.engine} engine: {eng.decode_dispatches} decode "
-              f"dispatches over {eng.ticks} ticks = {dpt:.2f}/tick, "
+        st = eng.run_stats
+        print(f"served {len(done)}/{args.requests} requests, "
+              f"{st['decode_tokens']} tokens in {dt:.2f}s "
+              f"({st['decode_tokens'] / max(dt, 1e-9):.1f} tok/s, "
+              f"{args.engine} engine: {st['decode_dispatches']} decode "
+              f"dispatches over {st['ticks']} ticks = "
+              f"{st['dispatches_per_tick']:.2f}/tick, plus "
+              f"{st['prefill_dispatches']} prefill dispatches, "
               f"kernel backend: {eng.kernel_backend})")
+        if "n_pages" in st:
+            print(f"  page pool: {st['peak_pages_in_use']}/{st['n_pages']} "
+                  f"pages at peak ({100 * st['page_occupancy_peak']:.0f}% "
+                  f"occupancy, page size {st['page_size']})")
         for r in done[:3]:
             print(f"  req {r.uid}: {r.out_tokens[:12]}...")
 

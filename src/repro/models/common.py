@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.qlinear import QuantizedWeight, QuantPolicy, qlinear
+from repro.core.qlinear import QuantPolicy, qlinear
 from repro.launch import compat
 
 Params = dict[str, Any]
@@ -32,6 +32,8 @@ __all__ = [
     "init_embedding", "embed", "cross_entropy", "KVCache", "init_kv_cache",
     "cache_update", "cache_read", "stack_layer_params", "scan_layers",
     "batch_slot_cache", "cache_at", "write_slot",
+    "PagedKVCache", "init_paged_kv_cache", "pages_per_slot", "paged_update",
+    "paged_view", "quant_roundtrip_kv", "gather_page_rows", "take_last_valid",
 ]
 
 
@@ -427,6 +429,180 @@ def write_slot(cache, slot_cache, slot: int):
     return jax.tree.map(put, cache, slot_cache)
 
 
+# -- paged KV cache (serving engine, continuous batching) -------------------
+#
+# The dense slot-major layout above reserves a full (max_len) extent per
+# slot.  The paged layout replaces it with fixed-size PAGES drawn from a
+# SHARED pool: data leaves are (L, n_pages, page, hkv, d), a per-slot
+# page table maps logical page j of a slot (tokens [j·page, (j+1)·page))
+# to a physical pool page, and slots grow one page at a time — freed
+# pages return to the pool on retirement.  int8 KV scale leaves page
+# alongside their data leaves with the same indirection.  Pages are
+# allocated CONTIGUOUSLY per slot, so the per-page validity mask reduces
+# to the per-row valid-length prefix mask attention already applies.
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PagedKVCache:
+    """Paged slot-major KV cache over a shared page pool.
+
+    ``page_table[slot, j]`` is the physical page holding the slot's
+    tokens ``[j*page, (j+1)*page)``; ``-1`` marks an unassigned logical
+    page.  Writes routed through an unassigned page are DROPPED (the
+    scatter goes out of bounds), reads clamp to page 0 and rely on the
+    valid-length mask — the engine's host-side allocator owns the table.
+    """
+
+    k: jax.Array                     # (L, n_pages, page, hkv, d) bf16|int8
+    v: jax.Array
+    k_scale: jax.Array | None        # (L, n_pages, page, hkv, 1) f32 when int8
+    v_scale: jax.Array | None
+    page_table: jax.Array            # (slots, pages_per_slot) int32, -1 = free
+    length: jax.Array                # (slots,) int32 — tokens filled per slot
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[2]
+
+    @property
+    def n_pages(self) -> int:
+        return self.k.shape[1]
+
+
+def pages_per_slot(max_len: int, page_size: int) -> int:
+    """Page-table width: logical pages needed to back ``max_len`` tokens."""
+    return -(-max_len // page_size)
+
+
+def init_paged_kv_cache(cfg: ModelConfig, n_layers: int, slots: int,
+                        max_len: int, *, page_size: int = 64,
+                        n_pages: int | None = None, bits: int | None = None,
+                        dtype=jnp.bfloat16, head_dim: int | None = None,
+                        kv_heads: int | None = None) -> PagedKVCache:
+    """Shared page pool + empty page table.  ``n_pages=None`` sizes the
+    pool for zero overcommit (slots × pages_per_slot — every slot can
+    reach ``max_len``); smaller pools overcommit and rely on the
+    engine's admission backpressure."""
+    if cfg.attn_window:
+        raise ValueError("paged KV does not support sliding-window (ring) "
+                         "caches; use the dense slot-major layout")
+    hkv = cfg.num_kv_heads if kv_heads is None else kv_heads
+    hd = cfg.head_dim if head_dim is None else head_dim
+    width = pages_per_slot(max_len, page_size)
+    if n_pages is None:
+        n_pages = slots * width
+    shape = (n_layers, n_pages, page_size, hkv, hd)
+    table = jnp.full((slots, width), -1, jnp.int32)
+    length = jnp.zeros((slots,), jnp.int32)
+    if bits == 8:
+        return PagedKVCache(
+            k=jnp.zeros(shape, jnp.int8), v=jnp.zeros(shape, jnp.int8),
+            k_scale=jnp.zeros((*shape[:4], 1), jnp.float32),
+            v_scale=jnp.zeros((*shape[:4], 1), jnp.float32),
+            page_table=table, length=length)
+    return PagedKVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                        k_scale=None, v_scale=None, page_table=table,
+                        length=length)
+
+
+def paged_update(layer_kv: dict, k_new: jax.Array, v_new: jax.Array,
+                 length: jax.Array, page_table: jax.Array, *,
+                 valid_new: jax.Array | None = None) -> dict:
+    """Scatter-write new k/v into pool pages through the page table.
+
+    layer_kv: dict(k, v[, k_scale, v_scale]) with POOL shapes
+    (n_pages, page, h, d).  k_new/v_new: (b, s, h, d) written at per-row
+    positions ``length + [0, s)``.  ``valid_new``: optional (b,) count of
+    REAL new tokens per row (batched prefill right-pads mixed prompt
+    lengths) — writes beyond it are dropped.  Any write that resolves to
+    an unassigned (-1) or out-of-range logical page is routed out of
+    bounds and dropped by the scatter, so padding rows and stalled slots
+    cannot corrupt the pool.
+    """
+    n_pages, page = layer_kv["k"].shape[0], layer_kv["k"].shape[1]
+    b, s = k_new.shape[0], k_new.shape[1]
+    width = page_table.shape[1]
+    pos = jnp.broadcast_to(
+        jnp.asarray(length).reshape(-1, 1) + jnp.arange(s)[None], (b, s))
+    logical = pos // page
+    phys = jnp.take_along_axis(page_table, jnp.minimum(logical, width - 1),
+                               axis=1)
+    ok = (logical < width) & (phys >= 0)
+    if valid_new is not None:
+        ok &= jnp.arange(s)[None] < jnp.asarray(valid_new).reshape(-1, 1)
+    phys = jnp.where(ok, phys, n_pages)          # out of bounds → dropped
+    pflat, oflat = phys.reshape(-1), (pos % page).reshape(-1)
+
+    def put(buf, val):
+        flat = val.reshape(b * s, *val.shape[2:]).astype(buf.dtype)
+        return buf.at[pflat, oflat].set(flat, mode="drop")
+
+    out = dict(layer_kv)
+    if layer_kv.get("k_scale") is not None:
+        kq, ks = _quant_kv(k_new)
+        vq, vs = _quant_kv(v_new)
+        out["k"], out["v"] = put(layer_kv["k"], kq), put(layer_kv["v"], vq)
+        out["k_scale"] = put(layer_kv["k_scale"], ks)
+        out["v_scale"] = put(layer_kv["v_scale"], vs)
+    else:
+        out["k"], out["v"] = put(layer_kv["k"], k_new), put(layer_kv["v"], v_new)
+    return out
+
+
+def paged_view(layer_kv: dict, page_table: jax.Array):
+    """Contiguous dequantized (k, v) views of a paged pool, per slot.
+
+    Gathers each slot's pages in logical order into (b, width·page, h, d)
+    — positions past the slot's valid length read clamped/stale pages and
+    MUST be masked by the caller's valid-length mask (they always are:
+    pages are allocated contiguously, so page validity ≡ length prefix).
+    """
+    idx = jnp.maximum(page_table, 0)                      # (b, width)
+    k, v = layer_kv["k"][idx], layer_kv["v"][idx]         # (b, w, page, h, d)
+    if layer_kv.get("k_scale") is not None:
+        k = (k.astype(jnp.float32) * layer_kv["k_scale"][idx]
+             ).astype(jnp.bfloat16)
+        v = (v.astype(jnp.float32) * layer_kv["v_scale"][idx]
+             ).astype(jnp.bfloat16)
+    b, w, page = k.shape[0], k.shape[1], k.shape[2]
+    return (k.reshape(b, w * page, *k.shape[3:]),
+            v.reshape(b, w * page, *v.shape[3:]))
+
+
+def gather_page_rows(page_table: jax.Array, slots) -> jax.Array:
+    """Page-table rows for a batch of admitted slots.
+
+    ``slots`` may contain the sentinel value ``page_table.shape[0]``
+    (batched prefill pads the admission batch to a bucketed row count):
+    sentinel rows resolve to all-unassigned (-1) so their writes drop.
+    """
+    n_slots = page_table.shape[0]
+    sl = jnp.asarray(slots)
+    rows = page_table[jnp.clip(sl, 0, n_slots - 1)]
+    return jnp.where((sl[:, None] >= 0) & (sl[:, None] < n_slots), rows, -1)
+
+
+def take_last_valid(x: jax.Array, lengths) -> jax.Array:
+    """(n, s, d) → (n, 1, d) at each row's last valid position (the
+    right-padded batched-prefill logits gather)."""
+    idx = jnp.maximum(jnp.asarray(lengths) - 1, 0)
+    return jnp.take_along_axis(x, idx[:, None, None], axis=1)
+
+
+def quant_roundtrip_kv(x: jax.Array) -> jax.Array:
+    """Quantize→dequantize through the int8 KV path (what a reader of the
+    cache would see).  Batched prefill attends over LOCAL fresh k/v
+    instead of reading them back from the pool; int8 caches must
+    roundtrip so the local view matches the per-slot oracle bit for bit."""
+    q, s = _quant_kv(x)
+    return (q.astype(jnp.float32) * s).astype(jnp.bfloat16)
+
+
 def flash_decode(q, layer_kv: dict, valid, *, dp_spec) -> jax.Array:
     """Distributed online-softmax decode over a SEQUENCE-sharded KV cache.
 
@@ -507,12 +683,23 @@ def _flash_decode_ok(cfg: ModelConfig, q, layer_kv) -> tuple[bool, Any]:
 
 def attn_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
                layer_kv: dict | None = None, length: jax.Array | int = 0,
-               policy: QuantPolicy | None = None, taps: dict | None = None):
+               policy: QuantPolicy | None = None, taps: dict | None = None,
+               page_table: jax.Array | None = None,
+               valid_new: jax.Array | None = None,
+               prefill_local: bool = False):
     """Full attention block (pre-norm). Returns (y, updated layer_kv).
 
     ``length`` may be a (b,) vector of per-row cache depths (slot-major
     batched decode): RoPE positions, cache writes, and the valid-length
     mask are then applied per row.
+
+    ``page_table`` switches ``layer_kv`` to the PAGED layout: leaves are
+    pool-shaped (n_pages, page, h, d) and writes/reads go through
+    :func:`paged_update` / :func:`paged_view`.  ``prefill_local`` (paged
+    batched prefill, rows all at length 0) attends over the freshly
+    computed k/v instead of gathering them back from the pool — the
+    causal mask alone covers validity, and ``valid_new`` masks the
+    right-padding rows' writes.
     """
     b, s, _ = x.shape
     hd, hq, hkv = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
@@ -528,7 +715,21 @@ def attn_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
     cos, sin = rope_angles(pos, hd, cfg.rope_theta)
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
-    if layer_kv is not None:  # decode / cached prefill
+    if layer_kv is not None and page_table is not None:  # paged cache
+        layer_kv = paged_update(layer_kv, k, v, length, page_table,
+                                valid_new=valid_new)
+        if prefill_local:
+            kc, vc = k, v
+            if layer_kv.get("k_scale") is not None:
+                kc, vc = quant_roundtrip_kv(k), quant_roundtrip_kv(v)
+            out = attention_scores(q, kc, vc, causal=True, q_offset=length,
+                                   bf16_io=cfg.attn_bf16_io)
+        else:
+            kc, vc = paged_view(layer_kv, page_table)
+            valid = jnp.minimum(larr + s, kc.shape[1])
+            out = attention_scores(q, kc, vc, causal=(s > 1), q_offset=length,
+                                   length=valid, bf16_io=cfg.attn_bf16_io)
+    elif layer_kv is not None:  # decode / cached prefill
         layer_kv = cache_update(layer_kv, k, v, length, window=cfg.attn_window)
         valid = jnp.minimum(larr + s, layer_kv["k"].shape[1])
         use_fd, dp_spec = (False, None)

@@ -70,8 +70,33 @@ def make_cache(cfg: ModelConfig, batch: int, max_len: int, *,
     )
 
 
+def make_paged_cache(cfg: ModelConfig, slots: int, max_len: int, *,
+                     page_size: int = 64, n_pages: int | None = None,
+                     bits: int | None = None) -> HybridCache:
+    """Slot-major SSM/conv state (O(1) per slot — nothing to page) plus a
+    PAGED pool for the shared-attention KV, one pool layer per
+    invocation; all invocations share the per-slot page table."""
+    return HybridCache(
+        ssm=jnp.zeros((cfg.num_layers, slots, cfg.ssm_nheads, cfg.ssm_headdim,
+                       cfg.ssm_state), jnp.float32),
+        conv=jnp.zeros((cfg.num_layers, slots, cfg.ssm_conv - 1,
+                        mb.conv_channels(cfg)), jnp.bfloat16),
+        attn=cm.init_paged_kv_cache(cfg, n_attn_invocations(cfg), slots,
+                                    max_len, page_size=page_size,
+                                    n_pages=n_pages, bits=bits),
+        length=jnp.zeros((slots,), jnp.int32),
+    )
+
+
 def _slice_tree(tree, lo, hi):
     return jax.tree.map(lambda a: a[lo:hi], tree)
+
+
+def _stack_kv(xs):
+    """Stack per-invocation KV dicts on a leading invocation axis."""
+    if len(xs) > 1:
+        return jax.tree.map(lambda *a: jnp.stack(a, 0), *xs)
+    return jax.tree.map(lambda a: a[None], xs[0])
 
 
 def _backbone(params, cfg: ModelConfig, h, *, cache: HybridCache | None = None,
@@ -108,23 +133,26 @@ def _backbone(params, cfg: ModelConfig, h, *, cache: HybridCache | None = None,
                 if cache.attn.quantized:
                     kv.update(k_scale=cache.attn.k_scale[attn_idx],
                               v_scale=cache.attn.v_scale[attn_idx])
-                h, kv = cm.attn_apply(sp["attn"], h, cfg, layer_kv=kv,
-                                      length=length, policy=policy)
+                paged = isinstance(cache.attn, cm.PagedKVCache)
+                h, kv = cm.attn_apply(
+                    sp["attn"], h, cfg, layer_kv=kv, length=length,
+                    policy=policy,
+                    page_table=cache.attn.page_table if paged else None)
                 kv_out.append(kv)
             h = cm.mlp_apply(sp["mlp"], h, cfg, policy)
             attn_idx += 1
     x = cm.rms_norm(h, params.get("final_ln"), cfg.norm_eps)
     new_cache = None
     if cache is not None:
-        stack = lambda xs: jax.tree.map(lambda *a: jnp.stack(a, 0), *xs) \
-            if len(xs) > 1 else jax.tree.map(lambda a: a[None], xs[0])
-        kvs = stack(kv_out)
+        kvs = _stack_kv(kv_out)
+        # replace() serves both attn cache classes (page_table rides
+        # along untouched on the paged one)
+        attn_new = dataclasses.replace(
+            cache.attn, k=kvs["k"], v=kvs["v"], k_scale=kvs.get("k_scale"),
+            v_scale=kvs.get("v_scale"), length=cache.attn.length + h.shape[1])
         new_cache = HybridCache(
             ssm=jnp.concatenate(ssm_out, 0), conv=jnp.concatenate(conv_out, 0),
-            attn=cm.KVCache(k=kvs["k"], v=kvs["v"],
-                            k_scale=kvs.get("k_scale"),
-                            v_scale=kvs.get("v_scale"),
-                            length=cache.attn.length + h.shape[1]),
+            attn=attn_new,
             length=cache.length + h.shape[1],
         )
     if collect_taps:
@@ -189,9 +217,7 @@ def prefill(params, cfg: ModelConfig, tokens, cache: HybridCache, policy=None):
             h = cm.mlp_apply(sp["mlp"], h, cfg, policy)
             attn_idx += 1
     x = cm.rms_norm(h, params.get("final_ln"), cfg.norm_eps)
-    stack = lambda xs: jax.tree.map(lambda *a: jnp.stack(a, 0), *xs) \
-        if len(xs) > 1 else jax.tree.map(lambda a: a[None], xs[0])
-    kvs = stack(kv_out)
+    kvs = _stack_kv(kv_out)
     new_cache = HybridCache(
         ssm=jnp.concatenate(ssm_out, 0), conv=jnp.concatenate(conv_out, 0),
         attn=cm.KVCache(k=kvs["k"], v=kvs["v"], k_scale=kvs.get("k_scale"),
@@ -200,4 +226,54 @@ def prefill(params, cfg: ModelConfig, tokens, cache: HybridCache, policy=None):
         length=cache.length + s,
     )
     logits = cm.dense(x[:, -1:], params["lm_head"], policy)
+    return logits, new_cache
+
+
+def prefill_paged(params, cfg: ModelConfig, tokens, lengths,
+                  cache: HybridCache, slots, policy=None):
+    """In-engine batched prefill: dt-masked chunked SSM with per-row conv
+    tails scattered into slot rows, and shared-attention KV written
+    straight into the slots' assigned pages (one paged pool layer per
+    invocation, all sharing the per-slot page table)."""
+    h = cm.embed(params["embed"], tokens)
+    ptab = cm.gather_page_rows(cache.attn.page_table, slots)
+    ssm_out, conv_out, kv_out = [], [], []
+    attn_idx = 0
+    for lo, hi, attn_after in _groups(cfg):
+        lp = _slice_tree(params["layers"], lo, hi)
+        h, st = cm.scan_layers(
+            lambda q, x, _: mb.mamba_prefill_block(q, x, cfg, policy,
+                                                   lengths=lengths),
+            lp, h, remat=False)
+        ssm_out.append(st["ssm"])
+        conv_out.append(st["conv"])
+        if attn_after:
+            sp = params["shared"]
+            kv = {"k": cache.attn.k[attn_idx], "v": cache.attn.v[attn_idx]}
+            if cache.attn.quantized:
+                kv.update(k_scale=cache.attn.k_scale[attn_idx],
+                          v_scale=cache.attn.v_scale[attn_idx])
+            h, kv = cm.attn_apply(sp["attn"], h, cfg, layer_kv=kv, length=0,
+                                  policy=policy, page_table=ptab,
+                                  valid_new=lengths, prefill_local=True)
+            kv_out.append(kv)
+            h = cm.mlp_apply(sp["mlp"], h, cfg, policy)
+            attn_idx += 1
+    x = cm.rms_norm(h, params.get("final_ln"), cfg.norm_eps)
+    kvs = _stack_kv(kv_out)
+    sl = jnp.asarray(slots)
+    larr = jnp.asarray(lengths, jnp.int32)
+    new_cache = HybridCache(
+        ssm=cache.ssm.at[:, sl].set(jnp.concatenate(ssm_out, 0), mode="drop"),
+        conv=cache.conv.at[:, sl].set(
+            jnp.concatenate(conv_out, 0).astype(cache.conv.dtype),
+            mode="drop"),
+        attn=cm.PagedKVCache(
+            k=kvs["k"], v=kvs["v"], k_scale=kvs.get("k_scale"),
+            v_scale=kvs.get("v_scale"), page_table=cache.attn.page_table,
+            length=cache.attn.length.at[sl].set(larr, mode="drop")),
+        length=cache.length.at[sl].set(larr, mode="drop"),
+    )
+    logits = cm.dense(cm.take_last_valid(x, lengths), params["lm_head"],
+                      policy)
     return logits, new_cache

@@ -263,9 +263,17 @@ def train_loss(params, cfg: ModelConfig, batch):
                             batch.get("mask"))
 
 
-def mamba_prefill_block(lp, x, cfg: ModelConfig, policy=None):
+def mamba_prefill_block(lp, x, cfg: ModelConfig, policy=None, lengths=None):
     """Chunked forward of one block that ALSO returns the decode state
-    (final SSM state + conv tail) — used by SSM/hybrid prefill."""
+    (final SSM state + conv tail) — used by SSM/hybrid prefill.
+
+    ``lengths`` (batched in-engine prefill): (b,) real prompt lengths of
+    right-padded rows.  Padding positions get dt forced to 0 — zero decay
+    AND zero contribution, so each row's final SSM state equals the state
+    at its own length — and the conv tail is gathered at per-row
+    positions ``[length - (k-1), length)`` (zeros before the start, the
+    same values a fresh decode state would hold).
+    """
     bsz, l, _ = x.shape
     res = x
     hid = cm.rms_norm(x, lp.get("ln"), cfg.norm_eps)
@@ -273,6 +281,9 @@ def mamba_prefill_block(lp, x, cfg: ModelConfig, policy=None):
     z, xc, dt = _split_proj(cfg, zxbcdt)
     A = -jnp.exp(lp["A_log"])
     dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"][None, None])
+    if lengths is not None:
+        pad = jnp.arange(l)[None, :, None] >= jnp.asarray(lengths)[:, None, None]
+        dt = jnp.where(pad, 0.0, dt)
     conv_out = _causal_conv(xc, lp["conv_w"], lp["conv_b"])
     xs, B, C = _split_conv_out(cfg, conv_out)
     y, S = ssd_chunked(
@@ -284,7 +295,14 @@ def mamba_prefill_block(lp, x, cfg: ModelConfig, policy=None):
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
     y = cm.rms_norm(y, lp.get("gate_ln"), cfg.norm_eps)
     x = res + cm.dense(y, lp["out_proj"], policy)
-    conv_tail = xc[:, -(cfg.ssm_conv - 1):].astype(jnp.bfloat16)
+    k1 = cfg.ssm_conv - 1
+    if lengths is None:
+        conv_tail = xc[:, -k1:].astype(jnp.bfloat16)
+    else:
+        idx = jnp.asarray(lengths)[:, None] - k1 + jnp.arange(k1)[None]
+        tail = jnp.take_along_axis(xc, jnp.maximum(idx, 0)[..., None], axis=1)
+        conv_tail = jnp.where(idx[..., None] >= 0, tail, 0
+                              ).astype(jnp.bfloat16)
     return x, {"ssm": S, "conv": conv_tail}
 
 
@@ -298,6 +316,40 @@ def prefill(params, cfg: ModelConfig, tokens, cache: SSMCache, policy=None):
     logits = cm.dense(x[:, -1:], params["lm_head"], policy)
     return logits, SSMCache(ssm=st["ssm"], conv=st["conv"],
                             length=cache.length + tokens.shape[1])
+
+
+def make_paged_cache(cfg: ModelConfig, slots: int, max_len: int, *,
+                     page_size: int = 64, n_pages: int | None = None,
+                     bits: int | None = None) -> SSMCache:
+    """The SSM state is O(1) per slot — there is nothing to page.  The
+    'paged' engine cache is simply the slot-major batched state (length
+    vectorized per slot); the engine's page allocator sees no page table
+    and manages zero pages for this family."""
+    del page_size, n_pages
+    return cm.batch_slot_cache(make_cache(cfg, slots, max_len, bits=bits))
+
+
+def prefill_paged(params, cfg: ModelConfig, tokens, lengths, cache: SSMCache,
+                  slots, policy=None):
+    """In-engine batched prefill: right-padded (n, s_pad) rows, each
+    row's true final state (dt-masked SSD + gathered conv tail) scattered
+    into its slot.  Sentinel slot ids (== slot count) drop."""
+    h = cm.embed(params["embed"], tokens)
+    x, st = cm.scan_layers(
+        lambda lp, x, _: mamba_prefill_block(lp, x, cfg, policy,
+                                             lengths=lengths),
+        params["layers"], h, remat=False)
+    x = cm.rms_norm(x, params.get("final_ln"), cfg.norm_eps)
+    logits = cm.dense(cm.take_last_valid(x, lengths), params["lm_head"],
+                      policy)
+    sl = jnp.asarray(slots)
+    new_cache = SSMCache(
+        ssm=cache.ssm.at[:, sl].set(st["ssm"], mode="drop"),
+        conv=cache.conv.at[:, sl].set(st["conv"].astype(cache.conv.dtype),
+                                      mode="drop"),
+        length=cache.length.at[sl].set(jnp.asarray(lengths, jnp.int32),
+                                       mode="drop"))
+    return logits, new_cache
 
 
 def decode_step(params, cfg: ModelConfig, tokens, cache: SSMCache, policy=None):

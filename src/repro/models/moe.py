@@ -18,6 +18,7 @@ technique gets an extra rotation site on this latent — DESIGN.md §5).
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any
 
@@ -27,8 +28,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core.qlinear import QuantPolicy
-from repro.models import common as cm
 from repro.launch import compat
+from repro.models import common as cm
 
 Params = dict[str, Any]
 
@@ -71,7 +72,7 @@ def _expert_weight(mats: dict, had_dim: int = 0) -> jax.Array:
 
 def _local_expert_compute(x_flat, topi, topv, wg, wu, wd, *, n_experts: int,
                           k: int, capacity_factor: float, axis: str | None,
-                          wd_had: int = 0):
+                          wd_had: int = 0, token_valid=None):
     """Per-shard expert compute: select→pad→batched GEMM→combine.
 
     x_flat (T_local, d): this shard's tokens (sharded over data axes,
@@ -93,6 +94,10 @@ def _local_expert_compute(x_flat, topi, topv, wg, wu, wd, *, n_experts: int,
     token = jnp.repeat(jnp.arange(T), k)
     local_e = expert - my_lo
     is_local = (local_e >= 0) & (local_e < e_loc)
+    if token_valid is not None:
+        # right-padding tokens (batched prefill) must not compete for
+        # expert capacity — route them to the sentinel overflow group
+        is_local &= jnp.repeat(token_valid.reshape(-1), k)
     sort_key = jnp.where(is_local, local_e, e_loc)  # sentinel group e_loc
     order = jnp.argsort(sort_key)        # group by local expert, locals first
     se = sort_key[order]
@@ -124,8 +129,14 @@ def _local_expert_compute(x_flat, topi, topv, wg, wu, wd, *, n_experts: int,
 
 
 def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig,
-            policy: QuantPolicy | None = None, *, taps: dict | None = None):
-    """x: (b, s, d) → (b, s, d) MoE output + aux load-balance loss."""
+            policy: QuantPolicy | None = None, *, taps: dict | None = None,
+            valid: jax.Array | None = None):
+    """x: (b, s, d) → (b, s, d) MoE output + aux load-balance loss.
+
+    ``valid``: optional (b, s) bool mask of REAL tokens (batched prefill
+    right-pads mixed prompt lengths) — invalid tokens get zero gates and
+    are excluded from expert-capacity competition.
+    """
     b, s, d = x.shape
     h = cm.rms_norm(x, p.get("ln"), cfg.norm_eps)
     if taps is not None:  # routed+shared expert gate/up input
@@ -136,6 +147,9 @@ def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig,
     k = cfg.experts_per_tok
     topv, topi = jax.lax.top_k(probs, k)
     topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)  # renorm gates
+    vmask = None if valid is None else valid.reshape(-1, 1)
+    if vmask is not None:
+        topv = topv * vmask.astype(topv.dtype)
     # load-balance aux (Switch-style): E * Σ_e f_e·P_e
     E = cfg.num_experts
     density = jnp.mean(jax.nn.one_hot(topi, E, dtype=jnp.float32), axis=(0, 1))
@@ -177,21 +191,25 @@ def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig,
                   for m in (mg, mu, md))
     packed = static.get("packed", False)
 
-    def fn(hq_, topi_, topv_, mg_, mu_, md_):
+    vm = (jnp.ones((hf.shape[0], 1), jnp.bool_) if vmask is None
+          else vmask)
+
+    def fn(hq_, topi_, topv_, vm_, mg_, mu_, md_):
         if "codes" in mg_:
             mg_ = dict(mg_, packed=packed)
             mu_ = dict(mu_, packed=packed)
             md_ = dict(md_, packed=packed)
         return _local_expert_compute(
             hq_, topi_, topv_, mg_, mu_, md_, n_experts=E, k=k,
-            capacity_factor=cfg.capacity_factor, axis=tp, wd_had=d_had)
+            capacity_factor=cfg.capacity_factor, axis=tp, wd_had=d_had,
+            token_valid=vm_[:, 0])
 
     dp = tuple(a for a in mesh.axis_names if a != "model") if tp else ()
     dp_sz = 1
     for a in dp:
         dp_sz *= mesh.shape[a]
     if tp is None:
-        out = fn(hq, topi, topv, mg, mu, md)
+        out = fn(hq, topi, topv, vm, mg, mu, md)
     else:
         # batch=1 decode: tokens don't divide dp → replicate tokens and
         # keep only expert parallelism (every shard sees all tokens)
@@ -199,10 +217,10 @@ def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig,
         espec = jax.tree.map(lambda _: P("model", None, None), mg)
         out = compat.shard_map(
             fn,
-            in_specs=(xspec, xspec, xspec, espec, espec,
+            in_specs=(xspec, xspec, xspec, xspec, espec, espec,
                       jax.tree.map(lambda _: P("model", None, None), md)),
             out_specs=xspec
-        )(hq, topi, topv, mg, mu, md)
+        )(hq, topi, topv, vm, mg, mu, md)
     y = out.reshape(b, s, d)
     if "shared" in p:
         y = y + cm.mlp_apply(p["shared"] | {"ln": None}, h, cfg, policy,
@@ -236,11 +254,16 @@ def init_mla(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
 
 def mla_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
               layer_kv: dict | None = None, length=0,
-              policy: QuantPolicy | None = None, taps: dict | None = None):
+              policy: QuantPolicy | None = None, taps: dict | None = None,
+              page_table: jax.Array | None = None,
+              valid_new: jax.Array | None = None,
+              prefill_local: bool = False):
     """MLA block. Cache stores the compressed latent (c_kv, k_rope) only.
 
     ``length`` may be a (b,) vector of per-row cache depths (slot-major
-    batched decode), mirroring :func:`repro.models.common.attn_apply`.
+    batched decode), mirroring :func:`repro.models.common.attn_apply` —
+    as do ``page_table`` / ``valid_new`` / ``prefill_local``, which
+    switch the latent cache to the paged pool layout.
     """
     b, s, _ = x.shape
     H = cfg.num_heads
@@ -261,15 +284,32 @@ def mla_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
 
     if layer_kv is not None:
         # cache latent: k slot stores c_kv (b,S,1,lora), v slot stores k_rope
-        layer_kv = cm.cache_update(
-            layer_kv, c_kv[:, :, None, :],
-            jnp.pad(k_rope, ((0, 0), (0, 0), (0, 0),
-                             (0, cfg.kv_lora_rank - rd))),
-            length, window=cfg.attn_window)
-        ck, kr = cm.cache_read(layer_kv)
-        c_all = ck[:, :, 0, :]                       # (b, S, lora)
-        k_rope_all = kr[:, :, 0, :rd]                # (b, S, rd)
-        valid = jnp.minimum(jnp.asarray(length) + s, c_all.shape[1])
+        k_store = c_kv[:, :, None, :]
+        v_store = jnp.pad(k_rope, ((0, 0), (0, 0), (0, 0),
+                                   (0, cfg.kv_lora_rank - rd)))
+        if page_table is not None:                   # paged latent pool
+            layer_kv = cm.paged_update(layer_kv, k_store, v_store, length,
+                                       page_table, valid_new=valid_new)
+            if prefill_local:
+                if layer_kv.get("k_scale") is not None:
+                    c_all = cm.quant_roundtrip_kv(k_store)[:, :, 0, :]
+                    k_rope_all = cm.quant_roundtrip_kv(v_store)[:, :, 0, :rd]
+                else:
+                    c_all = c_kv
+                    k_rope_all = k_rope[:, :, 0, :]
+                valid = None
+            else:
+                ck, kr = cm.paged_view(layer_kv, page_table)
+                c_all = ck[:, :, 0, :]
+                k_rope_all = kr[:, :, 0, :rd]
+                valid = jnp.minimum(jnp.asarray(length) + s, ck.shape[1])
+        else:
+            layer_kv = cm.cache_update(layer_kv, k_store, v_store, length,
+                                       window=cfg.attn_window)
+            ck, kr = cm.cache_read(layer_kv)
+            c_all = ck[:, :, 0, :]                   # (b, S, lora)
+            k_rope_all = kr[:, :, 0, :rd]            # (b, S, rd)
+            valid = jnp.minimum(jnp.asarray(length) + s, c_all.shape[1])
     else:
         c_all, k_rope_all = c_kv, k_rope[:, :, 0, :]
         valid = None
@@ -342,23 +382,32 @@ def _attn(cfg):
 
 
 def _backbone(params, cfg: ModelConfig, h, *, cache=None, length=0,
-              policy=None, collect_taps=False):
+              policy=None, collect_taps=False, page_table=None,
+              valid_new=None, prefill_local=False, token_valid=None):
     attn = _attn(cfg)
     aux_total = jnp.zeros((), jnp.float32)
+    paged = isinstance(cache, cm.PagedKVCache)
+    if paged and page_table is None:
+        page_table = cache.page_table
 
     def moe_block(lp, x, extra):
         layer_kv = extra
         taps = {} if collect_taps else None
         x, layer_kv = attn(lp["attn"], x, cfg, layer_kv=layer_kv,
-                           length=length, policy=policy)
-        x, aux = moe_ffn(lp["moe"], x, cfg, policy, taps=taps)
+                           length=length, policy=policy,
+                           page_table=page_table, valid_new=valid_new,
+                           prefill_local=prefill_local)
+        x, aux = moe_ffn(lp["moe"], x, cfg, policy, taps=taps,
+                         valid=token_valid)
         y = taps if collect_taps else layer_kv
         return x, (y, aux)
 
     def dense_block(lp, x, extra):
         layer_kv = extra
         x, layer_kv = attn(lp["attn"], x, cfg, layer_kv=layer_kv,
-                           length=length, policy=policy)
+                           length=length, policy=policy,
+                           page_table=page_table, valid_new=valid_new,
+                           prefill_local=prefill_local)
         x = cm.mlp_apply(lp["mlp"], x, cfg, policy)
         return x, (layer_kv, jnp.zeros((), jnp.float32))
 
@@ -391,9 +440,12 @@ def _backbone(params, cfg: ModelConfig, h, *, cache=None, length=0,
     if cache is not None:
         merged = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *caches_out) \
             if len(caches_out) > 1 else caches_out[0]
-        new_cache = cm.KVCache(
-            k=merged["k"], v=merged["v"], k_scale=merged.get("k_scale"),
-            v_scale=merged.get("v_scale"), length=cache.length + h.shape[1])
+        # replace() serves both cache classes (page_table rides along
+        # untouched on the paged one)
+        new_cache = dataclasses.replace(
+            cache, k=merged["k"], v=merged["v"],
+            k_scale=merged.get("k_scale"), v_scale=merged.get("v_scale"),
+            length=cache.length + h.shape[1])
     else:
         new_cache = None
     h = cm.rms_norm(h, params.get("final_ln"), cfg.norm_eps)
@@ -425,10 +477,43 @@ def make_cache(cfg: ModelConfig, batch: int, max_len: int, *,
     return cm.init_kv_cache(cfg, cfg.num_layers, batch, max_len, bits=bits)
 
 
+def make_paged_cache(cfg: ModelConfig, slots: int, max_len: int, *,
+                     page_size: int = 64, n_pages: int | None = None,
+                     bits: int | None = None) -> cm.PagedKVCache:
+    if cfg.kv_lora_rank:
+        return cm.init_paged_kv_cache(
+            cfg, cfg.num_layers, slots, max_len, page_size=page_size,
+            n_pages=n_pages, bits=bits, head_dim=cfg.kv_lora_rank, kv_heads=1)
+    return cm.init_paged_kv_cache(cfg, cfg.num_layers, slots, max_len,
+                                  page_size=page_size, n_pages=n_pages,
+                                  bits=bits)
+
+
 def prefill(params, cfg: ModelConfig, tokens, cache, policy=None):
     h = cm.embed(params["embed"], tokens)
     x, cache, _ = _backbone(params, cfg, h, cache=cache, length=0, policy=policy)
     return cm.dense(x[:, -1:], params["lm_head"], policy), cache
+
+
+def prefill_paged(params, cfg: ModelConfig, tokens, lengths,
+                  cache: cm.PagedKVCache, slots, policy=None):
+    """In-engine batched prefill into assigned pages (right-padded rows;
+    see :func:`repro.models.transformer.prefill_paged`).  Padding tokens
+    are masked out of expert-capacity competition via ``moe_ffn``'s
+    ``valid`` mask."""
+    s = tokens.shape[1]
+    h = cm.embed(params["embed"], tokens)
+    ptab = cm.gather_page_rows(cache.page_table, slots)
+    token_valid = jnp.arange(s)[None] < jnp.asarray(lengths)[:, None]
+    x, new_cache, _ = _backbone(params, cfg, h, cache=cache, length=0,
+                                policy=policy, page_table=ptab,
+                                valid_new=lengths, prefill_local=True,
+                                token_valid=token_valid)
+    logits = cm.dense(cm.take_last_valid(x, lengths), params["lm_head"], policy)
+    new_cache = dataclasses.replace(
+        new_cache, length=cache.length.at[jnp.asarray(slots)].set(
+            jnp.asarray(lengths, jnp.int32), mode="drop"))
+    return logits, new_cache
 
 
 def decode_step(params, cfg: ModelConfig, tokens, cache, policy=None):

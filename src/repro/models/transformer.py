@@ -12,6 +12,8 @@ Exposes the uniform model API consumed by launch/ and serving/:
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
@@ -37,12 +39,15 @@ def init(key, cfg: ModelConfig, dtype=jnp.bfloat16):
     }
 
 
-def _block(cfg: ModelConfig, policy: QuantPolicy | None, collect_taps: bool):
+def _block(cfg: ModelConfig, policy: QuantPolicy | None, collect_taps: bool,
+           page_table=None, valid_new=None, prefill_local: bool = False):
     def block(lp, x, layer_kv_and_len):
         layer_kv, length = (None, 0) if layer_kv_and_len is None else layer_kv_and_len
         taps: dict | None = {} if collect_taps else None
         x, layer_kv = cm.attn_apply(lp["attn"], x, cfg, layer_kv=layer_kv,
-                                    length=length, policy=policy, taps=taps)
+                                    length=length, policy=policy, taps=taps,
+                                    page_table=page_table, valid_new=valid_new,
+                                    prefill_local=prefill_local)
         x = cm.mlp_apply(lp["mlp"], x, cfg, policy, taps=taps)
         out = taps if collect_taps else layer_kv
         return x, out
@@ -50,8 +55,12 @@ def _block(cfg: ModelConfig, policy: QuantPolicy | None, collect_taps: bool):
 
 
 def _backbone(params, cfg: ModelConfig, h, *, cache=None, length=0,
-              policy=None, collect_taps=False):
-    block = _block(cfg, policy, collect_taps)
+              policy=None, collect_taps=False, page_table=None,
+              valid_new=None, prefill_local=False):
+    if isinstance(cache, cm.PagedKVCache) and page_table is None:
+        page_table = cache.page_table
+    block = _block(cfg, policy, collect_taps, page_table, valid_new,
+                   prefill_local)
     if cache is None:
         extras = None
         def fn(lp, x, _):
@@ -68,11 +77,12 @@ def _backbone(params, cfg: ModelConfig, h, *, cache=None, length=0,
             return block(lp, x, (layer_kv, length))
         x, kv_new = cm.scan_layers(fn, params["layers"], h, remat=False,
                                    extras=kv)
-        new_cache = cm.KVCache(
-            k=kv_new["k"], v=kv_new["v"],
+        # replace() serves both cache classes (page_table rides along
+        # untouched on the paged one)
+        new_cache = dataclasses.replace(
+            cache, k=kv_new["k"], v=kv_new["v"],
             k_scale=kv_new.get("k_scale"), v_scale=kv_new.get("v_scale"),
-            length=cache.length + h.shape[1],
-        )
+            length=cache.length + h.shape[1])
     x = cm.rms_norm(x, params.get("final_ln"), cfg.norm_eps)
     return x, new_cache
 
@@ -103,12 +113,44 @@ def make_cache(cfg: ModelConfig, batch: int, max_len: int, *,
     return cm.init_kv_cache(cfg, cfg.num_layers, batch, max_len, bits=bits)
 
 
+def make_paged_cache(cfg: ModelConfig, slots: int, max_len: int, *,
+                     page_size: int = 64, n_pages: int | None = None,
+                     bits: int | None = None) -> cm.PagedKVCache:
+    return cm.init_paged_kv_cache(cfg, cfg.num_layers, slots, max_len,
+                                  page_size=page_size, n_pages=n_pages,
+                                  bits=bits)
+
+
 def prefill(params, cfg: ModelConfig, tokens, cache: cm.KVCache,
             policy: QuantPolicy | None = None):
     h = cm.embed(params["embed"], tokens)
     x, cache = _backbone(params, cfg, h, cache=cache, length=0, policy=policy)
     logits = cm.dense(x[:, -1:], params["lm_head"], policy)
     return logits, cache
+
+
+def prefill_paged(params, cfg: ModelConfig, tokens, lengths,
+                  cache: cm.PagedKVCache, slots,
+                  policy: QuantPolicy | None = None):
+    """In-engine batched prefill straight into assigned pages.
+
+    tokens: (n, s_pad) right-padded prompts sharing ONE dispatch via
+    length-bucketed padding; lengths: (n,) real prompt lengths; cache:
+    the engine's FULL paged cache (donated by the engine's jit); slots:
+    (n,) slot ids the rows were admitted into (== slot count for padding
+    rows, whose writes all drop).  Returns per-row logits at the last
+    VALID position, (n, 1, vocab), and the updated cache.
+    """
+    h = cm.embed(params["embed"], tokens)
+    ptab = cm.gather_page_rows(cache.page_table, slots)
+    x, new_cache = _backbone(params, cfg, h, cache=cache, length=0,
+                             policy=policy, page_table=ptab,
+                             valid_new=lengths, prefill_local=True)
+    logits = cm.dense(cm.take_last_valid(x, lengths), params["lm_head"], policy)
+    new_cache = dataclasses.replace(
+        new_cache, length=cache.length.at[jnp.asarray(slots)].set(
+            jnp.asarray(lengths, jnp.int32), mode="drop"))
+    return logits, new_cache
 
 
 def decode_step(params, cfg: ModelConfig, tokens, cache: cm.KVCache,

@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 __all__ = ["compress_decompress", "compressed_psum", "apply_error_feedback"]
 

@@ -23,7 +23,6 @@ On a real cluster each host runs this manager next to the training loop:
 from __future__ import annotations
 
 import dataclasses
-import os
 import signal
 import threading
 import time

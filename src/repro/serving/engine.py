@@ -16,10 +16,20 @@ temperature, and retired on EOS/max_tokens — vLLM-style continuous
 batching reduced to its JAX-native core.  Weights may be the bf16 train
 params or the fold+quantized serving params (the paper's pipeline).
 
+``PagedServingEngine`` rebuilds the memory and admission layers on top
+of the batched tick: the dense per-slot ``(max_slots, max_len)`` extents
+become fixed-size PAGES from a shared pool (``common.PagedKVCache``) so
+slots grow on demand and freed pages return to the pool, and admission
+runs ONE jitted ``(n_admit, padded_prompt_len)`` ``prefill_paged``
+dispatch that writes straight into the assigned pages — replacing the
+per-request batch-1 prefill + ``write_slot`` copy.  Mixed prompt lengths
+share the dispatch through length-bucketed padding.
+
 ``PerSlotServingEngine`` preserves the original one-dispatch-per-slot
-loop as the equivalence/throughput baseline: batched greedy output is
-token-identical to it (tests/test_serving_batched.py), while issuing
-``1`` decode dispatch per tick instead of ``n_active``.
+loop as the equivalence/throughput baseline: batched AND paged greedy
+output are token-identical to it (tests/test_serving_batched.py,
+tests/test_serving_paged.py), while issuing ``1`` decode dispatch per
+tick instead of ``n_active``.
 
 jit caches are shared process-wide per (model, cfg, policy), so
 constructing many engines (property tests, benchmarks) does not retrace.
@@ -39,7 +49,8 @@ from repro.configs.base import ModelConfig
 from repro.core.qlinear import QuantPolicy
 from repro.models import common as cm
 
-__all__ = ["Request", "ServingEngine", "PerSlotServingEngine"]
+__all__ = ["Request", "ServingEngine", "PagedServingEngine",
+           "PerSlotServingEngine"]
 
 
 @dataclasses.dataclass
@@ -59,6 +70,16 @@ def _jitted(model, cfg: ModelConfig, policy: QuantPolicy | None):
     decode = jax.jit(lambda p, t, c: model.decode_step(p, cfg, t, c,
                                                        policy=policy))
     return prefill, decode
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_paged_prefill(model, cfg: ModelConfig, policy: QuantPolicy | None):
+    """Process-wide jitted in-engine batched prefill; the engine cache is
+    donated (the pool is the engine's largest buffer — no tick-time copy)."""
+    return jax.jit(
+        lambda p, t, ln, c, s: model.prefill_paged(p, cfg, t, ln, c, s,
+                                                   policy=policy),
+        donate_argnums=3)
 
 
 def _sample_key(step: int, uid: int) -> jax.Array:
@@ -101,7 +122,11 @@ class _EngineBase:
         self._prefill, self._decode = _jitted(model, cfg, policy)
         self._step = 0
         self.decode_dispatches = 0       # jitted decode calls issued
+        self.prefill_dispatches = 0      # jitted prefill calls issued
         self.ticks = 0                   # step() calls that decoded
+        self._prefill_tokens = 0         # prompt tokens prefilled (all reqs)
+        self._per_request: dict[int, dict] = {}   # uid → token counts
+        self.run_stats: dict = {}        # filled by run()
         self._init_caches()
 
     def _init_caches(self):
@@ -131,6 +156,46 @@ class _EngineBase:
         ``slot`` (layout differs per engine)."""
         raise NotImplementedError
 
+    def _count_prefill(self, req: Request, n_tokens: int):
+        self._prefill_tokens += n_tokens
+        rec = self._per_request.setdefault(req.uid,
+                                           {"prefill": 0, "decode": 0})
+        rec["prefill"] += n_tokens
+
+    def _retire(self, req: Request):
+        req.done = True
+        self.retired.append(req)
+        rec = self._per_request.setdefault(req.uid,
+                                           {"prefill": 0, "decode": 0})
+        rec["decode"] = len(req.out_tokens)
+
+    def _pool_stats(self) -> dict:
+        """Page-pool occupancy; non-paged engines have no pool."""
+        return {}
+
+    def stats(self) -> dict:
+        """Aggregate + per-request token counts (so callers stop
+        re-deriving them from the retired Request lists by hand)."""
+        # a truncated run (max_ticks exhausted) leaves requests in slots
+        # or requeued: fold their in-flight decode counts in so the
+        # aggregate never under-reports work actually done
+        for req in list(self.slots) + list(self.queue):
+            if req is not None and req.uid in self._per_request:
+                self._per_request[req.uid]["decode"] = len(req.out_tokens)
+        return {
+            "requests": len(self._per_request),
+            "prefill_tokens": self._prefill_tokens,
+            "decode_tokens": sum(r["decode"]
+                                 for r in self._per_request.values()),
+            "per_request": {uid: dict(rec)
+                            for uid, rec in self._per_request.items()},
+            "ticks": self.ticks,
+            "decode_dispatches": self.decode_dispatches,
+            "prefill_dispatches": self.prefill_dispatches,
+            "dispatches_per_tick": self.decode_dispatches / max(self.ticks, 1),
+            **self._pool_stats(),
+        }
+
     def _admit(self):
         for i in range(self.max_slots):
             while self.slots[i] is None and self.queue:
@@ -140,6 +205,8 @@ class _EngineBase:
                 toks = jnp.asarray(req.prompt[None, :], jnp.int32)
                 logits, slot_cache = self._prefill(self.params, toks,
                                                    slot_cache)
+                self.prefill_dispatches += 1
+                self._count_prefill(req, len(req.prompt))
                 nxt = int(_sample_one(logits[:, -1], req.temperature,
                                       self._step, req.uid)[0])
                 req.out_tokens.append(nxt)
@@ -147,8 +214,7 @@ class _EngineBase:
                 # (EOS or max_new_tokens=1): retire without occupying the
                 # slot, and keep admitting into it
                 if self._finished(req, nxt):
-                    req.done = True
-                    self.retired.append(req)
+                    self._retire(req)
                 else:
                     self.slots[i] = req
                     self._install_slot_cache(i, slot_cache)
@@ -163,10 +229,13 @@ class _EngineBase:
     def run(self, max_ticks: int = 1000) -> list[Request]:
         """Tick until queue and slots drain (or the tick budget runs out);
         returns every retired request not yet handed out — including ones
-        already occupying a slot beforehand or submitted mid-run."""
+        already occupying a slot beforehand or submitted mid-run.  The
+        aggregate/per-request token counts and (paged engines) page-pool
+        occupancy land in ``self.run_stats``."""
         while (self.queue or any(self.slots)) and max_ticks > 0:
             self.step()
             max_ticks -= 1
+        self.run_stats = self.stats()
         return self.pop_retired()
 
 
@@ -230,10 +299,291 @@ class ServingEngine(_EngineBase):
             nxt = int(toks[i])
             req.out_tokens.append(nxt)
             if self._finished(req, nxt):
-                req.done = True
-                self.retired.append(req)
+                self._retire(req)
                 self.slots[i] = None
         return len(active)
+
+
+def _paged_part(cache) -> cm.PagedKVCache | None:
+    """The PagedKVCache component of a family cache, if any (the SSM
+    family's O(1) state has nothing to page)."""
+    if isinstance(cache, cm.PagedKVCache):
+        return cache
+    attn = getattr(cache, "attn", None)
+    return attn if isinstance(attn, cm.PagedKVCache) else None
+
+
+class PagedServingEngine(ServingEngine):
+    """Continuous batching over a PAGED KV pool with in-engine batched
+    prefill.
+
+    Memory layer: ``model.make_paged_cache`` backs attention KV with
+    fixed-size pages from a shared pool (``n_pages``; default sized for
+    zero overcommit).  The HOST owns allocation: a numpy page table +
+    free list, synced into the cache pytree before every dispatch.
+    Slots grow one page at a time as they decode; retirement returns
+    pages to the pool (stale page contents are never read — validity is
+    the per-slot length prefix, and positions are overwritten before
+    they become valid).
+
+    Admission layer: each round admits every FIFO request that fits
+    (free slot + enough free pages for its prompt, else the head of the
+    queue WAITS — pool backpressure), then prefills the whole batch with
+    ONE jitted ``(n_admit_padded, padded_prompt_len)`` dispatch that
+    scatter-writes straight into the assigned pages.  Prompt lengths are
+    padded to a shared ``prefill_bucket`` multiple and the row count to a
+    power of two, so mixed lengths share a dispatch and the jit cache
+    stays small.
+
+    A slot whose next page cannot be allocated mid-decode simply sits
+    out ticks until pages free up (its tokens are unaffected — decode
+    depends only on its own cache); if EVERY active slot is stalled, the
+    youngest is preempted back to the queue (greedy continuation after
+    re-prefill is token-identical).  Sizing the pool below
+    ``ceil(max_prompt / page_size)`` can therefore starve admission —
+    ``run()``'s tick budget still bounds the loop.
+
+    Decode keeps the batched engine's contract: ONE ``(max_slots, 1)``
+    dispatch per tick, greedy output token-identical to
+    ``PerSlotServingEngine``.
+    """
+
+    def __init__(self, model, params, cfg: ModelConfig, *, max_slots: int = 4,
+                 max_len: int = 256, policy: QuantPolicy | None = None,
+                 eos_id: int = -1, kv_bits: int | None = None,
+                 page_size: int = 64, n_pages: int | None = None,
+                 prefill_bucket: int = 16):
+        self.page_size = page_size
+        self.prefill_bucket = prefill_bucket
+        self._n_pages_arg = n_pages
+        super().__init__(model, params, cfg, max_slots=max_slots,
+                         max_len=max_len, policy=policy, eos_id=eos_id,
+                         kv_bits=kv_bits)
+        self._prefill_paged = _jitted_paged_prefill(model, cfg, policy)
+        self._admit_seq = 0
+        self._admitted_at = [0] * max_slots
+
+    # -- memory layer -------------------------------------------------------
+
+    def _init_caches(self):
+        self.cache = self.model.make_paged_cache(
+            self.cfg, self.max_slots, self.max_len, page_size=self.page_size,
+            n_pages=self._n_pages_arg, bits=self.kv_bits)
+        part = _paged_part(self.cache)
+        if part is None:                 # ssm: O(1) state, nothing to page
+            self.n_pages, self.table_width = 0, 0
+            self._pt, self._free = None, []
+        else:
+            self.n_pages = part.n_pages
+            self.table_width = part.page_table.shape[1]
+            self._pt = np.full((self.max_slots, self.table_width), -1,
+                               np.int32)
+            self._free = list(range(self.n_pages - 1, -1, -1))  # pop() → 0 first
+        self._len = np.zeros((self.max_slots,), np.int32)
+        self.peak_pages_in_use = 0
+
+    def _host_state_cache(self):
+        """Cache pytree with the HOST-authoritative page table + per-slot
+        lengths pushed in (stalled/inactive rows never advance)."""
+        c = self.cache
+        if isinstance(c, cm.PagedKVCache):
+            return dataclasses.replace(c, page_table=jnp.asarray(self._pt),
+                                       length=jnp.asarray(self._len))
+        if _paged_part(c) is not None:   # hybrid: paged attn component
+            # NOTE: distinct length buffers — prefill donates the cache,
+            # and one array aliased into two leaves donates twice
+            return dataclasses.replace(
+                c, attn=dataclasses.replace(
+                    c.attn, page_table=jnp.asarray(self._pt),
+                    length=jnp.asarray(np.array(self._len))),
+                length=jnp.asarray(np.array(self._len, copy=True)))
+        return dataclasses.replace(c, length=jnp.asarray(self._len))
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.n_pages - len(self._free) if self._pt is not None else 0
+
+    def _note_occupancy(self):
+        self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                     self.pages_in_use)
+
+    def _pool_stats(self) -> dict:
+        n = max(self.n_pages, 1)
+        return {"page_size": self.page_size, "n_pages": self.n_pages,
+                "table_width": self.table_width,
+                "pages_in_use": self.pages_in_use,
+                "peak_pages_in_use": self.peak_pages_in_use,
+                "page_occupancy": self.pages_in_use / n,
+                "page_occupancy_peak": self.peak_pages_in_use / n}
+
+    def _pages_needed(self, n_tokens: int) -> int:
+        if self._pt is None:
+            return 0
+        return cm.pages_per_slot(n_tokens, self.page_size)
+
+    def submit(self, req: Request):
+        """Reject prompts that could NEVER be admitted up front: the
+        dense engines clamp out-of-range cache writes, but a paged slot
+        cannot outgrow its page-table width or the whole pool — such a
+        request would starve the FIFO queue forever."""
+        cap = self.max_len
+        if self._pt is not None:
+            cap = min(cap, self.table_width * self.page_size,
+                      self.n_pages * self.page_size)
+        if len(req.prompt) > cap:
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens exceeds the paged "
+                f"engine's capacity of {cap} (max_len={self.max_len}, "
+                f"page_size={self.page_size}, n_pages={self.n_pages})")
+        super().submit(req)
+
+    def _release_slot(self, slot: int):
+        """Free the slot and return its pages to the shared pool."""
+        if self._pt is not None:
+            self._free.extend(int(p) for p in self._pt[slot] if p >= 0)
+            self._pt[slot] = -1
+        self._len[slot] = 0
+        self.slots[slot] = None
+
+    # -- admission layer ----------------------------------------------------
+
+    def _admit(self):
+        # rounds: a request finishing at prefill frees its slot and pages
+        # for the same tick's next round (matches the per-slot oracle's
+        # keep-admitting-into-the-slot behaviour)
+        while self._admit_round():
+            pass
+
+    def _admit_round(self) -> bool:
+        free_slots = [i for i in range(self.max_slots)
+                      if self.slots[i] is None]
+        batch: list[tuple[int, Request]] = []
+        while free_slots and self.queue:
+            req = self.queue[0]
+            need = self._pages_needed(len(req.prompt))
+            if need > len(self._free) and self._pt is not None:
+                break                    # backpressure: FIFO head waits
+            self.queue.popleft()
+            slot = free_slots.pop(0)
+            if self._pt is not None:
+                for j in range(need):
+                    self._pt[slot, j] = self._free.pop()
+            batch.append((slot, req))
+        if not batch:
+            return False
+        # ONE (n_pad, s_pad) prefill dispatch for the whole batch:
+        # prompt lengths bucket-padded, row count padded to a power of
+        # two (sentinel rows' writes drop in the kernel)
+        n_pad = 1 << (len(batch) - 1).bit_length()
+        s_max = max(len(r.prompt) for _, r in batch)
+        s_pad = min(self.max_len,
+                    -(-s_max // self.prefill_bucket) * self.prefill_bucket)
+        toks = np.zeros((n_pad, s_pad), np.int32)
+        lens = np.zeros((n_pad,), np.int32)
+        rows = np.full((n_pad,), self.max_slots, np.int32)
+        for r, (slot, req) in enumerate(batch):
+            p = np.asarray(req.prompt, np.int64)
+            toks[r, :len(p)] = p
+            lens[r] = len(p)
+            rows[r] = slot
+        logits, self.cache = self._prefill_paged(
+            self.params, jnp.asarray(toks), jnp.asarray(lens),
+            self._host_state_cache(), jnp.asarray(rows))
+        self.prefill_dispatches += 1
+        for r, (slot, req) in enumerate(batch):
+            self._count_prefill(req, int(lens[r]))
+            nxt = int(_sample_one(logits[r], req.temperature, self._step,
+                                  req.uid)[0])
+            req.out_tokens.append(nxt)
+            if self._finished(req, nxt):
+                self._retire(req)
+                self._release_slot(slot)
+            else:
+                self.slots[slot] = req
+                self._len[slot] = int(lens[r])
+                self._admitted_at[slot] = self._admit_seq
+                self._admit_seq += 1
+        self._note_occupancy()
+        return True
+
+    def _preempt_youngest(self, active: list[int]):
+        """Deadlock breaker: every active slot needs a page and none are
+        free.  The youngest occupant folds its generated tokens into its
+        prompt and requeues — re-prefilling that context reproduces the
+        pending decode input's logits, so the greedy continuation is
+        token-identical.  A folded context that can NEVER fit again
+        (more pages than the whole pool / table width — the pool is
+        simply too small for the request) retires truncated instead of
+        requeueing: leaving it at the FIFO head would starve every
+        request behind it forever."""
+        i = max(active, key=lambda j: self._admitted_at[j])
+        req = self.slots[i]
+        req.prompt = np.concatenate([np.asarray(req.prompt, np.int64),
+                                     np.asarray(req.out_tokens, np.int64)])
+        self._release_slot(i)
+        if self._pages_needed(len(req.prompt)) > min(self.n_pages,
+                                                     self.table_width):
+            self._retire(req)
+        else:
+            self.queue.appendleft(req)
+
+    # -- one engine tick ----------------------------------------------------
+
+    def step(self) -> int:
+        self._admit()
+        self._step += 1
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return 0
+        # on-demand growth: a slot whose next write starts a new page
+        # allocates it now; allocation failure stalls the slot this tick
+        # (its write would have no destination and is dropped anyway)
+        ready = []
+        for i in active:
+            if self._pt is not None:
+                pi = self._len[i] // self.page_size
+                if pi < self.table_width and self._pt[i, pi] < 0:
+                    if not self._free:
+                        continue
+                    self._pt[i, pi] = self._free.pop()
+            ready.append(i)
+        self._note_occupancy()
+        if not ready:
+            self._preempt_youngest(active)
+            return 0
+        last = np.zeros((self.max_slots, 1), np.int32)
+        temps = np.zeros((self.max_slots,), np.float32)
+        uids = np.zeros((self.max_slots,), np.int32)
+        for i in ready:
+            req = self.slots[i]
+            last[i, 0] = req.out_tokens[-1]
+            temps[i] = req.temperature
+            uids[i] = req.uid
+        before = self._host_state_cache()
+        logits, self.cache = self._decode(self.params, jnp.asarray(last),
+                                          before)
+        self.decode_dispatches += 1
+        self.ticks += 1
+        stalled = [i for i in active if i not in ready]
+        if stalled and hasattr(self.cache, "ssm"):
+            # paged-KV writes of stalled rows drop (no destination page),
+            # but the hybrid family's recurrent state leaves DID advance
+            # on the garbage tick — roll those rows back
+            sl = np.asarray(stalled)
+            self.cache = dataclasses.replace(
+                self.cache,
+                ssm=self.cache.ssm.at[:, sl].set(before.ssm[:, sl]),
+                conv=self.cache.conv.at[:, sl].set(before.conv[:, sl]))
+        toks = np.asarray(self._sample_batch(logits[:, -1], temps, uids))
+        for i in ready:
+            req = self.slots[i]
+            self._len[i] += 1
+            nxt = int(toks[i])
+            req.out_tokens.append(nxt)
+            if self._finished(req, nxt):
+                self._retire(req)
+                self._release_slot(i)
+        return len(ready)
 
 
 class PerSlotServingEngine(_EngineBase):
@@ -266,8 +616,7 @@ class PerSlotServingEngine(_EngineBase):
                                   req.uid)[0])
             req.out_tokens.append(nxt)
             if self._finished(req, nxt):
-                req.done = True
-                self.retired.append(req)
+                self._retire(req)
                 self.slots[i] = None
         if active:
             self.ticks += 1

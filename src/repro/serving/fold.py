@@ -11,7 +11,11 @@ leaf is a folded, RTN-quantized :class:`QuantizedWeight`:
     The runtime side of every folded leaf is the ONE-pass fused qlinear
     kernel (docs/kernels.md); mixed layerwise stacks emit a traced
     ``had_mask`` gate that the kernel multiplexes in-VMEM, so searched
-    plans stay on the fast path.
+    plans stay on the fast path.  The folded tree serves unchanged from
+    every engine — including the paged engine's batched
+    ``prefill_paged`` dispatch and its int8 paged KV pool
+    (docs/serving.md): quantization state lives entirely in the leaves,
+    never in the cache layout.
 
 The per-module policy is a :class:`repro.core.transforms.TransformPlan`;
 the default follows the paper's §V recommendation (SmoothRotation on

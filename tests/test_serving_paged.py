@@ -1,0 +1,321 @@
+"""Paged serving engine: paged KV pool + in-engine batched prefill.
+
+Pins the continuous-batching contracts the paged rebuild must keep:
+
+  * greedy output token-identical to the per-slot seed loop
+    (``PerSlotServingEngine``) for every family, bf16 AND quantized,
+    under scheduler churn — with exactly ONE decode dispatch per tick;
+  * ONE batched prefill dispatch admits a whole mixed-prompt-length
+    batch (length-bucketed padding) and writes straight into pages;
+  * page-pool lifecycle: retire-then-admit reuses freed physical pages
+    with no stale KV or stale int8-scale leakage (the PR 2 slot-reuse
+    test at page granularity), pool exhaustion backpressures admission,
+    slots grow on demand, and a fully stalled engine preempts without
+    changing any request's tokens.
+"""
+
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.qlinear import QuantPolicy
+from repro.models.api import get_model
+from repro.serving.engine import (PagedServingEngine, PerSlotServingEngine,
+                                  Request, ServingEngine)
+from repro.serving.fold import collect_calibration, fold_quantize
+
+KEY = jax.random.PRNGKey(0)
+
+# one arch per family (moe uses DeepSeek: MLA latent pages + leading
+# dense layers — the hardest cache layout)
+FAMILY_ARCHS = {
+    "dense": "stablelm_3b",
+    "moe": "deepseek_v2_lite_16b",
+    "ssm": "mamba2_780m",
+    "hybrid": "zamba2_12b",
+}
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(arch: str, quantized: bool):
+    cfg = get_config(arch).reduced()
+    model = get_model(cfg)
+    params = model.init(KEY, cfg)
+    policy = None
+    if quantized:
+        toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+        stats = collect_calibration(model, params, cfg, [{"tokens": toks}])
+        policy = QuantPolicy(weight_bits=8, act_bits=8, pack_weights=False,
+                             use_kernels="never")
+        params = fold_quantize(params, cfg, policy=policy, stats=stats)
+    return cfg, model, params, policy
+
+
+def _mk_requests(cfg, n=3, max_new=4):
+    return [Request(uid=i,
+                    prompt=np.random.default_rng(i).integers(
+                        0, cfg.vocab_size, size=(3 + i,)),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def _count_decodes(eng):
+    calls = []
+    orig = eng._decode
+
+    def counting(*a):
+        calls.append(1)
+        return orig(*a)
+
+    eng._decode = counting
+    return calls
+
+
+def _serve(eng, reqs, max_ticks=200):
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run(max_ticks=max_ticks)
+    return {r.uid: list(r.out_tokens) for r in done}
+
+
+# ---------------------------------------------------------------------------
+# tentpole: greedy equivalence + single dispatch, all families × precisions
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("quantized", [False, True], ids=["bf16", "w8a8"])
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+def test_paged_matches_per_slot_greedy(family, quantized):
+    """Paged decode == seed per-slot loop, token for token, with ONE
+    decode dispatch per tick and pages fully returned on drain."""
+    cfg, model, params, policy = _setup(FAMILY_ARCHS[family], quantized)
+    outs = {}
+    for name, cls, kw in (("paged", PagedServingEngine,
+                           dict(page_size=4, prefill_bucket=8)),
+                          ("per_slot", PerSlotServingEngine, {})):
+        eng = cls(model, params, cfg, max_slots=2, max_len=32, policy=policy,
+                  **kw)
+        calls = _count_decodes(eng)
+        reqs = _mk_requests(cfg)
+        for r in reqs:
+            eng.submit(r)
+        while eng.queue or any(eng.slots):
+            before = len(calls)
+            n_active = eng.step()
+            if name == "paged":
+                assert len(calls) - before == (1 if n_active else 0)
+        done = eng.pop_retired()
+        assert sorted(r.uid for r in done) == [0, 1, 2]
+        outs[name] = {r.uid: list(r.out_tokens) for r in done}
+        if name == "paged":
+            assert eng.pages_in_use == 0        # every page back in the pool
+    assert outs["paged"] == outs["per_slot"]
+
+
+def test_paged_matches_batched_int8_kv():
+    """Paged + int8 KV (scale leaves page alongside data leaves) matches
+    the dense batched engine token for token."""
+    cfg, model, params, _ = _setup("stablelm_3b", False)
+    outs = {}
+    for name, cls, kw in (("paged", PagedServingEngine, dict(page_size=4)),
+                          ("batched", ServingEngine, {})):
+        eng = cls(model, params, cfg, max_slots=2, max_len=32, kv_bits=8, **kw)
+        outs[name] = _serve(eng, _mk_requests(cfg, max_new=6))
+    assert outs["paged"] == outs["batched"]
+
+
+# ---------------------------------------------------------------------------
+# in-engine batched prefill
+# ---------------------------------------------------------------------------
+
+
+def test_batched_prefill_one_dispatch_mixed_lengths():
+    """A mixed-prompt-length admission batch shares ONE prefill dispatch
+    (length-bucketed padding), vs one per request on the seed path."""
+    cfg, model, params, _ = _setup("stablelm_3b", False)
+    eng = PagedServingEngine(model, params, cfg, max_slots=4, max_len=32,
+                             page_size=4, prefill_bucket=8)
+    reqs = [Request(uid=i, prompt=np.arange(1, 3 + 2 * i), max_new_tokens=3)
+            for i in range(4)]                  # prompt lengths 2, 4, 6, 8
+    outs = _serve(eng, reqs)
+    assert eng.prefill_dispatches == 1
+
+    per_slot = PerSlotServingEngine(model, params, cfg, max_slots=4,
+                                    max_len=32)
+    ref = _serve(per_slot, [Request(uid=i, prompt=np.arange(1, 3 + 2 * i),
+                                    max_new_tokens=3) for i in range(4)])
+    assert per_slot.prefill_dispatches == 4
+    assert outs == ref
+
+
+def test_prefill_finish_retires_without_slot():
+    """max_new_tokens=1 requests finish at prefill: pages free the same
+    tick and the next admission round reuses the slot (per-slot oracle
+    semantics)."""
+    cfg, model, params, _ = _setup("stablelm_3b", False)
+    eng = PagedServingEngine(model, params, cfg, max_slots=1, max_len=32,
+                             page_size=4)
+    reqs = [Request(uid=i, prompt=np.asarray([5, 6, 7]), max_new_tokens=1)
+            for i in range(3)]
+    outs = _serve(eng, reqs)
+    assert sorted(outs) == [0, 1, 2]
+    assert all(len(t) == 1 for t in outs.values())
+    assert eng.pages_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# page-pool lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_page_reuse_no_stale_kv_or_scales():
+    """Retire-then-admit must REUSE freed physical pages (tight pool) and
+    still match a fresh engine token for token — no stale keys/values or
+    int8 dequant scales can leak through a recycled page (the PR 2
+    slot-reuse test at page granularity)."""
+    cfg, model, params, _ = _setup("stablelm_3b", False)
+    long_req = Request(uid=0, prompt=np.arange(1, 13) % 7, max_new_tokens=6)
+    short = np.asarray([3, 1, 4])
+
+    # pool of exactly 5 pages (page_size 4): the long request fills
+    # 12 + 5 = 17 positions → all 5 pages carry its data when it retires
+    eng = PagedServingEngine(model, params, cfg, max_slots=1, max_len=32,
+                             kv_bits=8, page_size=4, n_pages=5)
+    eng.submit(long_req)
+    eng.run(max_ticks=50)
+    assert eng.peak_pages_in_use == 5
+    assert eng.pages_in_use == 0
+    reused = Request(uid=1, prompt=short, max_new_tokens=6)
+    eng.submit(reused)
+    eng.run(max_ticks=50)
+
+    fresh_eng = PagedServingEngine(model, params, cfg, max_slots=1,
+                                   max_len=32, kv_bits=8, page_size=4,
+                                   n_pages=5)
+    fresh = Request(uid=2, prompt=short, max_new_tokens=6)
+    fresh_eng.submit(fresh)
+    fresh_eng.run(max_ticks=50)
+    assert reused.out_tokens == fresh.out_tokens
+
+
+def test_submit_rejects_never_admissible_prompt():
+    """A prompt that can never fit the page-table width / pool fails
+    loudly at submit instead of starving the FIFO queue forever."""
+    cfg, model, params, _ = _setup("stablelm_3b", False)
+    eng = PagedServingEngine(model, params, cfg, max_slots=1, max_len=32,
+                             page_size=4, n_pages=4)     # capacity 16 tokens
+    with pytest.raises(ValueError, match="capacity"):
+        eng.submit(Request(uid=0, prompt=np.arange(20), max_new_tokens=2))
+    ok = Request(uid=1, prompt=np.arange(10), max_new_tokens=2)
+    eng.submit(ok)
+    eng.run(max_ticks=50)
+    assert len(ok.out_tokens) == 2
+
+
+def test_pool_exhaustion_backpressure():
+    """Admission waits for pages even while a slot is free, resumes when
+    the occupant retires, and both requests' tokens match the oracle."""
+    cfg, model, params, _ = _setup("stablelm_3b", False)
+    eng = PagedServingEngine(model, params, cfg, max_slots=2, max_len=32,
+                             page_size=4, n_pages=3)
+    r0 = Request(uid=0, prompt=np.arange(1, 9), max_new_tokens=4)
+    r1 = Request(uid=1, prompt=np.arange(2, 10), max_new_tokens=4)
+    eng.submit(r0)
+    eng.submit(r1)
+    eng.step()
+    # r0 holds 2 of 3 pages; r1 (2 pages) must wait though slot 1 is free
+    assert eng.slots[0] is not None and eng.slots[1] is None
+    assert len(eng.queue) == 1
+    done = eng.run(max_ticks=200)
+    assert sorted(r.uid for r in done) == [0, 1]
+    assert eng.pages_in_use == 0
+
+    oracle = PerSlotServingEngine(model, params, cfg, max_slots=2, max_len=32)
+    ref = _serve(oracle, [Request(uid=0, prompt=np.arange(1, 9),
+                                  max_new_tokens=4),
+                          Request(uid=1, prompt=np.arange(2, 10),
+                                  max_new_tokens=4)])
+    assert {0: r0.out_tokens, 1: r1.out_tokens} == ref
+
+
+def test_slots_grow_on_demand():
+    """A slot's pages accrete as it decodes past page boundaries; the
+    stats dict reports the growth."""
+    cfg, model, params, _ = _setup("stablelm_3b", False)
+    eng = PagedServingEngine(model, params, cfg, max_slots=1, max_len=32,
+                             page_size=4)
+    req = Request(uid=0, prompt=np.asarray([1, 2, 3]), max_new_tokens=10)
+    eng.submit(req)
+    eng.step()
+    assert eng.pages_in_use == 1                # ceil(3/4) at admission
+    eng.run(max_ticks=50)
+    # 3 prompt + 9 decode writes = 12 positions → 3 pages at peak
+    assert eng.peak_pages_in_use == 3
+    assert eng.run_stats["page_occupancy_peak"] == pytest.approx(3 / 8)
+    assert eng.run_stats["per_request"][0] == {"prefill": 3, "decode": 10}
+
+
+def test_total_stall_preempts_and_tokens_unchanged():
+    """When EVERY active slot needs a page and none are free, the
+    youngest occupant is preempted back to the queue; greedy output still
+    matches the oracle request for request."""
+    cfg, model, params, _ = _setup("stablelm_3b", False)
+    eng = PagedServingEngine(model, params, cfg, max_slots=2, max_len=32,
+                             page_size=4, n_pages=2)
+    reqs = [Request(uid=0, prompt=np.arange(1, 5), max_new_tokens=3),
+            Request(uid=1, prompt=np.arange(3, 7), max_new_tokens=3)]
+    outs = _serve(eng, reqs, max_ticks=300)
+    oracle = PerSlotServingEngine(model, params, cfg, max_slots=2, max_len=32)
+    ref = _serve(oracle, [Request(uid=0, prompt=np.arange(1, 5),
+                                  max_new_tokens=3),
+                          Request(uid=1, prompt=np.arange(3, 7),
+                                  max_new_tokens=3)], max_ticks=300)
+    assert outs == ref
+
+
+def test_pool_too_small_for_growth_retires_truncated_not_livelock():
+    """A request admitted within capacity but whose DECODE outgrows the
+    whole pool cannot be resumed after preemption — it must retire
+    truncated rather than wedge the FIFO head and starve the queue."""
+    cfg, model, params, _ = _setup("stablelm_3b", False)
+    # 20-token pool; 18-token prompt + 8 decodes needs 25 > 20 tokens
+    eng = PagedServingEngine(model, params, cfg, max_slots=2, max_len=32,
+                             page_size=4, n_pages=5)
+    big = Request(uid=0, prompt=np.arange(1, 19) % 7, max_new_tokens=8)
+    small = Request(uid=1, prompt=np.asarray([3, 1, 4]), max_new_tokens=2)
+    eng.submit(big)
+    eng.submit(small)
+    done = eng.run(max_ticks=300)
+    assert sorted(r.uid for r in done) == [0, 1]       # nobody starves
+    assert len(small.out_tokens) == 2                  # small unaffected
+    assert 1 <= len(big.out_tokens) < 8                # truncated, not lost
+    assert not eng.queue and not any(eng.slots)
+
+
+# ---------------------------------------------------------------------------
+# run() stats dict (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_run_stats_token_counts_all_engines():
+    """Every engine reports aggregate + per-request prefill/decode token
+    counts, so benchmarks stop re-deriving them from Request lists."""
+    cfg, model, params, _ = _setup("stablelm_3b", False)
+    for cls in (PagedServingEngine, ServingEngine, PerSlotServingEngine):
+        eng = cls(model, params, cfg, max_slots=2, max_len=32)
+        reqs = _mk_requests(cfg, n=3, max_new=4)
+        for r in reqs:
+            eng.submit(r)
+        done = eng.run(max_ticks=200)
+        st = eng.run_stats
+        assert st["prefill_tokens"] == sum(3 + i for i in range(3))
+        assert st["decode_tokens"] == sum(len(r.out_tokens) for r in done)
+        for r in done:
+            assert st["per_request"][r.uid]["prefill"] == len(r.prompt)
+            assert st["per_request"][r.uid]["decode"] == len(r.out_tokens)
+        assert st["dispatches_per_tick"] == (
+            1.0 if cls is not PerSlotServingEngine
+            else pytest.approx(eng.decode_dispatches / max(eng.ticks, 1)))
