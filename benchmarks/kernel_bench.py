@@ -1,6 +1,6 @@
 """Kernel micro-benchmarks (infrastructure table).
 
-Two parts:
+Three parts:
 
 1. Fused vs staged quant-linear: the one-pass ``ops.fused_qlinear``
    kernel against the staged ``ops.fused_quant_matmul`` composition it
@@ -14,10 +14,18 @@ Two parts:
    perf trajectory records across PRs, and benchmarks/report.py renders
    the §Kernels table from it.
 
-2. The XLA-native integer serving path vs the bf16 baseline per shape
+2. Paged-attention decode: the in-VMEM Pallas kernel
+   (``ops.paged_attention``) against the XLA gather path it replaces
+   (``paged_view`` materializes each slot's pages contiguously, then
+   attention re-reads the copy — every cached byte crosses HBM three
+   times per layer per tick, int8 pools inflating to bf16 on the way).
+   Same artifact, rows tagged ``kind="paged_attention"``; the CI gate
+   holds the modeled tok/s and the strictly-fewer-HBM-bytes contract.
+
+3. The XLA-native integer serving path vs the bf16 baseline per shape
    class (the seed's original table; unchanged contract).
 
-``--quick`` (CI smoke) runs one small fused-vs-staged shape only.
+``--quick`` (CI smoke) runs one small shape per kernel family only.
 """
 
 from __future__ import annotations
@@ -27,6 +35,7 @@ import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit, timeit
 from repro.core.hadamard import apply_hadamard
@@ -41,6 +50,15 @@ SHAPES = [(64, 2048, 2048), (128, 4096, 1024)]
 # scales exactly, so the ratios transfer to the serving dims.
 FUSED_SHAPES = [(4, 512, 256), (4, 2048, 512), (32, 1024, 512)]
 QUICK_SHAPES = [(4, 512, 256)]
+
+# (b, hq, hkv, d, page, width, length, int8kv): decode ticks over a paged
+# pool — a small-slot cell, a quantized pool, and a deeper-context cell.
+PAGED_SHAPES = [
+    (4, 8, 2, 64, 16, 8, 100, False),
+    (4, 8, 2, 64, 16, 8, 100, True),
+    (8, 16, 4, 64, 32, 8, 200, False),
+]
+PAGED_QUICK_SHAPES = [(4, 8, 2, 64, 16, 8, 100, False)]
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "experiments",
                         "kernels", "BENCH_kernels.json")
@@ -146,6 +164,129 @@ def bench_fused_vs_staged(shapes) -> list[dict]:
     return rows
 
 
+def paged_hbm_bytes(b: int, hkv: int, d: int, page: int, width: int, *,
+                    int8kv: bool, fused: bool, hq: int) -> int:
+    """HBM traffic of one layer's paged decode attention, by construction.
+
+    ``width`` = page-table width.  BOTH paths traverse the full
+    (b, width, page) logical extent — ``paged_view`` gathers every
+    table entry (``-1`` clamps to page 0) and materializes the full
+    contiguous view, and the kernel's grid walks every logical page
+    (dead entries fetch clamped page 0; the pipeline skips the compute
+    and dedupes consecutive repeat fetches, so counting them is
+    conservative AGAINST the kernel).  Per cached position a pool
+    stores k + v rows of ``hkv·d`` (1 B int8 / 2 B bf16) plus, when
+    quantized, two ``hkv·4`` B scale rows.
+
+    gather (``paged_view`` + attention):
+      read pool pages → write the contiguous DEQUANTIZED bf16 view
+      (b · width · page · hkv · d · 2 B × {k,v}) → attention re-reads it.
+    fused (``ops.paged_attention``):
+      read pool pages ONCE (the table-driven BlockSpec DMA); the
+      contiguous view never exists.
+    Both move the (b, hq, d) query in and the output out.
+    """
+    positions = b * width * page
+    kv_b = 1 if int8kv else 2
+    pool = positions * hkv * (2 * d * kv_b + (8 if int8kv else 0))
+    qo = 2 * b * hq * d * 2
+    if fused:
+        return pool + qo
+    view = positions * hkv * d * 2 * 2          # contiguous bf16, k and v
+    return pool + view + view + qo
+
+
+def paged_roofline(b: int, hq: int, d: int, length: int, bytes_moved: int,
+                   hw: HW = HW()) -> dict:
+    """Modeled decode-tick attention time on TPU v5e: f32/bf16 QK+PV
+    FLOPs (4·b·hq·len·d) vs the HBM stream."""
+    compute_s = 4.0 * b * hq * length * d / hw.peak_bf16
+    memory_s = bytes_moved / hw.hbm_bw
+    bound = max(compute_s, memory_s)
+    return {"compute_s": compute_s, "memory_s": memory_s,
+            "modeled_tok_s": b / bound if bound else 0.0,
+            "dominant": "memory" if memory_s >= compute_s else "compute"}
+
+
+def _paged_case(b, hq, hkv, d, page, width, length, int8kv, seed=0):
+    """Pool + contiguously-allocated (but physically scattered) table."""
+    rng = np.random.default_rng(seed)
+    n_pages = b * width
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    kp = jax.random.normal(ks[0], (n_pages, page, hkv, d)).astype(jnp.bfloat16)
+    vp = jax.random.normal(ks[1], (n_pages, page, hkv, d)).astype(jnp.bfloat16)
+    q = jax.random.normal(ks[2], (b, 1, hq, d)).astype(jnp.bfloat16)
+    layer_kv = {"k": kp, "v": vp}
+    if int8kv:
+        # the engine's actual KV quantizer — benchmarking any other
+        # scheme would silently stop modeling what the pool stores
+        from repro.models.common import _quant_kv
+
+        kq, ksc = _quant_kv(kp)
+        vq, vsc = _quant_kv(vp)
+        layer_kv = {"k": kq, "v": vq, "k_scale": ksc, "v_scale": vsc}
+    perm = rng.permutation(n_pages)
+    pages = -(-length // page)
+    table = np.full((b, width), -1, np.int32)
+    nxt = 0
+    for i in range(b):
+        for j in range(pages):
+            table[i, j] = perm[nxt]
+            nxt += 1
+    lens = jnp.full((b,), length, jnp.int32)
+    return q, layer_kv, jnp.asarray(table), lens
+
+
+def bench_paged_attention(shapes) -> list[dict]:
+    rows = []
+    for b, hq, hkv, d, page, width, length, int8kv in shapes:
+        q, layer_kv, table, lens = _paged_case(
+            b, hq, hkv, d, page, width, length, int8kv)
+
+        from repro.models.common import attention_scores, paged_view
+
+        def gather(q_, kv_, t_, ln_):
+            kc, vc = paged_view(kv_, t_)
+            return attention_scores(q_, kc, vc, causal=False, length=ln_)
+
+        fused = jax.jit(lambda q_, kv_, t_, ln_: ops.paged_attention(
+            q_, kv_, t_, ln_, interpret=True))
+        t_gather = timeit(jax.jit(gather), q, layer_kv, table, lens,
+                          warmup=1, iters=3)
+        t_fused = timeit(fused, q, layer_kv, table, lens, warmup=1, iters=3)
+
+        b_gather = paged_hbm_bytes(b, hkv, d, page, width, int8kv=int8kv,
+                                   fused=False, hq=hq)
+        b_fused = paged_hbm_bytes(b, hkv, d, page, width, int8kv=int8kv,
+                                  fused=True, hq=hq)
+        r_gather = paged_roofline(b, hq, d, length, b_gather)
+        r_fused = paged_roofline(b, hq, d, length, b_fused)
+        row = {
+            "kind": "paged_attention",
+            "shape": f"b{b}xh{hq}/{hkv}xd{d}xp{page}xl{length}"
+                     f"{'_int8kv' if int8kv else ''}",
+            "int8kv": int8kv,
+            "gather_us_interpret": t_gather, "fused_us_interpret": t_fused,
+            "hbm_bytes_gather": b_gather, "hbm_bytes_fused": b_fused,
+            "memory_s_gather": r_gather["memory_s"],
+            "memory_s_fused": r_fused["memory_s"],
+            "modeled_tok_s_gather": r_gather["modeled_tok_s"],
+            "modeled_tok_s_fused": r_fused["modeled_tok_s"],
+            # the acceptance contract: the kernel moves STRICTLY fewer
+            # modeled HBM bytes than the gather path
+            "fused_lt_gather_bytes": b_fused < b_gather,
+        }
+        rows.append(row)
+        emit(f"kernel_paged_attn_fused_{row['shape']}", t_fused,
+             f"hbm_bytes={b_fused};modeled_tok_s="
+             f"{r_fused['modeled_tok_s']:.3e}")
+        emit(f"kernel_paged_attn_gather_{row['shape']}", t_gather,
+             f"hbm_bytes={b_gather};modeled_tok_s="
+             f"{r_gather['modeled_tok_s']:.3e};"
+             f"fused_bytes_saving={b_gather / b_fused:.2f}x")
+    return rows
+
+
 def write_artifact(rows: list[dict], quick: bool = False,
                    out_path: str | None = None) -> str:
     # --quick (CI smoke) writes a sibling file so it never truncates the
@@ -164,10 +305,15 @@ def write_artifact(rows: list[dict], quick: bool = False,
 def run(quick: bool = False, out_path: str | None = None) -> dict:
     out = {}
     rows = bench_fused_vs_staged(QUICK_SHAPES if quick else FUSED_SHAPES)
-    path = write_artifact(rows, quick, out_path)
+    paged_rows = bench_paged_attention(PAGED_QUICK_SHAPES if quick
+                                       else PAGED_SHAPES)
+    path = write_artifact(rows + paged_rows, quick, out_path)
     out["fused_vs_staged"] = rows
+    out["paged_attention"] = paged_rows
     assert all(r["fused_ge_staged"] for r in rows), \
         "fused path must dominate the staged roofline"
+    assert all(r["fused_lt_gather_bytes"] for r in paged_rows), \
+        "paged kernel must move strictly fewer HBM bytes than the gather"
     emit("kernel_bench_artifact", 0.0, f"wrote={os.path.relpath(path)}")
     if quick:
         return out

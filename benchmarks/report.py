@@ -111,11 +111,14 @@ def load_serving() -> list[dict]:
 
 def serving_table(rows: list[dict]) -> str:
     """Paged vs batched vs per-slot engine throughput
-    (serving_throughput.py → BENCH_serving.json)."""
-    out = ["| arch | slots | engine | tok/s | prefill tok/s | "
-           "dispatches/tick | pool occ. peak | paged ≥ per-slot | "
-           "batched prefill ≥ per-req |",
-           "|---|---|---|---|---|---|---|---|---|"]
+    (serving_throughput.py → BENCH_serving.json).  The paged row notes
+    the resolved decode-attention backend ("pallas" = the in-VMEM
+    paged-attention kernel on TPU auto; "xla" = the paged_view gather
+    fallback the CPU run measured — docs/paged_attention.md)."""
+    out = ["| arch | slots | engine | attn backend | tok/s | "
+           "prefill tok/s | dispatches/tick | pool occ. peak | "
+           "paged ≥ per-slot | batched prefill ≥ per-req |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
     for r in rows:
         for eng in ("paged", "batched", "per_slot"):
             if eng not in r:
@@ -125,6 +128,7 @@ def serving_table(rows: list[dict]) -> str:
                    if "page_occupancy_peak" in e else "—")
             out.append(
                 f"| {r['arch']} | {r['max_slots']} | {eng} | "
+                f"{e.get('paged_attention_backend', '—')} | "
                 f"{e['tok_s']:.1f} | {e.get('prefill_tok_s', 0):.1f} | "
                 f"{e['dispatches_per_tick']:.2f} | {occ} | "
                 f"{'yes' if r.get('paged_ge_per_slot') else 'NO'} | "
@@ -138,6 +142,26 @@ def load_kernels() -> list[dict]:
         return []
     with open(KERNELS_PATH) as f:
         return json.load(f)
+
+
+def paged_attention_table(rows: list[dict]) -> str:
+    """In-VMEM paged-attention kernel vs the XLA gather path
+    (kernel_bench.py rows tagged kind="paged_attention"; the fused
+    backend is what `auto` resolves to on TPU, the gather is the parity
+    fallback)."""
+    out = ["| shape | int8 KV | HBM gather | HBM fused (kernel) | "
+           "gather µs | fused µs | modeled tok/s gather | fused | "
+           "fused bytes < gather |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['shape']} | {'yes' if r['int8kv'] else 'no'} | "
+            f"{r['hbm_bytes_gather']} | {r['hbm_bytes_fused']} | "
+            f"{r['gather_us_interpret']:.0f} | {r['fused_us_interpret']:.0f} |"
+            f" {r['modeled_tok_s_gather']:.3g} | "
+            f"{r['modeled_tok_s_fused']:.3g} | "
+            f"{'yes' if r['fused_lt_gather_bytes'] else 'NO'} |")
+    return "\n".join(out)
 
 
 def kernels_table(rows: list[dict]) -> str:
@@ -188,9 +212,17 @@ def _find_baseline(fresh_path: str) -> str | None:
 
 def _kernel_metrics(rows: list[dict]) -> dict[str, float]:
     """shape → modeled tok/s of the fused kernel (analytic: transfers
-    across machines), plus the fused≥staged contract as a 0/1 metric."""
+    across machines), plus the per-kind contract as a 0/1 metric
+    (fused ≥ staged roofline for the qlinear rows; strictly fewer HBM
+    bytes than the gather for the paged-attention rows)."""
     out = {}
     for r in rows:
+        if r.get("kind") == "paged_attention":
+            key = f"paged:{r['shape']}"
+            out[f"{key}:modeled_tok_s_fused"] = r["modeled_tok_s_fused"]
+            out[f"{key}:fused_lt_gather_bytes"] = float(
+                r["fused_lt_gather_bytes"])
+            continue
         out[f"{r['shape']}:modeled_tok_s_fused"] = r["modeled_tok_s_fused"]
         out[f"{r['shape']}:fused_ge_staged"] = float(r["fused_ge_staged"])
     return out
@@ -293,11 +325,17 @@ def main(argv=None):
     if sv_rows:
         parts.append(f"\n### Serving throughput ({len(sv_rows)} archs)\n")
         parts.append(serving_table(sv_rows))
-    kn_rows = load_kernels()
+    kn_all = load_kernels()
+    kn_rows = [r for r in kn_all if r.get("kind") != "paged_attention"]
+    pa_rows = [r for r in kn_all if r.get("kind") == "paged_attention"]
     if kn_rows:
         parts.append(f"\n### Kernels — fused vs staged qlinear "
                      f"({len(kn_rows)} shapes)\n")
         parts.append(kernels_table(kn_rows))
+    if pa_rows:
+        parts.append(f"\n### Kernels — paged-attention decode, in-VMEM "
+                     f"kernel vs XLA gather ({len(pa_rows)} shapes)\n")
+        parts.append(paged_attention_table(pa_rows))
     text = "\n".join(parts)
     if args.out:
         with open(args.out, "w") as f:

@@ -99,7 +99,11 @@ def _serve(engine_cls, model, params, cfg, *, max_slots, max_len, n_requests,
     if "page_occupancy_peak" in st:
         row.update(n_pages=st["n_pages"], page_size=st["page_size"],
                    peak_pages_in_use=st["peak_pages_in_use"],
-                   page_occupancy_peak=round(st["page_occupancy_peak"], 4))
+                   page_occupancy_peak=round(st["page_occupancy_peak"], 4),
+                   # resolved decode-attention executor over the pool
+                   # ("pallas" on TPU auto; "xla" = the gather fallback
+                   # this CPU run measures — docs/paged_attention.md)
+                   paged_attention_backend=st["paged_attention_backend"])
     return row
 
 

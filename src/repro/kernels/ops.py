@@ -29,6 +29,7 @@ from repro.core.qlinear import QuantizedWeight
 from repro.kernels import ref
 from repro.kernels.fused_qlinear import fused_qlinear as _fql_kernel
 from repro.kernels.hadamard_kernel import fused_hadamard_quant as _fhq_kernel
+from repro.kernels.paged_attention import paged_attention as _pa_kernel
 from repro.kernels.quant_matmul import quant_matmul as _qmm_kernel
 from repro.kernels.quant_matmul import quant_matmul_packed as _qmm_packed_kernel
 from repro.kernels.quantize_kernel import quantize_per_token as _q_kernel
@@ -41,6 +42,7 @@ __all__ = [
     "fused_hadamard_quant",
     "fused_quant_matmul",
     "fused_qlinear",
+    "paged_attention",
 ]
 
 Backend = Literal["auto", "pallas", "xla"]
@@ -77,6 +79,18 @@ def fused_qlinear(x, qw: QuantizedWeight, *, act_bits: int = 4,
     (had_mask-gated in-kernel) → quantize → int matmul → dequant.
     x: (n, c_in) → (n, c_out).  See kernels/fused_qlinear.py."""
     return _fql_kernel(x, qw, act_bits=act_bits, interpret=interpret)
+
+
+def paged_attention(q, layer_kv: dict, page_table, lengths, *,
+                    interpret: bool = False):
+    """One-``pallas_call`` paged GQA decode attention: pages of one
+    layer's shared pool are DMA'd into VMEM through the page-table
+    indirection (scalar prefetch) and reduced with an online softmax —
+    no contiguous gather ever lands in HBM.  q: (b, 1, hq, d) →
+    (b, 1, hq, d).  See kernels/paged_attention.py; the XLA parity
+    fallback is ``models.common.paged_view`` + ``attention_scores``
+    (oracle: ``ref.paged_attention_ref``)."""
+    return _pa_kernel(q, layer_kv, page_table, lengths, interpret=interpret)
 
 
 def quantize_per_token(x, *, bits: int = 4, backend: Backend = "auto",

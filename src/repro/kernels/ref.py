@@ -21,6 +21,7 @@ __all__ = [
     "fused_hadamard_quant_ref",
     "fused_qlinear_ref",
     "int_matmul_ref",
+    "paged_attention_ref",
 ]
 
 
@@ -104,3 +105,35 @@ def fused_hadamard_quant_ref(x: jax.Array, block: int, bits: int = 4):
     xr = x.astype(jnp.float32).reshape(n, d // block, block)
     xt = apply_hadamard(xr, block)  # block is a power of two → Sylvester
     return quantize_per_token_ref(xt.reshape(n, d), bits)
+
+
+def paged_attention_ref(q: jax.Array, layer_kv: dict, page_table: jax.Array,
+                        lengths: jax.Array) -> jax.Array:
+    """Gather-then-attend oracle for ``paged_attention`` (the XLA path).
+
+    Mirrors ``models.common.paged_view`` + ``attention_scores`` exactly:
+    pages gathered in logical order into a contiguous (b, width·page, hkv,
+    d) view (table entries clamped to page 0 — stale reads rely on the
+    length mask), int8 pools dequantized (codes·scale)→bf16, masked
+    softmax in f32, length-prefix mask at -1e30.
+    """
+    idx = jnp.maximum(jnp.asarray(page_table, jnp.int32), 0)
+    k, v = layer_kv["k"][idx], layer_kv["v"][idx]      # (b, w, page, hkv, d)
+    if layer_kv.get("k_scale") is not None:
+        k = (k.astype(jnp.float32) * layer_kv["k_scale"][idx]
+             ).astype(jnp.bfloat16)
+        v = (v.astype(jnp.float32) * layer_kv["v_scale"][idx]
+             ).astype(jnp.bfloat16)
+    b, w, page = k.shape[0], k.shape[1], k.shape[2]
+    k = k.reshape(b, w * page, *k.shape[3:])
+    v = v.reshape(b, w * page, *v.shape[3:])
+    hq, d = q.shape[2], q.shape[3]
+    hkv = k.shape[2]
+    qg = q.reshape(b, 1, hkv, hq // hkv, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    mask = jnp.arange(w * page)[None] < jnp.asarray(lengths).reshape(-1, 1)
+    s = jnp.where(mask[:, None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, 1, hq, d).astype(q.dtype)

@@ -172,7 +172,8 @@ def main(argv=None):
         if "n_pages" in st:
             print(f"  page pool: {st['peak_pages_in_use']}/{st['n_pages']} "
                   f"pages at peak ({100 * st['page_occupancy_peak']:.0f}% "
-                  f"occupancy, page size {st['page_size']})")
+                  f"occupancy, page size {st['page_size']}), "
+                  f"paged attention: {st['paged_attention_backend']}")
         for r in done[:3]:
             print(f"  req {r.uid}: {r.out_tokens[:12]}...")
 

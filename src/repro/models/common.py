@@ -34,6 +34,7 @@ __all__ = [
     "batch_slot_cache", "cache_at", "write_slot",
     "PagedKVCache", "init_paged_kv_cache", "pages_per_slot", "paged_update",
     "paged_view", "quant_roundtrip_kv", "gather_page_rows", "take_last_valid",
+    "flash_decode", "paged_attn_backend",
 ]
 
 
@@ -517,12 +518,15 @@ def paged_update(layer_kv: dict, k_new: jax.Array, v_new: jax.Array,
 
     layer_kv: dict(k, v[, k_scale, v_scale]) with POOL shapes
     (n_pages, page, h, d).  k_new/v_new: (b, s, h, d) written at per-row
-    positions ``length + [0, s)``.  ``valid_new``: optional (b,) count of
-    REAL new tokens per row (batched prefill right-pads mixed prompt
-    lengths) — writes beyond it are dropped.  Any write that resolves to
-    an unassigned (-1) or out-of-range logical page is routed out of
-    bounds and dropped by the scatter, so padding rows and stalled slots
-    cannot corrupt the pool.
+    positions ``length + [0, s)`` — ``length`` is a scalar (all rows at
+    the same depth) or a (b,) vector of per-row depths (slot-major
+    batched decode / mixed-depth prefill); int8 pools quantize here and
+    write the per-(position, head) scales through the same indirection.
+    ``valid_new``: optional (b,) count of REAL new tokens per row
+    (batched prefill right-pads mixed prompt lengths) — writes beyond it
+    are dropped.  Any write that resolves to an unassigned (-1) or
+    out-of-range logical page is routed out of bounds and dropped by the
+    scatter, so padding rows and stalled slots cannot corrupt the pool.
     """
     n_pages, page = layer_kv["k"].shape[0], layer_kv["k"].shape[1]
     b, s = k_new.shape[0], k_new.shape[1]
@@ -557,10 +561,20 @@ def paged_update(layer_kv: dict, k_new: jax.Array, v_new: jax.Array,
 def paged_view(layer_kv: dict, page_table: jax.Array):
     """Contiguous dequantized (k, v) views of a paged pool, per slot.
 
-    Gathers each slot's pages in logical order into (b, width·page, h, d)
-    — positions past the slot's valid length read clamped/stale pages and
-    MUST be masked by the caller's valid-length mask (they always are:
-    pages are allocated contiguously, so page validity ≡ length prefix).
+    This is the XLA gather that the Pallas paged-attention kernel
+    (kernels/paged_attention.py) eliminates on the decode hot path: it
+    materializes every cached byte into a fresh (b, width·page, h, d)
+    HBM buffer per layer per call (int8 pools additionally inflate to
+    bf16), which attention then re-reads.  It remains the parity
+    fallback (``paged_attn_backend() == "xla"``) and the prefill-side
+    view.
+
+    Masking contract: positions past a slot's valid length read
+    clamped (-1 → page 0) or stale pages and MUST be masked by the
+    caller's length-prefix mask.  They always can be: the engine
+    allocates pages contiguously per slot, so page validity ≡ the
+    per-row valid-length prefix that ``attention_scores(length=...)``
+    already applies.
     """
     idx = jnp.maximum(page_table, 0)                      # (b, width)
     k, v = layer_kv["k"][idx], layer_kv["v"][idx]         # (b, w, page, h, d)
@@ -612,6 +626,17 @@ def flash_decode(q, layer_kv: dict, valid, *, dp_spec) -> jax.Array:
     wire per layer drops from the (b,h,1,S) f32 logits all-gather
     (~137 MB for llama decode_32k) to (b,h,[1+1+hd]) f32 (~0.5 MB).
     q: (b, 1, hq, d); cache slices (b, S, hkv, ·).  §Perf cell C it2.
+
+    ``valid`` — the number of visible cache positions per row, INCLUDING
+    the token written this tick — may be a scalar (every row at the same
+    depth: single-sequence serving) or a (b,) vector of per-row depths
+    (the slot-major batched engine, where each slot decodes at its own
+    length).  Either way it is broadcast to (b,) and sharded with the
+    batch, and each shard masks its local positions against its own
+    rows' depths — so the batched engine's ONE (max_slots, 1) tick
+    reaches this flash path, not just scalar-length callers.
+    ``dp_spec``: the batch-sharding spec from :func:`_flash_decode_ok`
+    (None = batch replicated).
     """
     from jax.sharding import PartitionSpec as P
 
@@ -633,7 +658,11 @@ def flash_decode(q, layer_kv: dict, valid, *, dp_spec) -> jax.Array:
         s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
                        k.astype(jnp.float32)) * (d ** -0.5)
         pos = jnp.arange(s_loc) + idx * s_loc  # global slot positions
-        mask = pos[None, None, None, None, :] < valid_
+        # valid_ is the (b_loc,) per-row depth slice: mask each row's
+        # local positions against ITS depth (scalar callers were
+        # broadcast before the shard_map)
+        mask = pos[None, None, None, None, :] \
+            < valid_[:, None, None, None, None]
         s = jnp.where(mask, s, -1e30)
         m_loc = s.max(-1)                                    # (b,h,g,1)
         m_glob = jax.lax.pmax(m_loc, "model")
@@ -650,19 +679,27 @@ def flash_decode(q, layer_kv: dict, valid, *, dp_spec) -> jax.Array:
     ks = layer_kv.get("k_scale")
     vs = layer_kv.get("v_scale")
     scale_spec = kv_spec if quantized else P()
+    valid_vec = jnp.broadcast_to(
+        jnp.asarray(valid, jnp.int32).reshape(-1), (b,))
     return compat.shard_map(
         local,
         in_specs=(P(dp_spec, None, None, None), kv_spec, kv_spec,
-                  scale_spec, scale_spec, P()),
+                  scale_spec, scale_spec, P(dp_spec)),
         out_specs=P(dp_spec, None, None, None)
     )(q, layer_kv["k"], layer_kv["v"],
       ks if quantized else jnp.zeros((), jnp.float32),
       vs if quantized else jnp.zeros((), jnp.float32),
-      jnp.asarray(valid))
+      valid_vec)
 
 
 def _flash_decode_ok(cfg: ModelConfig, q, layer_kv) -> tuple[bool, Any]:
-    """Eligibility + the dp spec for flash_decode under the ambient mesh."""
+    """Eligibility + the dp spec for flash_decode under the ambient mesh.
+
+    Length-shape-agnostic: scalar and per-slot (b,) cache depths are
+    both eligible (flash_decode broadcasts/shards the depth vector).
+    Requires a sequence-sharded cache to exist at all — a mesh with a
+    'model' axis that the kv-head count does NOT divide (head-sharded
+    caches keep the plain gather path) and S divisible by the axis."""
     mesh = compat.get_abstract_mesh()
     if mesh is None or "model" not in mesh.axis_names:
         return False, None
@@ -681,6 +718,37 @@ def _flash_decode_ok(cfg: ModelConfig, q, layer_kv) -> tuple[bool, Any]:
     return True, dp_spec
 
 
+def paged_attn_backend(cfg: ModelConfig,
+                       policy: QuantPolicy | None = None) -> str:
+    """Resolved executor for decode attention over a PAGED KV pool.
+
+    The single dispatch point for the paged decode hot path, sharing
+    ``kernels.ops.resolve_backend`` with the quantized linears so one
+    policy knob (``QuantPolicy.use_kernels``) governs both:
+
+      * ``"pallas"`` / ``"interpret"`` — the in-VMEM Pallas
+        paged-attention kernel (compiled on TPU / via the interpreter);
+      * ``"xla"``  — the ``paged_view`` gather + ``attention_scores``
+        parity fallback.  MLA latent pools resolve here by
+        construction: the latent must be up-projected (``wukv``) into
+        per-head K/V *before* attention, so the gather is load-bearing,
+        not an attention implementation detail (docs/paged_attention.md
+        has the full dispatch table).  ``attn_bf16_io`` configs also
+        fall back (the kernel accumulates f32).
+      * ``"none"`` — the family has no attention KV to page (pure SSM).
+
+    Engines surface this in ``run_stats["paged_attention_backend"]``.
+    """
+    if not cfg.uses_attention:
+        return "none"
+    if cfg.kv_lora_rank or cfg.attn_bf16_io or cfg.attn_window:
+        return "xla"
+    from repro.kernels import ops
+
+    return ops.resolve_backend(policy.use_kernels if policy is not None
+                               else "auto")
+
+
 def attn_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
                layer_kv: dict | None = None, length: jax.Array | int = 0,
                policy: QuantPolicy | None = None, taps: dict | None = None,
@@ -689,17 +757,29 @@ def attn_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
                prefill_local: bool = False):
     """Full attention block (pre-norm). Returns (y, updated layer_kv).
 
-    ``length`` may be a (b,) vector of per-row cache depths (slot-major
-    batched decode): RoPE positions, cache writes, and the valid-length
-    mask are then applied per row.
+    Per-slot length contract: ``length`` — the number of tokens already
+    in the cache BEFORE this call — may be a scalar or a (b,) vector of
+    per-row depths (slot-major batched decode).  RoPE positions, the
+    cache write position, and the valid-length mask
+    (``valid = min(length + s, S)``, which includes the tokens written
+    this call) are all applied per row; rows at depth 0 with nothing
+    written are inactive slots whose output is garbage by contract
+    (never sampled).
 
     ``page_table`` switches ``layer_kv`` to the PAGED layout: leaves are
     pool-shaped (n_pages, page, h, d) and writes/reads go through
-    :func:`paged_update` / :func:`paged_view`.  ``prefill_local`` (paged
-    batched prefill, rows all at length 0) attends over the freshly
-    computed k/v instead of gathering them back from the pool — the
-    causal mask alone covers validity, and ``valid_new`` masks the
-    right-padding rows' writes.
+    :func:`paged_update` / :func:`paged_view`.  Decode (s == 1) then
+    dispatches via :func:`paged_attn_backend`: on the Pallas modes the
+    kernel indexes pages in-VMEM and the contiguous gather never
+    materializes; on "xla" the ``paged_view`` fallback runs.
+    ``prefill_local`` (paged batched prefill, rows all at length 0)
+    attends over the freshly computed k/v instead of gathering them
+    back from the pool — the causal mask alone covers validity, and
+    ``valid_new`` masks the right-padding rows' writes.
+
+    Dense-cache decode reaches :func:`flash_decode` when
+    ``cfg.decode_flash`` and the mesh sequence-shards the cache —
+    including per-slot (b,) depth vectors (the batched engine's tick).
     """
     b, s, _ = x.shape
     hd, hq, hkv = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
@@ -725,15 +805,27 @@ def attn_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
             out = attention_scores(q, kc, vc, causal=True, q_offset=length,
                                    bf16_io=cfg.attn_bf16_io)
         else:
-            kc, vc = paged_view(layer_kv, page_table)
-            valid = jnp.minimum(larr + s, kc.shape[1])
-            out = attention_scores(q, kc, vc, causal=(s > 1), q_offset=length,
-                                   length=valid, bf16_io=cfg.attn_bf16_io)
+            width, page = page_table.shape[1], layer_kv["k"].shape[1]
+            valid = jnp.minimum(larr + s, width * page)
+            mode = paged_attn_backend(cfg, policy)
+            if s == 1 and mode in ("pallas", "interpret"):
+                # in-VMEM page indexing: the kernel DMAs each slot's
+                # pages through the table and never materializes the
+                # contiguous view (kernels/paged_attention.py)
+                from repro.kernels import ops
+
+                out = ops.paged_attention(q, layer_kv, page_table, valid,
+                                          interpret=(mode == "interpret"))
+            else:
+                kc, vc = paged_view(layer_kv, page_table)
+                out = attention_scores(q, kc, vc, causal=(s > 1),
+                                       q_offset=length, length=valid,
+                                       bf16_io=cfg.attn_bf16_io)
     elif layer_kv is not None:  # decode / cached prefill
         layer_kv = cache_update(layer_kv, k, v, length, window=cfg.attn_window)
         valid = jnp.minimum(larr + s, layer_kv["k"].shape[1])
         use_fd, dp_spec = (False, None)
-        if cfg.decode_flash and not larr.ndim:  # flash_decode: scalar only
+        if cfg.decode_flash:  # per-slot (b,) depths are eligible too
             use_fd, dp_spec = _flash_decode_ok(cfg, q, layer_kv)
         if use_fd:
             out = flash_decode(q, layer_kv, valid, dp_spec=dp_spec)

@@ -264,6 +264,16 @@ def mla_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
     batched decode), mirroring :func:`repro.models.common.attn_apply` —
     as do ``page_table`` / ``valid_new`` / ``prefill_local``, which
     switch the latent cache to the paged pool layout.
+
+    Paged-attention dispatch: MLA resolves to the "xla" gather in
+    :func:`repro.models.common.paged_attn_backend` by construction —
+    the cached latent must be up-projected through ``wukv`` into
+    per-head K/V *before* attention, so the contiguous latent view is
+    load-bearing (it feeds a matmul), not an attention-internal
+    materialization the in-VMEM kernel could elide.  An absorbed-MLA
+    kernel (folding W_uk/W_uv into q/out — changes matmul order, hence
+    greedy numerics) is the documented follow-up
+    (docs/paged_attention.md).
     """
     b, s, _ = x.shape
     H = cfg.num_heads
@@ -299,6 +309,8 @@ def mla_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
                     k_rope_all = k_rope[:, :, 0, :]
                 valid = None
             else:
+                # latent decode stays on the gather view — see the
+                # paged-attention dispatch note in the docstring
                 ck, kr = cm.paged_view(layer_kv, page_table)
                 c_all = ck[:, :, 0, :]
                 k_rope_all = kr[:, :, 0, :rd]

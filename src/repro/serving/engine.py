@@ -407,6 +407,16 @@ class PagedServingEngine(ServingEngine):
         self.peak_pages_in_use = max(self.peak_pages_in_use,
                                      self.pages_in_use)
 
+    @property
+    def paged_attention_backend(self) -> str:
+        """Resolved executor for decode attention over the paged pool —
+        "pallas"/"interpret" (the in-VMEM Pallas kernel), "xla" (the
+        ``paged_view`` gather fallback; always the case for MLA latent
+        pools), or "none" (pure-SSM: nothing to page).
+        ``common.paged_attn_backend`` is the single dispatch authority
+        (docs/paged_attention.md)."""
+        return cm.paged_attn_backend(self.cfg, self.policy)
+
     def _pool_stats(self) -> dict:
         n = max(self.n_pages, 1)
         return {"page_size": self.page_size, "n_pages": self.n_pages,
@@ -414,7 +424,8 @@ class PagedServingEngine(ServingEngine):
                 "pages_in_use": self.pages_in_use,
                 "peak_pages_in_use": self.peak_pages_in_use,
                 "page_occupancy": self.pages_in_use / n,
-                "page_occupancy_peak": self.peak_pages_in_use / n}
+                "page_occupancy_peak": self.peak_pages_in_use / n,
+                "paged_attention_backend": self.paged_attention_backend}
 
     def _pages_needed(self, n_tokens: int) -> int:
         if self._pt is None:

@@ -1,0 +1,19 @@
+"""Every relative link in README.md and docs/*.md must resolve — the
+same contract the CI lint job enforces via tools/check_links.py."""
+
+import glob
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "tools"))
+
+from check_links import check_file  # noqa: E402
+
+
+def test_readme_and_docs_links_resolve():
+    paths = [os.path.join(ROOT, "README.md")] + sorted(
+        glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    assert paths and all(os.path.exists(p) for p in paths)
+    broken = [b for p in paths for b in check_file(p)]
+    assert not broken, f"broken relative links: {broken}"

@@ -296,6 +296,51 @@ def test_pool_too_small_for_growth_retires_truncated_not_livelock():
 
 
 # ---------------------------------------------------------------------------
+# paged-attention kernel enabled (use_kernels="interpret" → the Pallas
+# kernel runs through the interpreter on CPU — the same dispatch a TPU
+# host resolves to "pallas")
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family,kw", [("dense", {}), ("dense",
+                                                       dict(kv_bits=8)),
+                                       ("hybrid", {})],
+                         ids=["dense-bf16", "dense-int8kv",
+                              "hybrid-sharedattn"])
+def test_paged_attention_kernel_token_identical(family, kw):
+    """With the in-VMEM paged-attention kernel enabled, the paged engine
+    stays greedy token-identical to the per-slot oracle — dense GQA and
+    the hybrid shared-attention invocations, bf16 and int8-KV pools."""
+    cfg, model, params, _ = _setup(FAMILY_ARCHS[family], False)
+    pol = QuantPolicy(use_kernels="interpret")
+    eng = PagedServingEngine(model, params, cfg, max_slots=2, max_len=32,
+                             policy=pol, page_size=4, prefill_bucket=8, **kw)
+    assert eng.paged_attention_backend == "interpret"
+    outs = _serve(eng, _mk_requests(cfg))
+    assert eng.run_stats["paged_attention_backend"] == "interpret"
+    oracle = PerSlotServingEngine(model, params, cfg, max_slots=2, max_len=32,
+                                  **kw)
+    assert outs == _serve(oracle, _mk_requests(cfg))
+
+
+def test_paged_attention_backend_in_run_stats():
+    """The resolved paged-attention mode is surfaced per engine run:
+    "xla" on CPU auto (the gather fallback), and MLA configs report the
+    latent-gather fallback even with kernels forced on."""
+    cfg, model, params, _ = _setup("stablelm_3b", False)
+    eng = PagedServingEngine(model, params, cfg, max_slots=2, max_len=32,
+                             page_size=4)
+    _serve(eng, _mk_requests(cfg, n=1))
+    assert eng.run_stats["paged_attention_backend"] == "xla"
+
+    cfg_m, model_m, params_m, _ = _setup("deepseek_v2_lite_16b", False)
+    eng_m = PagedServingEngine(model_m, params_m, cfg_m, max_slots=2,
+                               max_len=32, page_size=4,
+                               policy=QuantPolicy(use_kernels="interpret"))
+    assert eng_m.paged_attention_backend == "xla"
+
+
+# ---------------------------------------------------------------------------
 # run() stats dict (satellite)
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,58 @@
+#!/usr/bin/env python3
+"""Docs link checker: every RELATIVE link target in the given markdown
+files must exist on disk (CI lint job; also run by
+tests/test_docs_links.py so tier-1 catches a broken link locally).
+
+Checked: inline links/images ``[text](target)`` whose target is not an
+absolute URL (``scheme://``), ``mailto:``, or a pure in-page anchor
+(``#...``).  Fragments are stripped before the existence check; targets
+resolve relative to the file containing the link.
+
+Usage: python tools/check_links.py [README.md docs/*.md ...]
+(no arguments → README.md + docs/*.md relative to the repo root).
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+# [text](target) — stops at the first ')' not preceded by whitespace;
+# good enough for this repo's plain relative links
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP = re.compile(r"^(?:[a-zA-Z][a-zA-Z0-9+.-]*://|mailto:|#)")
+
+
+def check_file(path: str) -> list[str]:
+    """Return 'file: target' strings for every broken relative link."""
+    base = os.path.dirname(os.path.abspath(path))
+    broken = []
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    for target in _LINK.findall(text):
+        if _SKIP.match(target):
+            continue
+        resolved = os.path.join(base, target.split("#", 1)[0])
+        if not os.path.exists(resolved):
+            broken.append(f"{path}: {target}")
+    return broken
+
+
+def main(argv: list[str]) -> int:
+    paths = argv or (["README.md"] + sorted(glob.glob("docs/*.md")))
+    paths = [p for p in paths if os.path.exists(p)]
+    if not paths:
+        print("check_links: no markdown files found", file=sys.stderr)
+        return 1
+    broken = [b for p in paths for b in check_file(p)]
+    for b in broken:
+        print(f"BROKEN LINK {b}", file=sys.stderr)
+    print(f"check_links: {len(paths)} files, "
+          f"{len(broken)} broken relative link(s)")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
