@@ -10,7 +10,9 @@ import numpy as np
 
 from benchmarks.common import emit, make_suite, timeit
 from repro.core.difficulty import (
-    channel_magnitudes, kurtosis, quantization_difficulty,
+    channel_magnitudes,
+    kurtosis,
+    quantization_difficulty,
 )
 from repro.core.transforms import TRANSFORMS
 

@@ -17,7 +17,9 @@ import numpy as np
 
 from benchmarks.common import MASSIVE_LAYERS, emit, make_suite, timeit
 from repro.core.difficulty import (
-    layerwise_error, layerwise_error_transformed, quantization_difficulty,
+    layerwise_error,
+    layerwise_error_transformed,
+    quantization_difficulty,
 )
 from repro.core.transforms import TRANSFORMS, get_transform
 

@@ -12,7 +12,8 @@ import numpy as np
 
 from repro.configs.base import get_config
 from repro.core.difficulty import (
-    layerwise_error_transformed, quantization_difficulty,
+    layerwise_error_transformed,
+    quantization_difficulty,
 )
 from repro.core.transforms import get_transform
 from repro.data import synthetic_batches

@@ -10,13 +10,23 @@ CLI: ``python -m repro.autoplan --arch stablelm-3b --reduced``.
 """
 
 from repro.autoplan.plan import (
-    LayerwisePlan, ModuleChoice, MODULE_ROLES, PLANNABLE_MODULES,
+    LayerwisePlan,
+    ModuleChoice,
+    MODULE_ROLES,
+    PLANNABLE_MODULES,
 )
 from repro.autoplan.search import (
-    SearchConfig, candidate_grid, module_weights, plan_errors, search_plan,
+    SearchConfig,
+    candidate_grid,
+    module_weights,
+    plan_errors,
+    search_plan,
 )
 from repro.autoplan.telemetry import (
-    ModuleTelemetry, collect_telemetry, summarize, write_telemetry,
+    ModuleTelemetry,
+    collect_telemetry,
+    summarize,
+    write_telemetry,
 )
 
 __all__ = [

@@ -33,12 +33,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.autoplan.plan import (
-    LayerwisePlan, ModuleChoice,
+    LayerwisePlan,
+    ModuleChoice,
 )
 from repro.configs.base import ModelConfig
 from repro.core.calibration import CalibStats, smoothing_scales_from_stats
 from repro.core.difficulty import (
-    layerwise_error_transformed, quantization_difficulty,
+    layerwise_error_transformed,
+    quantization_difficulty,
 )
 from repro.core.hadamard import apply_hadamard
 from repro.core.quantizer import QuantConfig

@@ -1,4 +1,9 @@
 """Architecture configs (one module per assigned arch) + shape cells."""
 from repro.configs.base import (
-    ModelConfig, ShapeCell, SHAPES, get_config, list_archs, input_specs,
+    ModelConfig,
+    ShapeCell,
+    SHAPES,
+    get_config,
+    list_archs,
+    input_specs,
 )

@@ -10,21 +10,47 @@
 """
 
 from repro.core.quantizer import (
-    QuantConfig, quantize, dequantize, fake_quantize, pack_int4, unpack_int4, qmax,
+    QuantConfig,
+    quantize,
+    dequantize,
+    fake_quantize,
+    pack_int4,
+    unpack_int4,
+    qmax,
 )
 from repro.core.hadamard import (
-    hadamard_matrix, hadamard_factorization, apply_hadamard, plan_hadamard,
+    hadamard_matrix,
+    hadamard_factorization,
+    apply_hadamard,
+    plan_hadamard,
 )
 from repro.core.transforms import (
-    TransformPlan, smoothing_scales, smooth, rotate, smooth_rotate, get_transform,
+    TransformPlan,
+    smoothing_scales,
+    smooth,
+    rotate,
+    smooth_rotate,
+    get_transform,
     TRANSFORMS,
 )
 from repro.core.difficulty import (
-    channel_magnitudes, quantization_difficulty, flatness_profile, kurtosis,
-    layerwise_error, layerwise_error_transformed,
+    channel_magnitudes,
+    quantization_difficulty,
+    flatness_profile,
+    kurtosis,
+    layerwise_error,
+    layerwise_error_transformed,
 )
-from repro.core.outliers import OutlierSpec, synth_activations, massive_outlier_token, synth_weight
+from repro.core.outliers import (
+    OutlierSpec,
+    synth_activations,
+    massive_outlier_token,
+    synth_weight,
+)
 from repro.core.calibration import (
-    CalibStats, update_stats, collect_stats, smoothing_scales_from_stats,
+    CalibStats,
+    update_stats,
+    collect_stats,
+    smoothing_scales_from_stats,
 )
 from repro.core.qlinear import QuantizedWeight, quantize_weight, qlinear, QuantPolicy

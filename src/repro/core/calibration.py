@@ -63,7 +63,8 @@ def _tap_absmax(tap: jax.Array) -> jax.Array:
     to per-channel absmax.  Taps from scanned layers are (L, B, T, C) →
     (L, C); unscanned are (B, T, C) → (C,)."""
     x = jnp.abs(tap.astype(jnp.float32))
-    reduce_axes = tuple(range(x.ndim - 1)) if x.ndim <= 3 else tuple(range(1, x.ndim - 1))
+    reduce_axes = (tuple(range(x.ndim - 1)) if x.ndim <= 3
+                   else tuple(range(1, x.ndim - 1)))
     return jnp.max(x, axis=reduce_axes)
 
 

@@ -52,7 +52,8 @@ def synth_activations(key: jax.Array, spec: OutlierSpec) -> jax.Array:
             1.0 - j + 2 * j * jax.random.uniform(k_sys_val,
                                                  (spec.n_systematic,))
         )
-        tok_jitter = 1.0 + 0.1 * jax.random.normal(k_mv, (spec.n_tokens, spec.n_systematic))
+        tok_jitter = 1.0 + 0.1 * jax.random.normal(
+            k_mv, (spec.n_tokens, spec.n_systematic))
         sign = jax.random.rademacher(k_sign, (spec.n_systematic,), dtype=x.dtype)
         x = x.at[:, ch].set(mag * sign * tok_jitter)
     if spec.n_massive_tokens:

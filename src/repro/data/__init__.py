@@ -1,4 +1,6 @@
 """Data pipeline: synthetic streams, memmap token files, calibration."""
 from repro.data.pipeline import (
-    synthetic_batches, calibration_stream, TokenFileDataset,
+    synthetic_batches,
+    calibration_stream,
+    TokenFileDataset,
 )

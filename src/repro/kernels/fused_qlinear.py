@@ -51,7 +51,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.hadamard import (
-    apply_hadamard, kernel_fusable_factor, plan_hadamard,
+    apply_hadamard,
+    kernel_fusable_factor,
+    plan_hadamard,
 )
 from repro.core.qlinear import QuantizedWeight
 from repro.core.quantizer import qmax

@@ -11,7 +11,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hadamard import (
-    apply_hadamard, kernel_fusable_factor, plan_hadamard,
+    apply_hadamard,
+    kernel_fusable_factor,
+    plan_hadamard,
 )
 from repro.core.quantizer import qmax, unpack_int4
 

@@ -83,7 +83,8 @@ def shard_act(x: jax.Array, *, sp: bool = False) -> jax.Array:
 def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
                 scale: float | None = None, dtype=jnp.bfloat16) -> Params:
     scale = (d_in ** -0.5) if scale is None else scale
-    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)}
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32)
+               * scale).astype(dtype)}
     if bias:
         p["b"] = jnp.zeros((d_out,), dtype)
     return p
@@ -870,7 +871,8 @@ def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> Params:
 def mlp_apply(p: Params, x: jax.Array, cfg: ModelConfig,
               policy: QuantPolicy | None = None, *, residual: bool = True,
               taps: dict | None = None):
-    h = rms_norm(x, p.get("ln"), cfg.norm_eps) if "ln" in p and p["ln"] is not None else x
+    h = (rms_norm(x, p.get("ln"), cfg.norm_eps)
+         if "ln" in p and p["ln"] is not None else x)
     if taps is not None:  # gate/up share this input (paper §III-A)
         taps["gate_proj"] = h
     g = dense(h, p["wg"], policy)

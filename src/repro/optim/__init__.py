@@ -2,5 +2,7 @@
 from repro.optim.adamw import adamw, AdamW, AdamWState, global_norm, clip_by_global_norm
 from repro.optim.schedule import warmup_cosine, warmup_linear, constant
 from repro.optim.grad_compress import (
-    compress_decompress, compressed_psum, apply_error_feedback,
+    compress_decompress,
+    compressed_psum,
+    apply_error_feedback,
 )

@@ -1,4 +1,7 @@
 """Fault-tolerance runtime: preemption, heartbeats, stragglers, elastic."""
 from repro.runtime.fault_tolerance import (
-    PreemptionHandler, Heartbeat, StragglerPolicy, elastic_mesh,
+    PreemptionHandler,
+    Heartbeat,
+    StragglerPolicy,
+    elastic_mesh,
 )

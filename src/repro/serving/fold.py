@@ -40,7 +40,9 @@ import numpy as np
 from repro.autoplan.plan import LayerwisePlan, ModuleChoice
 from repro.configs.base import ModelConfig
 from repro.core.calibration import (
-    CalibStats, collect_stats, smoothing_scales_from_stats,
+    CalibStats,
+    collect_stats,
+    smoothing_scales_from_stats,
 )
 from repro.core.hadamard import apply_hadamard
 from repro.core.qlinear import QuantPolicy, QuantizedWeight, quantize_weight

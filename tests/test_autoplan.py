@@ -11,8 +11,12 @@ import numpy as np
 import pytest
 
 from repro.autoplan import (
-    LayerwisePlan, ModuleChoice, SearchConfig, collect_telemetry,
-    plan_errors, search_plan,
+    LayerwisePlan,
+    ModuleChoice,
+    SearchConfig,
+    collect_telemetry,
+    plan_errors,
+    search_plan,
 )
 from repro.configs.base import get_config
 from repro.core.calibration import update_stats

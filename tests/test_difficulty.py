@@ -6,7 +6,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.difficulty import (
-    channel_magnitudes, flatness_profile, kurtosis, layerwise_error,
+    channel_magnitudes,
+    flatness_profile,
+    kurtosis,
+    layerwise_error,
     quantization_difficulty,
 )
 from repro.core.outliers import OutlierSpec, synth_activations

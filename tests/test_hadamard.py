@@ -7,8 +7,13 @@ import pytest
 from _hypothesis_support import given, settings, st
 
 from repro.core.hadamard import (
-    apply_hadamard, hadamard_factorization, hadamard_matrix,
-    kernel_fusable_factor, paley, plan_hadamard, sylvester,
+    apply_hadamard,
+    hadamard_factorization,
+    hadamard_matrix,
+    kernel_fusable_factor,
+    paley,
+    plan_hadamard,
+    sylvester,
 )
 
 # every distinct channel dim appearing in the 10 assigned archs

@@ -8,7 +8,10 @@ from jax.sharding import PartitionSpec as P
 
 from repro.launch import compat
 from repro.launch.hlo_analysis import (
-    HloMetrics, _is_s2_tensor, _type_bytes, analyze_hlo,
+    HloMetrics,
+    _is_s2_tensor,
+    _type_bytes,
+    analyze_hlo,
 )
 
 

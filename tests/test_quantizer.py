@@ -7,7 +7,12 @@ import pytest
 from _hypothesis_support import given, settings, st
 
 from repro.core.quantizer import (
-    QuantConfig, dequantize, fake_quantize, pack_int4, qmax, quantize,
+    QuantConfig,
+    dequantize,
+    fake_quantize,
+    pack_int4,
+    qmax,
+    quantize,
     unpack_int4,
 )
 

@@ -12,7 +12,11 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import get_config
 from repro.launch.mesh import make_test_mesh
 from repro.launch.sharding import (
-    axis_if, batch_spec, cache_specs, param_specs, set_strategy,
+    axis_if,
+    batch_spec,
+    cache_specs,
+    param_specs,
+    set_strategy,
 )
 from repro.models.api import get_model
 

@@ -12,12 +12,18 @@ from repro.checkpoint import Checkpointer, restore_pytree, save_pytree
 from repro.configs.base import get_config
 from repro.data import TokenFileDataset, calibration_stream, synthetic_batches
 from repro.optim import (
-    adamw, apply_error_feedback, compress_decompress, global_norm,
-    warmup_cosine, warmup_linear,
+    adamw,
+    apply_error_feedback,
+    compress_decompress,
+    global_norm,
+    warmup_cosine,
+    warmup_linear,
 )
 from repro.launch import compat
 from repro.runtime.fault_tolerance import (
-    Heartbeat, PreemptionHandler, StragglerPolicy,
+    Heartbeat,
+    PreemptionHandler,
+    StragglerPolicy,
 )
 
 KEY = jax.random.PRNGKey(0)

@@ -8,12 +8,19 @@ import pytest
 from _hypothesis_support import given, settings, st
 
 from repro.core.difficulty import (
-    layerwise_error, layerwise_error_transformed, quantization_difficulty,
+    layerwise_error,
+    layerwise_error_transformed,
+    quantization_difficulty,
 )
 from repro.core.outliers import OutlierSpec, massive_outlier_token, synth_activations
 from repro.core.quantizer import QuantConfig
 from repro.core.transforms import (
-    TRANSFORMS, TransformPlan, get_transform, rotate, smooth, smooth_rotate,
+    TRANSFORMS,
+    TransformPlan,
+    get_transform,
+    rotate,
+    smooth,
+    smooth_rotate,
     smoothing_scales,
 )
 
