@@ -29,6 +29,7 @@ AUTOPLAN_ROOT = os.path.join(os.path.dirname(__file__), "..", "experiments",
                              "autoplan")
 EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "experiments")
 SERVING_PATH = os.path.join(EXPERIMENTS, "serving", "BENCH_serving.json")
+LATENCY_PATH = os.path.join(EXPERIMENTS, "serving", "BENCH_latency.json")
 KERNELS_PATH = os.path.join(EXPERIMENTS, "kernels", "BENCH_kernels.json")
 
 CHECK_THRESHOLD = 0.8      # fresh metric must be ≥ 80% of the baseline
@@ -134,6 +135,36 @@ def serving_table(rows: list[dict]) -> str:
                 f"{'yes' if r.get('paged_ge_per_slot') else 'NO'} | "
                 f"{'yes' if r.get('batched_prefill_ge_per_request') else 'NO'}"
                 " |")
+    return "\n".join(out)
+
+
+def load_latency() -> list[dict]:
+    if not os.path.exists(LATENCY_PATH):
+        return []
+    with open(LATENCY_PATH) as f:
+        return json.load(f)
+
+
+def latency_table(rows: list[dict]) -> str:
+    """Per-engine request latency from the traced serving pass
+    (serving_throughput.py → BENCH_latency.json, spans collected by
+    repro.obs).  TTFT = submit → first token (sampled from the prefill
+    logits); per-token = consecutive token-emission deltas."""
+    out = ["| arch | engine | reqs | TTFT p50 ms | p99 ms | "
+           "per-token p50 ms | p99 ms | all measured |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        for eng, e in r["engines"].items():
+            measured = (e["all_requests_measured"]
+                        and e["all_tokens_measured"]
+                        and e["percentiles_ordered"])
+            out.append(
+                f"| {r['arch']} | {eng} | {e['requests']} | "
+                f"{1e3 * e['ttft_s']['p50_s']:.2f} | "
+                f"{1e3 * e['ttft_s']['p99_s']:.2f} | "
+                f"{1e3 * e['per_token_s']['p50_s']:.2f} | "
+                f"{1e3 * e['per_token_s']['p99_s']:.2f} | "
+                f"{'yes' if measured else 'NO'} |")
     return "\n".join(out)
 
 
@@ -254,10 +285,31 @@ def _serving_metrics(rows: list[dict]) -> dict[str, float]:
     return out
 
 
+def _latency_metrics(rows: list[dict]) -> dict[str, float]:
+    """Machine-portable latency-artifact metrics: the wall-clock
+    percentiles stay report-only; the gate compares the deterministic
+    sample counts (every request a TTFT, every decode token a latency
+    sample — a broken tracer or summarizer collapses these to 0) and
+    the measurement contracts as 0/1 metrics."""
+    out = {}
+    for r in rows:
+        for eng, e in r["engines"].items():
+            key = f"{r['arch']}:{eng}"
+            out[f"{key}:requests"] = float(e["requests"])
+            out[f"{key}:ttft_samples"] = float(e["ttft_s"]["count"])
+            out[f"{key}:per_token_samples"] = float(e["per_token_s"]["count"])
+            for flag in ("all_requests_measured", "all_tokens_measured",
+                         "percentiles_ordered"):
+                out[f"{key}:{flag}"] = float(e[flag])
+    return out
+
+
 def _bench_metrics(path: str, rows: list[dict]) -> dict[str, float]:
     name = os.path.basename(path)
     if "kernels" in name:
         return _kernel_metrics(rows)
+    if "latency" in name:      # before "serving": both live under serving/
+        return _latency_metrics(rows)
     if "serving" in name:
         return _serving_metrics(rows)
     raise SystemExit(f"--check: no metric extractor for {name}")
@@ -325,6 +377,11 @@ def main(argv=None):
     if sv_rows:
         parts.append(f"\n### Serving throughput ({len(sv_rows)} archs)\n")
         parts.append(serving_table(sv_rows))
+    lat_rows = load_latency()
+    if lat_rows:
+        parts.append(f"\n### Serving latency — TTFT / per-token "
+                     f"({len(lat_rows)} archs)\n")
+        parts.append(latency_table(lat_rows))
     kn_all = load_kernels()
     kn_rows = [r for r in kn_all if r.get("kind") != "paged_attention"]
     pa_rows = [r for r in kn_all if r.get("kind") == "paged_attention"]

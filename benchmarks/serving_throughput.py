@@ -22,6 +22,13 @@ the ``report.py --check`` benchmark-regression gate compare the
 engine-relative throughput ratios, which transfer across machines.
 CSV rows (benchmarks.run idiom):
 ``serving_<arch>_<engine>,us_per_token,tok_s=..;dispatches_per_tick=..``.
+
+A second pass re-runs each engine under ``repro.obs`` span tracing and
+writes ``experiments/serving/BENCH_latency.json``: TTFT and per-token
+latency percentiles (p50/p90/p99) per engine, plus the deterministic
+sample counts and ordering contracts (p99 ≥ p50, every request measured)
+that the ``--check`` gate compares — the wall-clock percentiles
+themselves do not transfer across machines and are report-only.
 """
 
 from __future__ import annotations
@@ -37,11 +44,15 @@ from benchmarks.common import emit
 from repro.configs.base import get_config
 from repro.launch.roofline import serving_prefill_flops, serving_tick_flops
 from repro.models.api import get_model
+from repro.obs import Observability
 from repro.serving.engine import (PagedServingEngine, PerSlotServingEngine,
                                   Request, ServingEngine)
 
 ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "experiments",
                         "serving", "BENCH_serving.json")
+LATENCY_ARTIFACT = os.path.join(os.path.dirname(__file__), "..",
+                                "experiments", "serving",
+                                "BENCH_latency.json")
 
 PAGE_SIZE = 4          # reduced-config scale (max_len 64)
 PREFILL_BUCKET = 8
@@ -174,6 +185,80 @@ def bench_arch(arch: str, *, max_slots: int = 4, max_len: int = 64,
     return row
 
 
+def _lat_fields(summary: dict) -> dict:
+    """The report-only percentile triple from a percentile summary."""
+    return {"count": summary["count"],
+            "mean_s": round(summary["mean"], 6),
+            "p50_s": round(summary["p50"], 6),
+            "p90_s": round(summary["p90"], 6),
+            "p99_s": round(summary["p99"], 6)}
+
+
+def bench_latency_arch(arch: str, *, max_slots: int = 4, max_len: int = 64,
+                       n_requests: int = 8, max_new: int = 8) -> dict:
+    """Serve the throughput workload once per engine under span tracing
+    (repro.obs) and reduce the trace to TTFT / per-token percentiles.
+
+    The jit caches are already warm from the same-shape throughput pass
+    when ``run()`` drives this; standalone callers pay first-run
+    compiles inside the percentiles (the contracts still hold)."""
+    cfg = get_config(arch).reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    row = {"arch": arch, "max_slots": max_slots, "n_requests": n_requests,
+           "max_new": max_new, "engines": {}}
+    for name, cls in ENGINES.items():
+        # warmup: identical workload so the traced pass measures serving,
+        # not compilation (same reasoning as bench_arch)
+        _serve(cls, model, params, cfg, max_slots=max_slots, max_len=max_len,
+               n_requests=n_requests, max_new=max_new, repeats=1)
+        obs = Observability()
+        eng = cls(model, params, cfg, max_slots=max_slots, max_len=max_len,
+                  obs=obs)
+        for r in _requests(cfg, n_requests, max_new):
+            eng.submit(r)
+        eng.run(max_ticks=10_000)
+        s = obs.summary()
+        ttft, per_tok = s["ttft_s"], s["per_token_s"]
+        row["engines"][name] = {
+            "requests": s["counts"]["retired"],
+            "decode_tokens": s["counts"]["decode_tokens"],
+            "ticks": s["counts"]["ticks"],
+            "ttft_s": _lat_fields(ttft),
+            "per_token_s": _lat_fields(per_tok),
+            "queue_wait_s": _lat_fields(s["queue_wait_s"]),
+            # machine-portable contracts for the --check gate: every
+            # request got a TTFT sample, every decode token a latency
+            # sample, and the percentile ordering holds
+            "all_requests_measured": ttft["count"] == n_requests,
+            "all_tokens_measured": per_tok["count"]
+            == s["counts"]["decode_tokens"],
+            "percentiles_ordered": (ttft["p99"] >= ttft["p50"] > 0
+                                    and per_tok["p99"] >= per_tok["p50"] > 0),
+        }
+    return row
+
+
+def run_latency(archs=("stablelm_3b",), *, max_slots: int = 4,
+                n_requests: int = 8, max_new: int = 8,
+                out_path: str = LATENCY_ARTIFACT) -> list[dict]:
+    rows = []
+    for arch in archs:
+        row = bench_latency_arch(arch, max_slots=max_slots,
+                                 n_requests=n_requests, max_new=max_new)
+        rows.append(row)
+        for name, e in row["engines"].items():
+            emit(f"latency_{arch}_{name}", 1e6 * e["ttft_s"]["p50_s"],
+                 f"ttft_p99_us={1e6 * e['ttft_s']['p99_s']:.1f};"
+                 f"per_token_p50_us={1e6 * e['per_token_s']['p50_s']:.1f};"
+                 f"per_token_p99_us={1e6 * e['per_token_s']['p99_s']:.1f};"
+                 f"measured={e['all_requests_measured']}")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
 def run(archs=("stablelm_3b",), *, max_slots: int = 4, n_requests: int = 8,
         max_new: int = 8, out_path: str = ARTIFACT) -> list[dict]:
     rows = []
@@ -215,13 +300,24 @@ def main(argv=None):
                          "_quick sibling artifact (never truncates the "
                          "committed baseline)")
     ap.add_argument("--out", default="")
+    ap.add_argument("--no-latency", action="store_true",
+                    help="skip the traced latency pass / BENCH_latency "
+                         "artifact")
+    ap.add_argument("--latency-out", default="",
+                    help="destination for the BENCH_latency artifact (CI "
+                         "emits outside the checkout so the committed "
+                         "baseline stays the comparison target)")
     args = ap.parse_args(argv)
-    out = args.out or (ARTIFACT.replace(".json", "_quick.json") if args.quick
-                       else ARTIFACT)
+    suffix = "_quick.json" if args.quick else ".json"
+    out = args.out or ARTIFACT.replace(".json", suffix)
     kw = (dict(n_requests=6, max_new=6) if args.quick
           else dict(n_requests=args.requests, max_new=args.max_new))
-    run(tuple(args.arch or ("stablelm_3b",)), max_slots=args.max_slots,
-        out_path=out, **kw)
+    archs = tuple(args.arch or ("stablelm_3b",))
+    run(archs, max_slots=args.max_slots, out_path=out, **kw)
+    if not args.no_latency:
+        lat_out = args.latency_out or LATENCY_ARTIFACT.replace(".json",
+                                                               suffix)
+        run_latency(archs, max_slots=args.max_slots, out_path=lat_out, **kw)
 
 
 if __name__ == "__main__":

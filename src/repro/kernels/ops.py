@@ -37,6 +37,7 @@ from repro.kernels.quantize_kernel import quantize_per_token as _q_kernel
 __all__ = [
     "use_pallas",
     "resolve_backend",
+    "dispatch_resolutions",
     "quantize_per_token",
     "quant_matmul",
     "fused_hadamard_quant",
@@ -57,6 +58,25 @@ def use_pallas(backend: Backend = "auto") -> bool:
     return jax.default_backend() == "tpu"
 
 
+# Dispatch-layer instrumentation (repro.obs / docs/observability.md):
+# every resolve_backend() outcome is tallied here, so the obs layer can
+# report how often each executing backend was CHOSEN process-wide.
+# Resolution happens at trace time — once per compiled program, plus
+# once per engine tick for the engines' per-dispatch attribution — so
+# these are resolution counts, not kernel-launch counts (the engines'
+# "dispatch.*" registry counters carry the per-launch attribution).
+_resolve_counts: dict[str, int] = {}
+
+
+def dispatch_resolutions(reset: bool = False) -> dict[str, int]:
+    """Snapshot {mode: times resolve_backend returned it}; ``reset``
+    zeroes the tally (tests isolate themselves with it)."""
+    out = dict(_resolve_counts)
+    if reset:
+        _resolve_counts.clear()
+    return out
+
+
 def resolve_backend(use_kernels: Literal["auto", "never", "interpret"]
                     = "auto") -> KernelMode:
     """Map a ``QuantPolicy.use_kernels`` setting to the executing backend.
@@ -65,12 +85,15 @@ def resolve_backend(use_kernels: Literal["auto", "never", "interpret"]
     the table and monkeypatch :func:`use_pallas` to emulate TPU hosts.
     """
     if use_kernels == "interpret":
-        return "interpret"
-    if use_kernels == "never":
-        return "xla"
-    if use_kernels != "auto":
+        mode: KernelMode = "interpret"
+    elif use_kernels == "never":
+        mode = "xla"
+    elif use_kernels == "auto":
+        mode = "pallas" if use_pallas("auto") else "xla"
+    else:
         raise ValueError(f"unknown use_kernels setting: {use_kernels!r}")
-    return "pallas" if use_pallas("auto") else "xla"
+    _resolve_counts[mode] = _resolve_counts.get(mode, 0) + 1
+    return mode
 
 
 def fused_qlinear(x, qw: QuantizedWeight, *, act_bits: int = 4,

@@ -21,7 +21,9 @@ from repro.launch.hlo_analysis import HloMetrics
 
 __all__ = ["HW", "RooflineReport", "roofline", "model_params", "model_flops",
            "serving_decode_cell", "serving_tick_flops",
-           "serving_prefill_cell", "serving_prefill_flops"]
+           "serving_prefill_cell", "serving_prefill_flops",
+           "serving_kv_token_elems", "serving_tick_hbm_bytes",
+           "serving_prefill_hbm_bytes"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -144,6 +146,67 @@ def serving_prefill_flops(cfg: ModelConfig, n_admit: int,
     """Useful model FLOPs of one batched admission dispatch
     (2·N_active·n_admit·padded_len)."""
     return model_flops(cfg, serving_prefill_cell(n_admit, padded_len))
+
+
+def serving_kv_token_elems(cfg: ModelConfig) -> int:
+    """KV-cache elements appended per token, summed over every
+    attention invocation (MLA stores the latent + rope stripe; hybrids
+    hit the shared block every ``attn_every`` SSM layers; pure SSM has
+    O(1) state — nothing per token)."""
+    if cfg.family in ("dense", "audio", "vlm"):
+        return cfg.num_layers * 2 * cfg.num_kv_heads * cfg.head_dim
+    if cfg.family == "moe":
+        per = ((cfg.kv_lora_rank + cfg.qk_rope_dim) if cfg.kv_lora_rank
+               else 2 * cfg.num_kv_heads * cfg.head_dim)
+        return cfg.num_layers * per
+    if cfg.family == "hybrid" and cfg.attn_every:
+        invocations = -(-cfg.num_layers // cfg.attn_every)
+        return invocations * 2 * cfg.num_kv_heads * cfg.head_dim
+    return 0
+
+
+def serving_tick_hbm_bytes(cfg: ModelConfig, n_slots: int,
+                           mean_context: float, *,
+                           weight_bits: int | None = None,
+                           kv_bits: int | None = None,
+                           backend: str = "xla") -> float:
+    """Modeled HBM bytes of ONE batched decode tick — the quantity the
+    obs layer attributes per kernel backend (docs/observability.md).
+
+    Decode is dominated by two streams, and only those are modeled:
+    the weight stream (active params × storage width — int4 packs two
+    codes per byte) and the KV-cache traffic (read the per-slot context
+    prefix, append one token).  The ``backend`` factor mirrors
+    ``benchmarks.kernel_bench.paged_hbm_bytes``: the XLA ``paged_view``
+    gather fallback materializes a contiguous bf16 view of the context
+    KV (one write + one read) that the in-VMEM Pallas kernel never
+    pays, so "xla" adds two bf16 passes over the read set.  Analytic —
+    a per-backend attribution model, not a measurement.
+    """
+    _, active = model_params(cfg)
+    w_bytes = active * (weight_bits / 8 if weight_bits else 2)
+    elems = serving_kv_token_elems(cfg)
+    kv_elem_bytes = 1 if kv_bits == 8 else 2
+    read = n_slots * mean_context * elems * kv_elem_bytes
+    write = n_slots * elems * kv_elem_bytes
+    gather_extra = (2 * n_slots * mean_context * elems * 2
+                    if backend == "xla" and elems else 0.0)
+    return float(w_bytes + read + write + gather_extra)
+
+
+def serving_prefill_hbm_bytes(cfg: ModelConfig, n_rows: int,
+                              padded_len: int, *,
+                              weight_bits: int | None = None,
+                              kv_bits: int | None = None) -> float:
+    """Modeled HBM bytes of ONE batched admission dispatch: the weight
+    stream plus the KV written for every (row, position) — prefill
+    attends from VMEM/registers over its own tile, so no context read
+    term.  Same analytic caveat as :func:`serving_tick_hbm_bytes`."""
+    _, active = model_params(cfg)
+    w_bytes = active * (weight_bits / 8 if weight_bits else 2)
+    kv_elem_bytes = 1 if kv_bits == 8 else 2
+    write = n_rows * padded_len * serving_kv_token_elems(cfg) * kv_elem_bytes
+    return float(w_bytes + write)
 
 
 @dataclasses.dataclass

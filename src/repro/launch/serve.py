@@ -6,6 +6,13 @@ Usage:
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b \
         --reduced --requests 8 --max-new 16 --weight-bits 4
 
+Observability (docs/observability.md): ``--trace-out t.jsonl`` streams
+per-request span events (replayable offline with ``python -m repro.obs
+t.jsonl``), ``--metrics-out m.json`` dumps the metrics-registry
+snapshot, ``--quant-health N`` probes live activation health every N
+ticks against the calibrated ranges, and ``--json`` swaps the human
+report for one structured JSON document on stdout.
+
 On a real cluster this runs under the production mesh with the sharding
 rules from launch/sharding.py; the CPU path uses a (1,1) mesh with the
 same code.
@@ -14,10 +21,10 @@ same code.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import Checkpointer
@@ -28,6 +35,7 @@ from repro.data import calibration_stream
 from repro.launch import compat
 from repro.launch.mesh import make_test_mesh
 from repro.models.api import get_model
+from repro.obs import Observability, QuantHealthSampler, format_summary
 from repro.serving.engine import (PagedServingEngine, PerSlotServingEngine,
                                   Request, ServingEngine)
 from repro.serving.fold import collect_calibration, fold_quantize
@@ -75,7 +83,24 @@ def main(argv=None):
                          "zero-overcommit sizing, max_slots × pages/slot; "
                          "smaller pools overcommit and rely on admission "
                          "backpressure)")
+    ap.add_argument("--trace-out", default="",
+                    help="stream per-request span events (submit/admit/"
+                         "prefill/first-token/tick/preempt/retire) to this "
+                         "JSONL file; summarize offline with "
+                         "`python -m repro.obs <file>`")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the metrics-registry snapshot (counters/"
+                         "gauges/histograms) to this JSON file")
+    ap.add_argument("--quant-health", type=int, default=0, metavar="N",
+                    help="every N engine ticks, probe one live request's "
+                         "activations against the calibrated ranges "
+                         "(absmax / clip fraction / Eq.-2 difficulty); "
+                         "0 = off (no extra dispatches)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit ONE structured JSON report on stdout "
+                         "instead of the human tables")
     args = ap.parse_args(argv)
+    say = (lambda *a, **k: None) if args.json else print
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -91,7 +116,7 @@ def main(argv=None):
             restored = ck.restore_latest({"p": params})
             if restored:
                 params = restored[0]["p"]
-                print(f"restored checkpoint step {restored[1]}")
+                say(f"restored checkpoint step {restored[1]}")
 
         policy = None
         if not args.no_quant:
@@ -127,7 +152,7 @@ def main(argv=None):
                              f"{planned_stack} — searched on a different "
                              "config?")
                 if plan.arch and plan.arch != cfg.name:
-                    print(f"WARNING: plan searched on {plan.arch!r}, "
+                    say(f"WARNING: plan searched on {plan.arch!r}, "
                           f"serving {cfg.name!r}")
                 plan_desc = f"LayerwisePlan from {args.plan_json}"
             else:
@@ -135,21 +160,29 @@ def main(argv=None):
                 plan_desc = "SmoothRotation on down_proj — paper §V"
             params = fold_quantize(params, cfg, policy=policy, plan=plan,
                                    stats=stats)
-            print(f"calibrated + folded W{args.weight_bits}A{args.act_bits} "
+            say(f"calibrated + folded W{args.weight_bits}A{args.act_bits} "
                   f"in {time.time() - t0:.1f}s (plan: {plan_desc})")
 
+        qh = None
+        if args.quant_health:
+            qh = QuantHealthSampler(
+                model, params, cfg, policy=policy, every=args.quant_health,
+                reference=stats if not args.no_quant else None,
+                max_context=args.max_len)
+        obs = Observability(trace_path=args.trace_out or None,
+                            quant_health=qh)
         if args.engine == "paged":
             eng = PagedServingEngine(
                 model, params, cfg, max_slots=args.max_slots,
                 max_len=args.max_len, policy=policy,
                 kv_bits=args.kv_bits or None, page_size=args.page_size,
-                n_pages=args.pool_pages or None)
+                n_pages=args.pool_pages or None, obs=obs)
         else:
             engine_cls = (ServingEngine if args.engine == "batched"
                           else PerSlotServingEngine)
             eng = engine_cls(model, params, cfg, max_slots=args.max_slots,
                              max_len=args.max_len, policy=policy,
-                             kv_bits=args.kv_bits or None)
+                             kv_bits=args.kv_bits or None, obs=obs)
         rng = np.random.default_rng(0)
         for i in range(args.requests):
             eng.submit(Request(
@@ -161,6 +194,30 @@ def main(argv=None):
         done = eng.run(max_ticks=10_000)
         dt = time.time() - t0
         st = eng.run_stats
+        obs.close()
+        if args.metrics_out:
+            with open(args.metrics_out, "w") as fh:
+                json.dump(obs.registry.snapshot(), fh, indent=1,
+                          sort_keys=True)
+        from repro.kernels import ops
+
+        summary = obs.summary()
+        if args.json:
+            # one machine-readable document: run stats (minus the bulky
+            # per-request map), the obs latency summary, and the
+            # process-wide dispatch-resolution tally
+            report = {
+                "arch": cfg.name, "engine": args.engine,
+                "requests_served": len(done),
+                "wall_s": dt,
+                "decode_tok_per_s": st["decode_tokens"] / max(dt, 1e-9),
+                "run_stats": {k: v for k, v in st.items()
+                              if k != "per_request"},
+                "obs": summary,
+                "dispatch_resolutions": ops.dispatch_resolutions(),
+            }
+            print(json.dumps(report, indent=1, sort_keys=True))
+            return
         print(f"served {len(done)}/{args.requests} requests, "
               f"{st['decode_tokens']} tokens in {dt:.2f}s "
               f"({st['decode_tokens'] / max(dt, 1e-9):.1f} tok/s, "
@@ -176,6 +233,13 @@ def main(argv=None):
                   f"paged attention: {st['paged_attention_backend']}")
         for r in done[:3]:
             print(f"  req {r.uid}: {r.out_tokens[:12]}...")
+        print()
+        print(format_summary(summary))
+        print(f"backend resolutions (kernels.ops): "
+              f"{ops.dispatch_resolutions()}")
+        if args.trace_out:
+            print(f"trace: {args.trace_out} "
+                  f"(summarize: python -m repro.obs {args.trace_out})")
 
 
 if __name__ == "__main__":

@@ -251,9 +251,10 @@ def forward(params, cfg: ModelConfig, tokens=None, *, embeds=None, policy=None):
     return cm.dense(x, params["lm_head"], policy)
 
 
-def forward_with_taps(params, cfg: ModelConfig, tokens=None, *, embeds=None):
+def forward_with_taps(params, cfg: ModelConfig, tokens=None, *, embeds=None,
+                      policy=None):
     h = cm.embed(params["embed"], tokens) if embeds is None else embeds
-    x, taps = _backbone(params, cfg, h, collect_taps=True)
+    x, taps = _backbone(params, cfg, h, policy=policy, collect_taps=True)
     return cm.dense(x, params["lm_head"]), taps
 
 

@@ -19,7 +19,6 @@ technique gets an extra rotation site on this latent — DESIGN.md §5).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -538,14 +537,15 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, policy=None):
     return cm.dense(x, params["lm_head"], policy), cache
 
 
-def forward_with_taps(params, cfg: ModelConfig, tokens=None, *, embeds=None):
+def forward_with_taps(params, cfg: ModelConfig, tokens=None, *, embeds=None,
+                      policy=None):
     h = cm.embed(params["embed"], tokens) if embeds is None else embeds
     attn = _attn(cfg)
     # taps only from moe layers (the paper's sites); dense layers skipped
     def block(lp, x, _):
         taps = {}
-        x, _kv = attn(lp["attn"], x, cfg, policy=None, taps=taps)
-        x, aux = moe_ffn(lp["moe"], x, cfg, taps=taps)
+        x, _kv = attn(lp["attn"], x, cfg, policy=policy, taps=taps)
+        x, aux = moe_ffn(lp["moe"], x, cfg, policy, taps=taps)
         return x, taps
     if cfg.first_dense_layers:
         def dense_fn(lp, x, _):

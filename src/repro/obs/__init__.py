@@ -1,0 +1,65 @@
+"""Serving-stack observability: metrics registry, request tracing,
+quant-health telemetry (docs/observability.md).
+
+Zero-dependency by design (stdlib + numpy only on the sampling path):
+the serving engines always carry a :class:`MetricsRegistry` for their
+``run_stats`` counters, and attach the rest — span tracing, latency
+histograms, quant-health sampling — only when the caller hands them an
+:class:`Observability`:
+
+    from repro import obs
+    o = obs.Observability(trace_path="trace.jsonl")
+    eng = PagedServingEngine(model, params, cfg, obs=o)
+    eng.run()
+    print(obs.format_summary(o.summary()))
+
+``python -m repro.obs trace.jsonl`` rebuilds the same tables offline
+from the JSONL event log.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    ManualClock,
+    MetricsRegistry,
+    exact_percentile,
+    percentile_summary,
+)
+from repro.obs.quant_health import QuantHealthSampler
+from repro.obs.summary import format_summary, summarize
+from repro.obs.trace import Tracer, load_trace
+
+__all__ = ["Counter", "Gauge", "Histogram", "ManualClock", "MetricsRegistry",
+           "Observability", "QuantHealthSampler", "Tracer", "load_trace",
+           "summarize", "format_summary", "exact_percentile",
+           "percentile_summary"]
+
+
+class Observability:
+    """The bundle an engine consumes: registry + tracer + clock
+    (+ optional quant-health sampler).  One injectable clock drives
+    every span/timestamp, so tests swap in :class:`ManualClock` and the
+    whole pipeline — engine spans, histograms, trace summaries — is
+    deterministic."""
+
+    def __init__(self, *, registry: MetricsRegistry | None = None,
+                 tracer: Tracer | None = None,
+                 quant_health: QuantHealthSampler | None = None,
+                 clock=None, trace_path: str | None = None):
+        self.clock = clock if clock is not None else time.perf_counter
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.tracer = (tracer if tracer is not None
+                       else Tracer(trace_path, clock=self.clock))
+        self.quant_health = quant_health
+
+    def summary(self) -> dict:
+        """Aggregate the collected trace into the latency summary."""
+        return summarize(self.tracer.events)
+
+    def close(self) -> None:
+        self.tracer.close()

@@ -1,0 +1,36 @@
+"""Offline trace summarizer: the serve-time tables from a JSONL log.
+
+    PYTHONPATH=src python -m repro.obs trace.jsonl [--json]
+
+Reads a trace written by ``launch/serve.py --trace-out`` (or any
+:class:`repro.obs.Tracer`) and prints the same latency/count/
+quant-health tables the live run printed — byte-identical numbers, so
+traces can be shipped and analyzed away from the serving host
+(tests/test_obs.py pins the round trip).  ``--json`` emits the raw
+summary dict for tooling instead of the markdown tables.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.obs.summary import format_summary, summarize
+from repro.obs.trace import load_trace
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="python -m repro.obs")
+    ap.add_argument("trace", help="trace JSONL (launch/serve.py --trace-out)")
+    ap.add_argument("--json", action="store_true",
+                    help="print the summary dict as JSON instead of tables")
+    args = ap.parse_args(argv)
+    s = summarize(load_trace(args.trace))
+    if args.json:
+        print(json.dumps(s, indent=1, sort_keys=True))
+    else:
+        print(format_summary(s))
+
+
+if __name__ == "__main__":
+    main()

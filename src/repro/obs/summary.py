@@ -1,0 +1,164 @@
+"""Trace-event aggregation: one summary dict + its human table.
+
+``summarize`` consumes the event list a :class:`repro.obs.Tracer`
+collected (or ``load_trace`` re-read from JSONL) and derives the
+latency distributions the ROADMAP's serving items report through:
+
+  * **TTFT** — ``first_token.ttft_s`` per request (submit → the token
+    sampled from the prefill logits);
+  * **per-token latency** — consecutive token-emission timestamp deltas
+    per request (the prefill token's timestamp seeds the chain, each
+    ``tick`` event timestamps every token it emitted), i.e. the
+    inter-token gap a streaming client would observe — admission stalls
+    and preemptions show up here, not just raw decode time;
+  * **queue wait** — ``admit.queue_wait_s`` (submit → slot assignment);
+  * **tick breakdown** — total tick span, host-side page-allocation
+    span (paged engine), and the decode dispatch+sample remainder;
+  * **prefill spans** and request/token/preemption counts;
+  * **quant-health** aggregates when sampling was enabled (worst
+    per-module clip fraction / absmax, mean Eq.-2 difficulty —
+    docs/observability.md ties these to the paper's metric).
+
+The same numbers print from ``python -m repro.obs trace.jsonl`` — the
+JSONL round trip is exact (tests/test_obs.py).
+"""
+
+from __future__ import annotations
+
+from repro.obs.metrics import percentile_summary
+
+__all__ = ["summarize", "format_summary"]
+
+_SPAN_ROWS = (
+    ("ttft_s", "TTFT"),
+    ("per_token_s", "per-token"),
+    ("queue_wait_s", "queue wait"),
+    ("prefill_s", "prefill span"),
+    ("tick_s", "tick"),
+    ("tick_alloc_s", "tick: page alloc"),
+    ("tick_decode_s", "tick: decode+sample"),
+)
+
+
+def summarize(events: list[dict]) -> dict:
+    """Aggregate a trace-event list into the latency/count summary."""
+    token_ts: dict[int, list[float]] = {}   # uid → emission timestamps
+    ttft, queue_wait, prefill_dur = [], [], []
+    tick_dur, alloc_dur, decode_dur = [], [], []
+    e2e = []
+    counts = {"submitted": 0, "admitted": 0, "retired": 0, "preemptions": 0,
+              "resumes": 0, "decode_tokens": 0, "prefill_tokens": 0,
+              "ticks": 0}
+    qh_events = []
+    for ev in events:
+        kind = ev["ev"]
+        if kind == "submit":
+            counts["submitted"] += 1
+        elif kind == "admit":
+            counts["admitted"] += 1
+            queue_wait.append(ev["queue_wait_s"])
+            counts["resumes"] += bool(ev.get("resumed"))
+        elif kind == "prefill":
+            prefill_dur.append(ev["dur_s"])
+            counts["prefill_tokens"] += ev["n_tokens"]
+        elif kind == "first_token":
+            ttft.append(ev["ttft_s"])
+            token_ts.setdefault(ev["uid"], []).append(ev["ts"])
+        elif kind == "tick":
+            counts["ticks"] += 1
+            tick_dur.append(ev["dur_s"])
+            if "alloc_dur_s" in ev:
+                alloc_dur.append(ev["alloc_dur_s"])
+                decode_dur.append(ev["dur_s"] - ev["alloc_dur_s"])
+            for uid in ev["uids"]:
+                counts["decode_tokens"] += 1
+                token_ts.setdefault(uid, []).append(ev["ts"])
+        elif kind == "preempt":
+            counts["preemptions"] += 1
+        elif kind == "retire":
+            counts["retired"] += 1
+            e2e.append(ev["e2e_s"])
+        elif kind == "quant_health":
+            qh_events.append(ev)
+    per_token = [b - a for ts in token_ts.values()
+                 for a, b in zip(ts, ts[1:])]
+    out = {
+        "counts": counts,
+        "ttft_s": percentile_summary(ttft),
+        "per_token_s": percentile_summary(per_token),
+        "queue_wait_s": percentile_summary(queue_wait),
+        "prefill_s": percentile_summary(prefill_dur),
+        "tick_s": percentile_summary(tick_dur),
+        "tick_alloc_s": percentile_summary(alloc_dur),
+        "tick_decode_s": percentile_summary(decode_dur),
+        "e2e_s": percentile_summary(e2e),
+    }
+    if qh_events:
+        out["quant_health"] = _quant_health_summary(qh_events)
+    return out
+
+
+def _quant_health_summary(qh_events: list[dict]) -> dict:
+    """Per-module worst-case view over every quant-health sample."""
+    mods: dict[str, dict] = {}
+    for ev in qh_events:
+        for m, rec in ev["modules"].items():
+            agg = mods.setdefault(m, {"samples": 0, "absmax_max": 0.0,
+                                      "clip_fraction_max": None,
+                                      "difficulty_sum": 0.0,
+                                      "difficulty_n": 0})
+            agg["samples"] += 1
+            agg["absmax_max"] = max(agg["absmax_max"], max(rec["absmax"]))
+            if rec.get("clip_fraction") is not None:
+                cf = max(rec["clip_fraction"])
+                agg["clip_fraction_max"] = (
+                    cf if agg["clip_fraction_max"] is None
+                    else max(agg["clip_fraction_max"], cf))
+            agg["difficulty_sum"] += sum(rec["difficulty"])
+            agg["difficulty_n"] += len(rec["difficulty"])
+    return {
+        m: {"samples": a["samples"], "absmax_max": a["absmax_max"],
+            "clip_fraction_max": a["clip_fraction_max"],
+            "difficulty_mean": (a["difficulty_sum"]
+                                / max(a["difficulty_n"], 1))}
+        for m, a in sorted(mods.items())
+    }
+
+
+def _fmt(v: float | None) -> str:
+    if v is None:
+        return "—"
+    return f"{v:.6f}" if isinstance(v, float) else str(v)
+
+
+def format_summary(s: dict) -> str:
+    """The summary dict as markdown tables (serve.py end-of-run report
+    and the ``repro.obs`` CLI print the same thing)."""
+    c = s["counts"]
+    lines = [
+        f"requests: {c['submitted']} submitted, {c['admitted']} admitted "
+        f"({c['resumes']} resumes), {c['retired']} retired, "
+        f"{c['preemptions']} preemptions",
+        f"tokens: {c['prefill_tokens']} prefill, {c['decode_tokens']} decode "
+        f"over {c['ticks']} ticks",
+        "",
+        "| span | count | mean s | p50 s | p90 s | p99 s | max s |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for key, label in _SPAN_ROWS:
+        p = s.get(key) or {}
+        if not p.get("count"):
+            continue
+        lines.append(f"| {label} | {p['count']} | {_fmt(p['mean'])} | "
+                     f"{_fmt(p['p50'])} | {_fmt(p['p90'])} | "
+                     f"{_fmt(p['p99'])} | {_fmt(p['max'])} |")
+    qh = s.get("quant_health")
+    if qh:
+        lines += ["", "| module | samples | absmax max | clip frac max | "
+                      "difficulty mean |", "|---|---|---|---|---|"]
+        for m, a in qh.items():
+            cf = ("—" if a["clip_fraction_max"] is None
+                  else f"{a['clip_fraction_max']:.4f}")
+            lines.append(f"| {m} | {a['samples']} | {a['absmax_max']:.4g} | "
+                         f"{cf} | {a['difficulty_mean']:.4g} |")
+    return "\n".join(lines)

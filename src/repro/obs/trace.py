@@ -1,0 +1,77 @@
+"""Per-request span tracing for the serving engines (JSONL event log).
+
+Every event is one flat JSON object with two required keys — ``ev`` (the
+event kind) and ``ts`` (seconds, from the injected clock) — plus
+kind-specific fields.  The engines emit (docs/observability.md has the
+full schema table):
+
+    submit       uid, prompt_len
+    admit        uid, slot, queue_wait_s, resumed
+    prefill      n_requests, n_tokens, dur_s [, rows, padded_len]
+    first_token  uid, ttft_s
+    tick         tick, n_active, uids, dur_s [, alloc_dur_s, n_stalled]
+    preempt      uid, n_generated
+    retire       uid, prompt_len, decode_tokens, e2e_s
+    quant_health tick, uid, context_len, modules
+
+The tracer buffers events in memory (``events``) and, when constructed
+with a path, streams each event as one JSON line — ``repro.obs
+summarize`` rebuilds the exact in-process summary from that file
+(tests/test_obs.py pins the round trip).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+__all__ = ["Tracer", "load_trace"]
+
+EVENT_KINDS = ("submit", "admit", "prefill", "first_token", "tick",
+               "preempt", "retire", "quant_health")
+
+
+class Tracer:
+    """Append-only event sink with an injectable clock."""
+
+    def __init__(self, path: str | None = None, clock=time.perf_counter):
+        self.events: list[dict] = []
+        self.clock = clock
+        self._fh = open(path, "w") if path else None
+
+    def emit(self, ev: str, *, ts: float | None = None, **fields) -> dict:
+        if ev not in EVENT_KINDS:
+            raise ValueError(f"unknown trace event kind: {ev!r}")
+        rec = {"ev": ev, "ts": self.clock() if ts is None else float(ts),
+               **fields}
+        self.events.append(rec)
+        if self._fh is not None:
+            self._fh.write(json.dumps(rec) + "\n")
+        return rec
+
+    def flush(self) -> None:
+        if self._fh is not None:
+            self._fh.flush()
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self) -> "Tracer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def load_trace(path: str) -> list[dict]:
+    """Read a trace JSONL back into the event-dict list ``summarize``
+    consumes (blank lines tolerated)."""
+    events = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                events.append(json.loads(line))
+    return events

@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from collections import deque
 
 import jax
@@ -47,7 +48,12 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.qlinear import QuantPolicy
+from repro.launch.roofline import (
+    serving_prefill_hbm_bytes,
+    serving_tick_hbm_bytes,
+)
 from repro.models import common as cm
+from repro.obs import MetricsRegistry, Observability
 
 __all__ = ["Request", "ServingEngine", "PagedServingEngine",
            "PerSlotServingEngine"]
@@ -106,28 +112,65 @@ _write_slot = jax.jit(cm.write_slot, static_argnums=2, donate_argnums=0)
 
 
 class _EngineBase:
-    """Shared scheduling state + request bookkeeping."""
+    """Shared scheduling state + request bookkeeping.
+
+    Counters live in a :class:`repro.obs.MetricsRegistry` — the engine
+    always carries one (``run_stats``/``stats()`` read from it), and an
+    ``obs=Observability(...)`` argument swaps in a shared registry plus
+    the OPT-IN layers: span tracing (submit/admit/prefill/first-token/
+    tick/preempt/retire events + TTFT/queue-wait/tick histograms),
+    per-backend dispatch + modeled-HBM-byte attribution, and
+    quant-health sampling.  With ``obs=None`` the engine takes no
+    timestamps, emits no events, and issues exactly the same jitted
+    dispatches (tests/test_obs.py pins zero overhead and token
+    identity)."""
 
     def __init__(self, model, params, cfg: ModelConfig, *, max_slots: int = 4,
                  max_len: int = 256, policy: QuantPolicy | None = None,
-                 eos_id: int = -1, kv_bits: int | None = None):
+                 eos_id: int = -1, kv_bits: int | None = None,
+                 obs: Observability | None = None):
         self.model, self.params, self.cfg = model, params, cfg
         self.policy = policy
         self.max_slots, self.max_len = max_slots, max_len
         self.eos_id = eos_id
         self.kv_bits = kv_bits
+        self.obs = obs
+        self._metrics = obs.registry if obs is not None else MetricsRegistry()
+        self._tracer = obs.tracer if obs is not None else None
+        self._qhealth = obs.quant_health if obs is not None else None
+        self._clock = obs.clock if obs is not None else time.perf_counter
+        self._c_decode = self._metrics.counter("engine.decode_dispatches")
+        self._c_prefill = self._metrics.counter("engine.prefill_dispatches")
+        self._c_ticks = self._metrics.counter("engine.ticks")
+        self._c_prefill_tokens = self._metrics.counter("engine.prefill_tokens")
+        self._submit_ts: dict[int, float] = {}    # uid → submit timestamp
+        self._seen_uids: set[int] = set()         # first-token bookkeeping
         self.queue: deque[Request] = deque()
         self.slots: list[Request | None] = [None] * max_slots
         self.retired: list[Request] = []
         self._prefill, self._decode = _jitted(model, cfg, policy)
         self._step = 0
-        self.decode_dispatches = 0       # jitted decode calls issued
-        self.prefill_dispatches = 0      # jitted prefill calls issued
-        self.ticks = 0                   # step() calls that decoded
-        self._prefill_tokens = 0         # prompt tokens prefilled (all reqs)
         self._per_request: dict[int, dict] = {}   # uid → token counts
         self.run_stats: dict = {}        # filled by run()
+        self._backend = self.kernel_backend     # resolved once: attribution
         self._init_caches()
+
+    # registry-backed views of the legacy counter attributes (run_stats
+    # keys and these names are unchanged for backward compatibility)
+    @property
+    def decode_dispatches(self) -> int:
+        """Jitted decode calls issued."""
+        return int(self._c_decode.value)
+
+    @property
+    def prefill_dispatches(self) -> int:
+        """Jitted prefill calls issued."""
+        return int(self._c_prefill.value)
+
+    @property
+    def ticks(self) -> int:
+        """step() calls that decoded."""
+        return int(self._c_ticks.value)
 
     def _init_caches(self):
         """Build this engine's cache storage (layout differs per engine)."""
@@ -147,6 +190,10 @@ class _EngineBase:
 
     def submit(self, req: Request):
         self.queue.append(req)
+        if self.obs is not None:
+            self._submit_ts[req.uid] = self._clock()
+            self._tracer.emit("submit", ts=self._submit_ts[req.uid],
+                              uid=req.uid, prompt_len=len(req.prompt))
 
     def _finished(self, req: Request, tok: int) -> bool:
         return tok == self.eos_id or len(req.out_tokens) >= req.max_new_tokens
@@ -157,7 +204,7 @@ class _EngineBase:
         raise NotImplementedError
 
     def _count_prefill(self, req: Request, n_tokens: int):
-        self._prefill_tokens += n_tokens
+        self._c_prefill_tokens.inc(n_tokens)
         rec = self._per_request.setdefault(req.uid,
                                            {"prefill": 0, "decode": 0})
         rec["prefill"] += n_tokens
@@ -168,6 +215,82 @@ class _EngineBase:
         rec = self._per_request.setdefault(req.uid,
                                            {"prefill": 0, "decode": 0})
         rec["decode"] = len(req.out_tokens)
+        self._metrics.counter("engine.requests_retired").inc()
+        if self.obs is not None:
+            now = self._clock()
+            e2e = now - self._submit_ts.get(req.uid, now)
+            self._tracer.emit("retire", ts=now, uid=req.uid,
+                              prompt_len=len(req.prompt),
+                              decode_tokens=len(req.out_tokens), e2e_s=e2e)
+
+    # -- obs hooks (all no-ops costing one attribute check when disabled) --
+
+    def _obs_admitted(self, req: Request, slot: int) -> float:
+        """Emit admit (+ queue-wait) for one request; returns 'now'."""
+        now = self._clock()
+        wait = now - self._submit_ts.get(req.uid, now)
+        self._metrics.histogram("engine.queue_wait_s").observe(wait)
+        self._tracer.emit("admit", ts=now, uid=req.uid, slot=slot,
+                          queue_wait_s=wait,
+                          resumed=req.uid in self._seen_uids)
+        return now
+
+    def _obs_first_token(self, req: Request):
+        """TTFT for a freshly admitted request (the first token is
+        sampled from the prefill logits; a preemption-resumed request
+        already streamed its first token — no second event)."""
+        if req.uid in self._seen_uids:
+            return
+        self._seen_uids.add(req.uid)
+        now = self._clock()
+        ttft = now - self._submit_ts.get(req.uid, now)
+        self._metrics.histogram("engine.ttft_s").observe(ttft)
+        self._tracer.emit("first_token", ts=now, uid=req.uid, ttft_s=ttft)
+
+    def _attr_decode_dispatch(self, n_rows: int):
+        """Per-backend decode-dispatch count + modeled HBM bytes
+        (launch/roofline.py) — the byte attribution only when obs is on
+        (it walks the active slots for the mean context length)."""
+        self._metrics.counter(f"dispatch.decode.{self._backend}").inc()
+        if self.obs is None:
+            return
+        ctx = [len(r.prompt) + len(r.out_tokens)
+               for r in self.slots if r is not None]
+        mean_ctx = sum(ctx) / max(len(ctx), 1)
+        pa = getattr(self, "paged_attention_backend", "pallas")
+        nbytes = serving_tick_hbm_bytes(
+            self.cfg, n_rows, mean_ctx,
+            weight_bits=self.policy.weight_bits if self.policy else None,
+            kv_bits=self.kv_bits,
+            backend="xla" if pa == "xla" else "pallas")
+        self._metrics.counter(
+            f"hbm_modeled_bytes.decode.{self._backend}").inc(nbytes)
+
+    def _attr_prefill_dispatch(self, n_rows: int, padded_len: int):
+        self._metrics.counter(f"dispatch.prefill.{self._backend}").inc()
+        if self.obs is None:
+            return
+        nbytes = serving_prefill_hbm_bytes(
+            self.cfg, n_rows, padded_len,
+            weight_bits=self.policy.weight_bits if self.policy else None,
+            kv_bits=self.kv_bits)
+        self._metrics.counter(
+            f"hbm_modeled_bytes.prefill.{self._backend}").inc(nbytes)
+
+    def _maybe_quant_health(self):
+        """Opt-in every-N-ticks activation health probe over the active
+        request with the deepest context (repro.obs.quant_health)."""
+        qh = self._qhealth
+        if qh is None or not qh.due(self.ticks):
+            return
+        reqs = [r for r in self.slots if r is not None]
+        if not reqs:
+            return
+        req = max(reqs, key=lambda r: len(r.prompt) + len(r.out_tokens))
+        ctx = np.concatenate([np.asarray(req.prompt, np.int64),
+                              np.asarray(req.out_tokens, np.int64)])
+        rec = qh.sample(self.ticks, req.uid, ctx)
+        self._tracer.emit("quant_health", **rec)
 
     def _pool_stats(self) -> dict:
         """Page-pool occupancy; non-paged engines have no pool."""
@@ -175,7 +298,9 @@ class _EngineBase:
 
     def stats(self) -> dict:
         """Aggregate + per-request token counts (so callers stop
-        re-deriving them from the retired Request lists by hand)."""
+        re-deriving them from the retired Request lists by hand).
+        Counter-backed fields read from the obs metrics registry — ONE
+        implementation for all three engines, keys unchanged."""
         # a truncated run (max_ticks exhausted) leaves requests in slots
         # or requeued: fold their in-flight decode counts in so the
         # aggregate never under-reports work actually done
@@ -184,7 +309,7 @@ class _EngineBase:
                 self._per_request[req.uid]["decode"] = len(req.out_tokens)
         return {
             "requests": len(self._per_request),
-            "prefill_tokens": self._prefill_tokens,
+            "prefill_tokens": int(self._c_prefill_tokens.value),
             "decode_tokens": sum(r["decode"]
                                  for r in self._per_request.values()),
             "per_request": {uid: dict(rec)
@@ -193,6 +318,11 @@ class _EngineBase:
             "decode_dispatches": self.decode_dispatches,
             "prefill_dispatches": self.prefill_dispatches,
             "dispatches_per_tick": self.decode_dispatches / max(self.ticks, 1),
+            "kernel_backend": self._backend,
+            "dispatch_backends": self._metrics.counters_with_prefix(
+                "dispatch."),
+            "hbm_modeled_bytes": self._metrics.counters_with_prefix(
+                "hbm_modeled_bytes."),
             **self._pool_stats(),
         }
 
@@ -200,15 +330,28 @@ class _EngineBase:
         for i in range(self.max_slots):
             while self.slots[i] is None and self.queue:
                 req = self.queue.popleft()
+                if self.obs is not None:
+                    t0 = self._obs_admitted(req, i)
                 slot_cache = self.model.make_cache(self.cfg, 1, self.max_len,
                                                    bits=self.kv_bits)
                 toks = jnp.asarray(req.prompt[None, :], jnp.int32)
                 logits, slot_cache = self._prefill(self.params, toks,
                                                    slot_cache)
-                self.prefill_dispatches += 1
+                self._c_prefill.inc()
+                self._attr_prefill_dispatch(1, len(req.prompt))
                 self._count_prefill(req, len(req.prompt))
                 nxt = int(_sample_one(logits[:, -1], req.temperature,
                                       self._step, req.uid)[0])
+                if self.obs is not None:
+                    # nxt materialized ⇒ the prefill dispatch completed
+                    now = self._clock()
+                    self._metrics.histogram("engine.prefill_s").observe(
+                        now - t0)
+                    self._tracer.emit("prefill", ts=now, n_requests=1,
+                                      n_tokens=len(req.prompt), rows=1,
+                                      padded_len=len(req.prompt),
+                                      dur_s=now - t0)
+                    self._obs_first_token(req)
                 req.out_tokens.append(nxt)
                 # the prefill-sampled token can already finish the request
                 # (EOS or max_new_tokens=1): retire without occupying the
@@ -289,11 +432,21 @@ class ServingEngine(_EngineBase):
         # inactive slots ride along masked: their rows decode garbage that
         # is never sampled into a request, and admission overwrites their
         # slot cache wholesale
+        t0 = self._clock() if self.obs is not None else 0.0
         logits, self.cache = self._decode(self.params, jnp.asarray(last),
                                           self.cache)
-        self.decode_dispatches += 1
-        self.ticks += 1
+        self._c_decode.inc()
+        self._c_ticks.inc()
+        self._attr_decode_dispatch(self.max_slots)
         toks = np.asarray(self._sample_batch(logits[:, -1], temps, uids))
+        if self.obs is not None:
+            # toks materialized ⇒ the decode dispatch completed
+            now = self._clock()
+            self._metrics.histogram("engine.tick_s").observe(now - t0)
+            self._tracer.emit("tick", ts=now, tick=self.ticks,
+                              n_active=len(active),
+                              uids=[self.slots[i].uid for i in active],
+                              dur_s=now - t0)
         for i in active:
             req = self.slots[i]
             nxt = int(toks[i])
@@ -301,6 +454,7 @@ class ServingEngine(_EngineBase):
             if self._finished(req, nxt):
                 self._retire(req)
                 self.slots[i] = None
+        self._maybe_quant_health()
         return len(active)
 
 
@@ -352,13 +506,13 @@ class PagedServingEngine(ServingEngine):
                  max_len: int = 256, policy: QuantPolicy | None = None,
                  eos_id: int = -1, kv_bits: int | None = None,
                  page_size: int = 64, n_pages: int | None = None,
-                 prefill_bucket: int = 16):
+                 prefill_bucket: int = 16, obs: Observability | None = None):
         self.page_size = page_size
         self.prefill_bucket = prefill_bucket
         self._n_pages_arg = n_pages
         super().__init__(model, params, cfg, max_slots=max_slots,
                          max_len=max_len, policy=policy, eos_id=eos_id,
-                         kv_bits=kv_bits)
+                         kv_bits=kv_bits, obs=obs)
         self._prefill_paged = _jitted_paged_prefill(model, cfg, policy)
         self._admit_seq = 0
         self._admitted_at = [0] * max_slots
@@ -497,14 +651,28 @@ class PagedServingEngine(ServingEngine):
             toks[r, :len(p)] = p
             lens[r] = len(p)
             rows[r] = slot
+        if self.obs is not None:
+            t0 = self._clock()
+            for slot, req in batch:
+                self._obs_admitted(req, slot)
         logits, self.cache = self._prefill_paged(
             self.params, jnp.asarray(toks), jnp.asarray(lens),
             self._host_state_cache(), jnp.asarray(rows))
-        self.prefill_dispatches += 1
+        self._c_prefill.inc()
+        self._attr_prefill_dispatch(n_pad, s_pad)
+        if self.obs is not None:
+            logits.block_until_ready()
+            now = self._clock()
+            self._metrics.histogram("engine.prefill_s").observe(now - t0)
+            self._tracer.emit("prefill", ts=now, n_requests=len(batch),
+                              n_tokens=int(lens.sum()), rows=n_pad,
+                              padded_len=s_pad, dur_s=now - t0)
         for r, (slot, req) in enumerate(batch):
             self._count_prefill(req, int(lens[r]))
             nxt = int(_sample_one(logits[r], req.temperature, self._step,
                                   req.uid)[0])
+            if self.obs is not None:
+                self._obs_first_token(req)
             req.out_tokens.append(nxt)
             if self._finished(req, nxt):
                 self._retire(req)
@@ -529,6 +697,10 @@ class PagedServingEngine(ServingEngine):
         request behind it forever."""
         i = max(active, key=lambda j: self._admitted_at[j])
         req = self.slots[i]
+        self._metrics.counter("engine.preemptions").inc()
+        if self.obs is not None:
+            self._tracer.emit("preempt", ts=self._clock(), uid=req.uid,
+                              slot=i, n_generated=len(req.out_tokens))
         req.prompt = np.concatenate([np.asarray(req.prompt, np.int64),
                                      np.asarray(req.out_tokens, np.int64)])
         self._release_slot(i)
@@ -546,6 +718,7 @@ class PagedServingEngine(ServingEngine):
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
             return 0
+        t0 = self._clock() if self.obs is not None else 0.0
         # on-demand growth: a slot whose next write starts a new page
         # allocates it now; allocation failure stalls the slot this tick
         # (its write would have no destination and is dropped anyway)
@@ -570,11 +743,15 @@ class PagedServingEngine(ServingEngine):
             last[i, 0] = req.out_tokens[-1]
             temps[i] = req.temperature
             uids[i] = req.uid
+        t_alloc = self._clock() if self.obs is not None else 0.0
         before = self._host_state_cache()
         logits, self.cache = self._decode(self.params, jnp.asarray(last),
                                           before)
-        self.decode_dispatches += 1
-        self.ticks += 1
+        self._c_decode.inc()
+        self._c_ticks.inc()
+        self._attr_decode_dispatch(self.max_slots)
+        self._metrics.counter(
+            f"dispatch.paged_attention.{self.paged_attention_backend}").inc()
         stalled = [i for i in active if i not in ready]
         if stalled and hasattr(self.cache, "ssm"):
             # paged-KV writes of stalled rows drop (no destination page),
@@ -586,6 +763,15 @@ class PagedServingEngine(ServingEngine):
                 ssm=self.cache.ssm.at[:, sl].set(before.ssm[:, sl]),
                 conv=self.cache.conv.at[:, sl].set(before.conv[:, sl]))
         toks = np.asarray(self._sample_batch(logits[:, -1], temps, uids))
+        if self.obs is not None:
+            # toks materialized ⇒ the decode dispatch completed
+            now = self._clock()
+            self._metrics.histogram("engine.tick_s").observe(now - t0)
+            self._tracer.emit("tick", ts=now, tick=self.ticks,
+                              n_active=len(ready),
+                              uids=[self.slots[i].uid for i in ready],
+                              n_stalled=len(stalled), dur_s=now - t0,
+                              alloc_dur_s=t_alloc - t0)
         for i in ready:
             req = self.slots[i]
             self._len[i] += 1
@@ -594,6 +780,7 @@ class PagedServingEngine(ServingEngine):
             if self._finished(req, nxt):
                 self._retire(req)
                 self._release_slot(i)
+        self._maybe_quant_health()
         return len(ready)
 
 
@@ -615,14 +802,18 @@ class PerSlotServingEngine(_EngineBase):
         self._admit()
         self._step += 1
         active = 0
+        t0 = self._clock() if self.obs is not None else 0.0
+        uids = []
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
             active += 1
+            uids.append(req.uid)
             tok = jnp.asarray([[req.out_tokens[-1]]], jnp.int32)
             logits, self.caches[i] = self._decode(self.params, tok,
                                                   self.caches[i])
-            self.decode_dispatches += 1
+            self._c_decode.inc()
+            self._attr_decode_dispatch(1)
             nxt = int(_sample_one(logits[:, -1], req.temperature, self._step,
                                   req.uid)[0])
             req.out_tokens.append(nxt)
@@ -630,5 +821,11 @@ class PerSlotServingEngine(_EngineBase):
                 self._retire(req)
                 self.slots[i] = None
         if active:
-            self.ticks += 1
+            self._c_ticks.inc()
+            if self.obs is not None:
+                now = self._clock()
+                self._metrics.histogram("engine.tick_s").observe(now - t0)
+                self._tracer.emit("tick", ts=now, tick=self.ticks,
+                                  n_active=active, uids=uids, dur_s=now - t0)
+            self._maybe_quant_health()
         return active

@@ -1,0 +1,343 @@
+"""Observability layer (repro.obs + docs/observability.md).
+
+Pins the contracts the serving stack leans on:
+
+  * metrics primitives under a fake clock — counters, gauges,
+    fixed-bucket histograms with EXACT nearest-rank percentiles;
+  * trace JSONL round trip: emit → load_trace → summarize reproduces
+    the in-memory summary byte-for-byte;
+  * deterministic span math: hand-built event streams give exact TTFT /
+    per-token / queue-wait numbers (no wall clock involved);
+  * tracing is FREE to turn on and off: with obs attached the engines'
+    greedy tokens are IDENTICAL to an untraced run (all three engines,
+    paged included), and with obs off they emit zero events and issue
+    exactly the same jitted dispatches;
+  * the three engines report ONE run_stats schema (satellite of the
+    obs PR: stats() lives once in _EngineBase);
+  * kernels.ops.dispatch_resolutions tallies every resolve_backend
+    outcome;
+  * quant-health sampling reports per-layer absmax / clip-fraction /
+    Eq.-2 difficulty keyed like the autoplan telemetry.
+"""
+
+import functools
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.kernels import ops
+from repro.models.api import get_model
+from repro.obs import (ManualClock, MetricsRegistry, Observability,
+                       QuantHealthSampler, Tracer, exact_percentile,
+                       format_summary, load_trace, percentile_summary,
+                       summarize)
+from repro.serving.engine import (PagedServingEngine, PerSlotServingEngine,
+                                  Request, ServingEngine)
+
+KEY = jax.random.PRNGKey(0)
+
+ENGINES = {
+    "per_slot": PerSlotServingEngine,
+    "batched": ServingEngine,
+    "paged": functools.partial(PagedServingEngine, page_size=4,
+                               prefill_bucket=8),
+}
+
+
+@functools.lru_cache(maxsize=None)
+def _setup():
+    cfg = get_config("stablelm_3b").reduced()
+    model = get_model(cfg)
+    return cfg, model, model.init(KEY, cfg)
+
+
+def _requests(cfg, n=4, max_new=5):
+    return [Request(uid=i,
+                    prompt=np.random.default_rng(i).integers(
+                        0, cfg.vocab_size, size=(3 + i,)),
+                    max_new_tokens=max_new) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# metrics primitives
+# ---------------------------------------------------------------------------
+
+
+def test_manual_clock():
+    clk = ManualClock()
+    t0 = clk()
+    clk.advance(1.5)
+    assert clk() - t0 == pytest.approx(1.5)
+
+
+def test_counter_and_gauge():
+    reg = MetricsRegistry()
+    c = reg.counter("c")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == pytest.approx(3.5)
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    # create-on-first-use returns the SAME instrument
+    assert reg.counter("c") is c
+    g = reg.gauge("g")
+    g.set(7)
+    g.set(-2)
+    assert g.value == -2
+
+
+def test_exact_percentiles_nearest_rank():
+    xs = sorted(float(v) for v in range(1, 101))    # 1..100
+    assert exact_percentile(xs, 50) == 50.0
+    assert exact_percentile(xs, 90) == 90.0
+    assert exact_percentile(xs, 99) == 99.0
+    assert exact_percentile(xs, 100) == 100.0
+    s = percentile_summary(list(reversed(xs)))
+    assert s["count"] == 100 and s["p50"] == 50.0 and s["p99"] == 99.0
+    assert s["min"] == 1.0 and s["max"] == 100.0
+    assert percentile_summary([])["count"] == 0
+
+
+def test_histogram_buckets_and_summary():
+    reg = MetricsRegistry()
+    h = reg.histogram("h", buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.5, 0.5, 5.0, 50.0):
+        h.observe(v)
+    # per-bucket ≤-upper-bound counts; the trailing slot catches overflow
+    assert h.bucket_counts == [1, 2, 1, 1]
+    s = h.summary()
+    assert s["count"] == 5 and s["max"] == 50.0
+    assert s["p50"] == 0.5
+    assert s["overflow"] == 1
+    assert reg.histogram("h") is h
+
+
+def test_registry_prefix_and_snapshot():
+    reg = MetricsRegistry()
+    reg.counter("dispatch.decode.xla").inc(3)
+    reg.counter("dispatch.prefill.xla").inc()
+    reg.counter("other").inc()
+    assert reg.counters_with_prefix("dispatch.") == {
+        "decode.xla": 3.0, "prefill.xla": 1.0}
+    snap = reg.snapshot()
+    assert snap["counters"]["other"] == 1.0
+    assert set(snap) == {"counters", "gauges", "histograms"}
+
+
+# ---------------------------------------------------------------------------
+# tracing + summary math
+# ---------------------------------------------------------------------------
+
+
+def _hand_events():
+    """Two requests with hand-picked timestamps (no clock involved)."""
+    return [
+        {"ev": "submit", "ts": 0.0, "uid": 1, "prompt_len": 4},
+        {"ev": "submit", "ts": 1.0, "uid": 2, "prompt_len": 6},
+        {"ev": "admit", "ts": 2.0, "uid": 1, "slot": 0, "queue_wait_s": 2.0,
+         "resumed": False},
+        {"ev": "prefill", "ts": 3.0, "n_requests": 1, "n_tokens": 4,
+         "rows": 1, "padded_len": 4, "dur_s": 1.0},
+        {"ev": "first_token", "ts": 3.0, "uid": 1, "ttft_s": 3.0},
+        {"ev": "admit", "ts": 4.0, "uid": 2, "slot": 1, "queue_wait_s": 3.0,
+         "resumed": True},
+        {"ev": "first_token", "ts": 5.0, "uid": 2, "ttft_s": 4.0},
+        {"ev": "tick", "ts": 7.0, "tick": 1, "n_active": 2, "uids": [1, 2],
+         "dur_s": 2.0, "alloc_dur_s": 0.5},
+        {"ev": "tick", "ts": 10.0, "tick": 2, "n_active": 1, "uids": [1],
+         "dur_s": 3.0, "alloc_dur_s": 1.0},
+        {"ev": "preempt", "ts": 10.5, "uid": 2, "slot": 1, "n_generated": 2},
+        {"ev": "retire", "ts": 11.0, "uid": 1, "prompt_len": 4,
+         "decode_tokens": 3, "e2e_s": 11.0},
+    ]
+
+
+def test_summarize_exact_numbers():
+    s = summarize(_hand_events())
+    assert s["counts"] == {"submitted": 2, "admitted": 2, "retired": 1,
+                           "preemptions": 1, "resumes": 1, "decode_tokens": 3,
+                           "prefill_tokens": 4, "ticks": 2}
+    assert s["ttft_s"]["count"] == 2
+    assert s["ttft_s"]["p50"] == 3.0 and s["ttft_s"]["max"] == 4.0
+    # uid 1 token ts: 3, 7, 10 → deltas 4, 3;  uid 2: 5, 7 → delta 2
+    assert s["per_token_s"]["count"] == 3
+    assert sorted((s["per_token_s"]["min"], s["per_token_s"]["p50"],
+                   s["per_token_s"]["max"])) == [2.0, 3.0, 4.0]
+    assert s["queue_wait_s"]["mean"] == pytest.approx(2.5)
+    assert s["tick_alloc_s"]["count"] == 2
+    assert s["tick_decode_s"]["max"] == pytest.approx(2.0)  # 3.0 - 1.0
+    assert s["e2e_s"]["max"] == 11.0
+    # the human table renders without error and carries the counts line
+    assert "2 submitted" in format_summary(s)
+
+
+def test_tracer_jsonl_roundtrip(tmp_path):
+    path = tmp_path / "trace.jsonl"
+    with Tracer(str(path)) as tr:
+        for ev in _hand_events():
+            kind = ev.pop("ev")
+            tr.emit(kind, **ev)
+        mem = summarize(tr.events)
+    loaded = load_trace(str(path))
+    assert summarize(loaded) == mem
+    # every line is standalone JSON with the schema fields
+    with open(path) as fh:
+        for line in fh:
+            rec = json.loads(line)
+            assert "ev" in rec and "ts" in rec
+
+
+def test_tracer_rejects_unknown_event():
+    tr = Tracer()
+    with pytest.raises(ValueError):
+        tr.emit("not_an_event", ts=0.0)
+
+
+# ---------------------------------------------------------------------------
+# engines under observability
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(ENGINES))
+def test_tracing_token_identical_and_zero_overhead(name):
+    """obs on/off must not change a single sampled token, and obs OFF
+    must cost nothing: zero trace events, identical dispatch counts."""
+    cfg, model, params = _setup()
+    cls = ENGINES[name]
+
+    def serve(obs):
+        eng = cls(model, params, cfg, max_slots=2, max_len=64, obs=obs)
+        for r in _requests(cfg):
+            eng.submit(r)
+        done = eng.run(max_ticks=500)
+        return eng, {r.uid: list(r.out_tokens) for r in done}
+
+    eng_off, toks_off = serve(None)
+    obs = Observability(clock=ManualClock())
+    eng_on, toks_on = serve(obs)
+    assert toks_on == toks_off
+    # same jitted work either way
+    assert eng_on.decode_dispatches == eng_off.decode_dispatches
+    assert eng_on.prefill_dispatches == eng_off.prefill_dispatches
+    assert eng_on.ticks == eng_off.ticks
+    # obs off: nothing was traced anywhere
+    assert eng_off.obs is None and eng_off._tracer is None
+    # obs on: the trace tells the full request story
+    s = obs.summary()
+    assert s["counts"]["submitted"] == s["counts"]["retired"] == 4
+    assert s["counts"]["decode_tokens"] == sum(
+        len(t) for t in toks_on.values()) - 4   # first tokens from prefill
+    assert s["ttft_s"]["count"] == 4
+    assert s["per_token_s"]["count"] == s["counts"]["decode_tokens"]
+
+
+def test_run_stats_schema_identical_across_engines():
+    """ONE stats() implementation: every engine reports the same keys
+    (the paged engine adds only its page-pool block on top)."""
+    cfg, model, params = _setup()
+    schemas = {}
+    for name, cls in ENGINES.items():
+        eng = cls(model, params, cfg, max_slots=2, max_len=64)
+        for r in _requests(cfg, n=2, max_new=3):
+            eng.submit(r)
+        eng.run(max_ticks=200)
+        schemas[name] = set(eng.run_stats)
+    assert schemas["per_slot"] == schemas["batched"]
+    pool_keys = {"page_size", "n_pages", "table_width", "pages_in_use",
+                 "peak_pages_in_use", "page_occupancy",
+                 "page_occupancy_peak", "paged_attention_backend"}
+    assert schemas["paged"] == schemas["batched"] | pool_keys
+    base_keys = {"requests", "prefill_tokens", "decode_tokens",
+                 "per_request", "ticks", "decode_dispatches",
+                 "prefill_dispatches", "dispatches_per_tick",
+                 "kernel_backend", "dispatch_backends", "hbm_modeled_bytes"}
+    assert base_keys <= schemas["batched"]
+
+
+def test_engine_dispatch_attribution():
+    """Per-backend dispatch counters match the legacy dispatch counts,
+    and the obs run also models HBM bytes per dispatch kind."""
+    cfg, model, params = _setup()
+    obs = Observability(clock=ManualClock())
+    eng = ENGINES["paged"](model, params, cfg, max_slots=2, max_len=64,
+                           obs=obs)
+    for r in _requests(cfg, n=3, max_new=4):
+        eng.submit(r)
+    eng.run(max_ticks=200)
+    st = eng.run_stats
+    assert st["dispatch_backends"]["decode.bf16"] == st["decode_dispatches"]
+    assert st["dispatch_backends"]["prefill.bf16"] == st["prefill_dispatches"]
+    # the paged engine also attributes its decode-attention executor
+    pa = st["paged_attention_backend"]
+    assert st["dispatch_backends"][f"paged_attention.{pa}"] == st["ticks"]
+    assert st["hbm_modeled_bytes"]["decode.bf16"] > 0
+    assert st["hbm_modeled_bytes"]["prefill.bf16"] > 0
+
+
+def test_dispatch_resolutions_tally():
+    ops.dispatch_resolutions(reset=True)
+    ops.resolve_backend("never")
+    ops.resolve_backend("never")
+    ops.resolve_backend("interpret")
+    ops.resolve_backend("auto")
+    counts = ops.dispatch_resolutions(reset=True)
+    assert counts["xla"] >= 2 and counts["interpret"] == 1
+    assert sum(counts.values()) == 4
+    assert ops.dispatch_resolutions() == {}
+
+
+# ---------------------------------------------------------------------------
+# quant-health sampling
+# ---------------------------------------------------------------------------
+
+
+def test_quant_health_sampler_smoke():
+    cfg, model, params = _setup()
+    qh = QuantHealthSampler(model, params, cfg, every=2, bucket=8)
+    assert qh.due(0) and qh.due(2) and not qh.due(3)
+    ctx = np.arange(5) % cfg.vocab_size
+    rec = qh.sample(2, 7, ctx)
+    assert rec["uid"] == 7 and rec["context_len"] == 5
+    assert rec["modules"], "no linear-input taps collected"
+    for m, sig in rec["modules"].items():
+        assert len(sig["absmax"]) == len(sig["difficulty"]) >= 1
+        assert all(v >= 0 for v in sig["absmax"])
+        assert sig["clip_fraction"] is None      # no calibration reference
+    assert qh.samples == [rec]
+
+
+def test_quant_health_clip_fraction_with_reference():
+    from repro.serving.fold import collect_calibration
+
+    cfg, model, params = _setup()
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    stats = collect_calibration(model, params, cfg, [{"tokens": toks}])
+    qh = QuantHealthSampler(model, params, cfg, every=1, reference=stats,
+                            bucket=8)
+    rec = qh.sample(1, 0, np.arange(6) % cfg.vocab_size)
+    clips = [c for sig in rec["modules"].values()
+             for c in (sig["clip_fraction"] or [])]
+    assert clips, "calibration reference given but no clip fractions"
+    assert all(0.0 <= c <= 1.0 for c in clips)
+
+
+def test_quant_health_in_engine_and_summary():
+    """--quant-health wiring end to end: due() gates on ticks, events
+    land in the trace, the summary aggregates per module."""
+    cfg, model, params = _setup()
+    qh = QuantHealthSampler(model, params, cfg, every=2, bucket=8)
+    obs = Observability(clock=ManualClock(), quant_health=qh)
+    eng = ENGINES["batched"](model, params, cfg, max_slots=2, max_len=64,
+                             obs=obs)
+    for r in _requests(cfg, n=2, max_new=4):
+        eng.submit(r)
+    eng.run(max_ticks=200)
+    assert qh.samples, "sampler never fired"
+    s = obs.summary()
+    assert "quant_health" in s
+    for m, agg in s["quant_health"].items():
+        assert agg["samples"] >= 1 and agg["absmax_max"] >= 0
+    assert "| module |" in format_summary(s)
