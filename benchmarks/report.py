@@ -31,6 +31,7 @@ EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "experiments")
 SERVING_PATH = os.path.join(EXPERIMENTS, "serving", "BENCH_serving.json")
 LATENCY_PATH = os.path.join(EXPERIMENTS, "serving", "BENCH_latency.json")
 KERNELS_PATH = os.path.join(EXPERIMENTS, "kernels", "BENCH_kernels.json")
+LOAD_PATH = os.path.join(EXPERIMENTS, "serving", "BENCH_load.json")
 
 CHECK_THRESHOLD = 0.8      # fresh metric must be ≥ 80% of the baseline
 
@@ -165,6 +166,50 @@ def latency_table(rows: list[dict]) -> str:
                 f"{1e3 * e['per_token_s']['p50_s']:.2f} | "
                 f"{1e3 * e['per_token_s']['p99_s']:.2f} | "
                 f"{'yes' if measured else 'NO'} |")
+    return "\n".join(out)
+
+
+def load_load() -> list[dict]:
+    if not os.path.exists(LOAD_PATH):
+        return []
+    with open(LOAD_PATH) as f:
+        return json.load(f)
+
+
+def load_table(rows: list[dict]) -> str:
+    """HTTP front-end load scenarios + the chunked-prefill probe
+    (load_gen.py → BENCH_load.json).  Offered requests are classified
+    completed / shed (503 admission control) / deadline-expired; TTFT
+    and inter-token gaps are CLIENT-side (over loopback HTTP), goodput
+    counts completed requests' tokens only."""
+    out = ["| scenario | offered | rate req/s | completed | shed | "
+           "expired | goodput tok/s | TTFT p50 ms | p99 ms | "
+           "gap p50 ms | p99 ms | accounted |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    probe = None
+    for r in rows:
+        if r.get("kind") == "probe":
+            probe = r
+            continue
+        t, g = r["ttft_s"], r["client_gap_s"]
+        out.append(
+            f"| {r['scenario']} | {r['offered']} | {r['rate_req_s']:.0f} | "
+            f"{r['completed']} | {r['shed']} | {r['expired']} | "
+            f"{r['goodput_tok_s']:.1f} | "
+            f"{1e3 * (t['p50'] or 0):.1f} | {1e3 * (t['p99'] or 0):.1f} | "
+            f"{1e3 * (g['p50'] or 0):.1f} | {1e3 * (g['p99'] or 0):.1f} | "
+            f"{'yes' if r['accounted'] else 'NO'} |")
+    if probe is not None:
+        u = probe["victim_gap_unchunked_s"]["p99"]
+        c = probe["victim_gap_chunked_s"]["p99"]
+        out += ["",
+                f"Chunked-prefill probe (long prompt "
+                f"{probe['long_prompt']}, chunk {probe['prefill_chunk']}): "
+                f"victim p99 inter-token gap {1e3 * c:.1f} ms chunked vs "
+                f"{1e3 * u:.1f} ms one-shot — bounds p99: "
+                f"{'yes' if probe['chunked_prefill_bounds_p99'] else 'NO'}, "
+                f"tokens identical: "
+                f"{'yes' if probe['chunked_tokens_identical'] else 'NO'}."]
     return "\n".join(out)
 
 
@@ -304,12 +349,37 @@ def _latency_metrics(rows: list[dict]) -> dict[str, float]:
     return out
 
 
+def _load_metrics(rows: list[dict]) -> dict[str, float]:
+    """Machine-portable load-artifact metrics: client-side wall-clock
+    percentiles and goodput stay report-only; the gate compares the
+    per-scenario accounting contracts (every offered request classified,
+    traffic actually served) plus the chunked-prefill probe's contract
+    booleans and the trace replay-identity bit."""
+    out = {}
+    for r in rows:
+        if r.get("kind") == "probe":
+            out["probe:chunked_prefill_bounds_p99"] = float(
+                r["chunked_prefill_bounds_p99"])
+            out["probe:chunked_tokens_identical"] = float(
+                r["chunked_tokens_identical"])
+            continue
+        key = r["scenario"]
+        out[f"{key}:accounted"] = float(r["accounted"])
+        out[f"{key}:served_any"] = float(r["served_any"])
+        if "trace_replay_identical" in r:
+            out[f"{key}:trace_replay_identical"] = float(
+                r["trace_replay_identical"])
+    return out
+
+
 def _bench_metrics(path: str, rows: list[dict]) -> dict[str, float]:
     name = os.path.basename(path)
     if "kernels" in name:
         return _kernel_metrics(rows)
     if "latency" in name:      # before "serving": both live under serving/
         return _latency_metrics(rows)
+    if "load" in name:         # ditto: BENCH_load* lives under serving/
+        return _load_metrics(rows)
     if "serving" in name:
         return _serving_metrics(rows)
     raise SystemExit(f"--check: no metric extractor for {name}")
@@ -382,6 +452,12 @@ def main(argv=None):
         parts.append(f"\n### Serving latency — TTFT / per-token "
                      f"({len(lat_rows)} archs)\n")
         parts.append(latency_table(lat_rows))
+    ld_rows = load_load()
+    if ld_rows:
+        n_http = sum(r.get("kind") == "http" for r in ld_rows)
+        parts.append(f"\n### Serving load — HTTP front-end "
+                     f"({n_http} scenarios)\n")
+        parts.append(load_table(ld_rows))
     kn_all = load_kernels()
     kn_rows = [r for r in kn_all if r.get("kind") != "paged_attention"]
     pa_rows = [r for r in kn_all if r.get("kind") == "paged_attention"]

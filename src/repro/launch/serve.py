@@ -13,6 +13,12 @@ snapshot, ``--quant-health N`` probes live activation health every N
 ticks against the calibrated ranges, and ``--json`` swaps the human
 report for one structured JSON document on stdout.
 
+``--serve-http`` routes the same workload through the async streaming
+front-end (repro.serving.frontend) over loopback — per-request
+deadlines (``--deadline-s``), admission control (``--shed-queue-depth``
+/ ``--shed-score``) and chunked prefill (``--prefill-chunk``) — and
+prints the same reports from the same trace schema (docs/serving.md).
+
 On a real cluster this runs under the production mesh with the sharding
 rules from launch/sharding.py; the CPU path uses a (1,1) mesh with the
 same code.
@@ -78,6 +84,27 @@ def main(argv=None):
                          "slot baseline")
     ap.add_argument("--page-size", type=int, default=64,
                     help="paged engine: tokens per KV page")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="paged engine: interleave bounded prefill chunks "
+                         "of this many tokens with decode ticks so a long "
+                         "admit can't stall streaming tokens (0 = whole-"
+                         "prompt prefill; dense-transformer family only)")
+    ap.add_argument("--serve-http", action="store_true",
+                    help="serve the workload through the async HTTP "
+                         "front-end (repro.serving.frontend) over loopback "
+                         "instead of the offline run() loop — same engine, "
+                         "same trace schema, same report")
+    ap.add_argument("--http-port", type=int, default=0,
+                    help="--serve-http bind port (0 = ephemeral)")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="--serve-http per-request deadline in seconds "
+                         "(0 = none); expired requests cancel mid-stream")
+    ap.add_argument("--shed-queue-depth", type=int, default=64,
+                    help="--serve-http admission control: hard queue-depth "
+                         "cap before requests shed with HTTP 503")
+    ap.add_argument("--shed-score", type=float, default=32.0,
+                    help="--serve-http admission control: shed when queue "
+                         "depth × pool occupancy crosses this bound")
     ap.add_argument("--pool-pages", type=int, default=0,
                     help="paged engine: shared pool size in pages (0 = "
                          "zero-overcommit sizing, max_slots × pages/slot; "
@@ -176,7 +203,8 @@ def main(argv=None):
                 model, params, cfg, max_slots=args.max_slots,
                 max_len=args.max_len, policy=policy,
                 kv_bits=args.kv_bits or None, page_size=args.page_size,
-                n_pages=args.pool_pages or None, obs=obs)
+                n_pages=args.pool_pages or None,
+                prefill_chunk=args.prefill_chunk or None, obs=obs)
         else:
             engine_cls = (ServingEngine if args.engine == "batched"
                           else PerSlotServingEngine)
@@ -184,16 +212,45 @@ def main(argv=None):
                              max_len=args.max_len, policy=policy,
                              kv_bits=args.kv_bits or None, obs=obs)
         rng = np.random.default_rng(0)
-        for i in range(args.requests):
-            eng.submit(Request(
-                uid=i,
-                prompt=rng.integers(0, cfg.vocab_size, size=(4 + i % 13,)),
-                max_new_tokens=args.max_new,
-                temperature=args.temperature))
-        t0 = time.time()
-        done = eng.run(max_ticks=10_000)
-        dt = time.time() - t0
-        st = eng.run_stats
+        prompts = [rng.integers(0, cfg.vocab_size, size=(4 + i % 13,))
+                   for i in range(args.requests)]
+        if args.serve_http:
+            import asyncio
+
+            from repro.serving.frontend import ServingFrontend, http_generate
+
+            async def _drive():
+                fe = ServingFrontend(
+                    eng, port=args.http_port,
+                    max_queue_depth=args.shed_queue_depth,
+                    shed_score=args.shed_score,
+                    default_deadline_s=args.deadline_s or None)
+                async with fe:
+                    say(f"HTTP front-end on {fe.host}:{fe.port}")
+                    return await asyncio.gather(*[
+                        http_generate(fe.host, fe.port, {
+                            "prompt": p.tolist(),
+                            "max_new_tokens": args.max_new,
+                            "temperature": args.temperature})
+                        for p in prompts])
+
+            t0 = time.time()
+            results = asyncio.run(_drive())
+            dt = time.time() - t0
+            done = [Request(uid=r["body"]["uid"], prompt=prompts[i],
+                            out_tokens=r["body"]["tokens"],
+                            done=True, cancelled=r["body"]["cancelled"])
+                    for i, r in enumerate(results) if r["status"] == 200]
+            eng.run_stats = st = eng.stats()
+        else:
+            for i, p in enumerate(prompts):
+                eng.submit(Request(uid=i, prompt=p,
+                                   max_new_tokens=args.max_new,
+                                   temperature=args.temperature))
+            t0 = time.time()
+            done = eng.run(max_ticks=10_000)
+            dt = time.time() - t0
+            st = eng.run_stats
         obs.close()
         if args.metrics_out:
             with open(args.metrics_out, "w") as fh:

@@ -21,6 +21,13 @@ from repro.configs.base import ModelConfig
 from repro.core.qlinear import QuantPolicy
 from repro.models import common as cm
 
+# prefill_paged accepts per-row ``start`` offsets (chunked prefill —
+# docs/serving.md).  The SSM/hybrid/MLA families don't: their prefill
+# state (chunked-scan SSD final states, per-invocation shared-attention
+# KV, latent pools) has no continuation path, so the paged engine falls
+# back to whole-prompt prefill for them.
+supports_chunked_prefill = True
+
 
 def init(key, cfg: ModelConfig, dtype=jnp.bfloat16):
     k_emb, k_layers, k_out = jax.random.split(key, 3)
@@ -132,7 +139,7 @@ def prefill(params, cfg: ModelConfig, tokens, cache: cm.KVCache,
 
 def prefill_paged(params, cfg: ModelConfig, tokens, lengths,
                   cache: cm.PagedKVCache, slots,
-                  policy: QuantPolicy | None = None):
+                  policy: QuantPolicy | None = None, start=None):
     """In-engine batched prefill straight into assigned pages.
 
     tokens: (n, s_pad) right-padded prompts sharing ONE dispatch via
@@ -141,16 +148,32 @@ def prefill_paged(params, cfg: ModelConfig, tokens, lengths,
     (n,) slot ids the rows were admitted into (== slot count for padding
     rows, whose writes all drop).  Returns per-row logits at the last
     VALID position, (n, 1, vocab), and the updated cache.
+
+    ``start`` (chunked prefill): (n,) per-row offsets of tokens already
+    written to each slot's pages.  Rows then write this chunk at
+    ``start + [0, s_pad)`` and attend over their pool prefix through the
+    ``paged_view`` gather (RoPE positions and the causal mask carry the
+    offset; keys past a row's written prefix are either causally masked
+    or exact zeros after masking, so chunked logits match the one-shot
+    dispatch).  ``lengths`` stays the CHUNK's valid token count.
     """
     h = cm.embed(params["embed"], tokens)
     ptab = cm.gather_page_rows(cache.page_table, slots)
-    x, new_cache = _backbone(params, cfg, h, cache=cache, length=0,
-                             policy=policy, page_table=ptab,
-                             valid_new=lengths, prefill_local=True)
+    if start is None:
+        x, new_cache = _backbone(params, cfg, h, cache=cache, length=0,
+                                 policy=policy, page_table=ptab,
+                                 valid_new=lengths, prefill_local=True)
+        new_len = jnp.asarray(lengths, jnp.int32)
+    else:
+        starts = jnp.asarray(start, jnp.int32)
+        x, new_cache = _backbone(params, cfg, h, cache=cache, length=starts,
+                                 policy=policy, page_table=ptab,
+                                 valid_new=lengths, prefill_local=False)
+        new_len = starts + jnp.asarray(lengths, jnp.int32)
     logits = cm.dense(cm.take_last_valid(x, lengths), params["lm_head"], policy)
     new_cache = dataclasses.replace(
         new_cache, length=cache.length.at[jnp.asarray(slots)].set(
-            jnp.asarray(lengths, jnp.int32), mode="drop"))
+            new_len, mode="drop"))
     return logits, new_cache
 
 

@@ -8,7 +8,8 @@ latency distributions the ROADMAP's serving items report through:
     sampled from the prefill logits);
   * **per-token latency** — consecutive token-emission timestamp deltas
     per request (the prefill token's timestamp seeds the chain, each
-    ``tick`` event timestamps every token it emitted), i.e. the
+    ``tick`` event timestamps every token it emitted, and ``token``
+    events stamp the one sampled from a RESUME prefill), i.e. the
     inter-token gap a streaming client would observe — admission stalls
     and preemptions show up here, not just raw decode time;
   * **queue wait** — ``admit.queue_wait_s`` (submit → slot assignment);
@@ -37,6 +38,7 @@ _SPAN_ROWS = (
     ("tick_s", "tick"),
     ("tick_alloc_s", "tick: page alloc"),
     ("tick_decode_s", "tick: decode+sample"),
+    ("e2e_s", "end-to-end"),
 )
 
 
@@ -48,7 +50,7 @@ def summarize(events: list[dict]) -> dict:
     e2e = []
     counts = {"submitted": 0, "admitted": 0, "retired": 0, "preemptions": 0,
               "resumes": 0, "decode_tokens": 0, "prefill_tokens": 0,
-              "ticks": 0}
+              "ticks": 0, "cancelled": 0, "deadline_expired": 0, "shed": 0}
     qh_events = []
     for ev in events:
         kind = ev["ev"]
@@ -64,6 +66,12 @@ def summarize(events: list[dict]) -> dict:
         elif kind == "first_token":
             ttft.append(ev["ttft_s"])
             token_ts.setdefault(ev["uid"], []).append(ev["ts"])
+        elif kind == "token":
+            # a streamed token emitted outside the tick path (resume
+            # prefill): a real token the client received — it counts and
+            # joins the per-token chain
+            counts["decode_tokens"] += 1
+            token_ts.setdefault(ev["uid"], []).append(ev["ts"])
         elif kind == "tick":
             counts["ticks"] += 1
             tick_dur.append(ev["dur_s"])
@@ -77,7 +85,12 @@ def summarize(events: list[dict]) -> dict:
             counts["preemptions"] += 1
         elif kind == "retire":
             counts["retired"] += 1
+            counts["cancelled"] += bool(ev.get("cancelled"))
             e2e.append(ev["e2e_s"])
+        elif kind == "deadline":
+            counts["deadline_expired"] += 1
+        elif kind == "shed":
+            counts["shed"] += 1
         elif kind == "quant_health":
             qh_events.append(ev)
     per_token = [b - a for ts in token_ts.values()
@@ -141,6 +154,14 @@ def format_summary(s: dict) -> str:
         f"{c['preemptions']} preemptions",
         f"tokens: {c['prefill_tokens']} prefill, {c['decode_tokens']} decode "
         f"over {c['ticks']} ticks",
+    ]
+    # front-end admission/deadline outcomes only when any occurred, so
+    # offline-run tables are unchanged
+    if c.get("shed") or c.get("deadline_expired") or c.get("cancelled"):
+        lines.append(f"front-end: {c.get('shed', 0)} shed, "
+                     f"{c.get('deadline_expired', 0)} deadline-expired, "
+                     f"{c.get('cancelled', 0)} cancelled")
+    lines += [
         "",
         "| span | count | mean s | p50 s | p90 s | p99 s | max s |",
         "|---|---|---|---|---|---|---|",

@@ -7,28 +7,38 @@ full schema table):
 
     submit       uid, prompt_len
     admit        uid, slot, queue_wait_s, resumed
-    prefill      n_requests, n_tokens, dur_s [, rows, padded_len]
+    prefill      n_requests, n_tokens, dur_s [, rows, padded_len, chunked]
     first_token  uid, ttft_s
+    token        uid [, resumed] — a streamed token emitted OUTSIDE the
+                 tick path (the token sampled from a RESUME prefill);
+                 joins the per-token timestamp chain like a tick entry
     tick         tick, n_active, uids, dur_s [, alloc_dur_s, n_stalled]
     preempt      uid, n_generated
-    retire       uid, prompt_len, decode_tokens, e2e_s
+    retire       uid, prompt_len, decode_tokens, e2e_s [, cancelled]
+    deadline     uid, deadline_s, n_streamed — a front-end per-request
+                 deadline expired; the request was cancelled mid-stream
+    shed         queue_depth, occupancy, score — admission control
+                 rejected a request before it reached the engine
     quant_health tick, uid, context_len, modules
 
 The tracer buffers events in memory (``events``) and, when constructed
 with a path, streams each event as one JSON line — ``repro.obs
 summarize`` rebuilds the exact in-process summary from that file
-(tests/test_obs.py pins the round trip).
+(tests/test_obs.py pins the round trip).  ``emit`` is thread-safe: the
+async front-end emits deadline/shed events from its event-loop thread
+while the engine thread emits everything else.
 """
 
 from __future__ import annotations
 
 import json
+import threading
 import time
 
 __all__ = ["Tracer", "load_trace"]
 
-EVENT_KINDS = ("submit", "admit", "prefill", "first_token", "tick",
-               "preempt", "retire", "quant_health")
+EVENT_KINDS = ("submit", "admit", "prefill", "first_token", "token", "tick",
+               "preempt", "retire", "deadline", "shed", "quant_health")
 
 
 class Tracer:
@@ -38,15 +48,17 @@ class Tracer:
         self.events: list[dict] = []
         self.clock = clock
         self._fh = open(path, "w") if path else None
+        self._lock = threading.Lock()
 
     def emit(self, ev: str, *, ts: float | None = None, **fields) -> dict:
         if ev not in EVENT_KINDS:
             raise ValueError(f"unknown trace event kind: {ev!r}")
         rec = {"ev": ev, "ts": self.clock() if ts is None else float(ts),
                **fields}
-        self.events.append(rec)
-        if self._fh is not None:
-            self._fh.write(json.dumps(rec) + "\n")
+        with self._lock:
+            self.events.append(rec)
+            if self._fh is not None:
+                self._fh.write(json.dumps(rec) + "\n")
         return rec
 
     def flush(self) -> None:

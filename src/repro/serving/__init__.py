@@ -1,1 +1,3 @@
-"""Serving stack: fold+quantize pipeline, KV caches, batched engine."""
+"""Serving stack: fold+quantize pipeline, KV caches, batched/paged
+engines (repro.serving.engine), async HTTP front-end
+(repro.serving.frontend)."""

@@ -67,6 +67,7 @@ class Request:
     temperature: float = 0.0             # 0 → greedy
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    cancelled: bool = False              # set by engine.cancel()
 
 
 @functools.lru_cache(maxsize=None)
@@ -86,6 +87,20 @@ def _jitted_paged_prefill(model, cfg: ModelConfig, policy: QuantPolicy | None):
         lambda p, t, ln, c, s: model.prefill_paged(p, cfg, t, ln, c, s,
                                                    policy=policy),
         donate_argnums=3)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_chunked_prefill(model, cfg: ModelConfig,
+                            policy: QuantPolicy | None):
+    """Chunked-prefill CONTINUATION dispatch: each row writes its next
+    prompt chunk into its pages at per-row ``start`` offsets and attends
+    over its already-written pool prefix (docs/serving.md).  Only model
+    families with ``supports_chunked_prefill`` expose the ``start``
+    parameter; the cache is donated exactly like the whole-prompt path."""
+    return jax.jit(
+        lambda p, t, ln, st, c, s: model.prefill_paged(
+            p, cfg, t, ln, c, s, policy=policy, start=st),
+        donate_argnums=4)
 
 
 def _sample_key(step: int, uid: int) -> jax.Array:
@@ -143,8 +158,13 @@ class _EngineBase:
         self._c_prefill = self._metrics.counter("engine.prefill_dispatches")
         self._c_ticks = self._metrics.counter("engine.ticks")
         self._c_prefill_tokens = self._metrics.counter("engine.prefill_tokens")
-        self._submit_ts: dict[int, float] = {}    # uid → submit timestamp
+        self._submit_ts: dict[int, float] = {}    # uid → ORIGINAL submit ts
+        self._wait_from: dict[int, float] = {}    # uid → submit OR requeue ts
         self._seen_uids: set[int] = set()         # first-token bookkeeping
+        # streaming hooks (the async front-end installs these; both run
+        # on the engine thread and must not block)
+        self.on_token = None                      # fn(req, tok) per token
+        self.on_retire = None                     # fn(req) at retirement
         self.queue: deque[Request] = deque()
         self.slots: list[Request | None] = [None] * max_slots
         self.retired: list[Request] = []
@@ -192,6 +212,7 @@ class _EngineBase:
         self.queue.append(req)
         if self.obs is not None:
             self._submit_ts[req.uid] = self._clock()
+            self._wait_from[req.uid] = self._submit_ts[req.uid]
             self._tracer.emit("submit", ts=self._submit_ts[req.uid],
                               uid=req.uid, prompt_len=len(req.prompt))
 
@@ -209,6 +230,14 @@ class _EngineBase:
                                            {"prefill": 0, "decode": 0})
         rec["prefill"] += n_tokens
 
+    def _append_token(self, req: Request, tok: int):
+        """Every sampled token flows through here so the streaming hook
+        sees it the instant it exists (the async front-end forwards it
+        to the client's open response)."""
+        req.out_tokens.append(tok)
+        if self.on_token is not None:
+            self.on_token(req, tok)
+
     def _retire(self, req: Request):
         req.done = True
         self.retired.append(req)
@@ -219,30 +248,83 @@ class _EngineBase:
         if self.obs is not None:
             now = self._clock()
             e2e = now - self._submit_ts.get(req.uid, now)
+            extra = {"cancelled": True} if req.cancelled else {}
             self._tracer.emit("retire", ts=now, uid=req.uid,
                               prompt_len=len(req.prompt),
-                              decode_tokens=len(req.out_tokens), e2e_s=e2e)
+                              decode_tokens=len(req.out_tokens), e2e_s=e2e,
+                              **extra)
+            # retired uids never re-admit: drop their timestamp entries
+            # so a long-lived front-end engine doesn't grow unboundedly
+            self._submit_ts.pop(req.uid, None)
+            self._wait_from.pop(req.uid, None)
+            self._seen_uids.discard(req.uid)
+        if self.on_retire is not None:
+            self.on_retire(req)
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel a queued or in-flight request (the front-end's
+        deadline path).  The request retires immediately with
+        ``cancelled=True`` — its already-streamed tokens stand — and an
+        occupied slot is evicted (the paged engine returns its pages to
+        the pool).  Returns False when the uid is not present (already
+        retired: the caller lost the race, which is fine)."""
+        for i, r in enumerate(self.queue):
+            if r.uid == uid:
+                del self.queue[i]
+                r.cancelled = True
+                self._retire(r)
+                return True
+        for i, r in enumerate(self.slots):
+            if r is not None and r.uid == uid:
+                r.cancelled = True
+                self._retire(r)
+                self._evict_slot(i)
+                return True
+        return False
+
+    def _evict_slot(self, slot: int):
+        """Clear a cancelled request's slot.  The dense engines just
+        vacate it (admission overwrites the slot cache wholesale)."""
+        self.slots[slot] = None
+
+    @property
+    def prompt_capacity(self) -> int:
+        """Longest prompt this engine can ever admit — the front-end
+        rejects over-capacity submissions with an HTTP 400 instead of
+        letting ``submit`` raise on the engine thread."""
+        return self.max_len
 
     # -- obs hooks (all no-ops costing one attribute check when disabled) --
 
     def _obs_admitted(self, req: Request, slot: int) -> float:
-        """Emit admit (+ queue-wait) for one request; returns 'now'."""
+        """Emit admit (+ queue-wait) for one request; returns 'now'.
+
+        Queue wait is measured from ``_wait_from`` — the ORIGINAL submit
+        for a fresh request, the REQUEUE time for a preemption-resumed
+        one (``_preempt_youngest`` stamps it).  Measuring resumes from
+        the original submit would double-count the first service period
+        and inflate ``engine.queue_wait_s``; end-to-end latency keeps
+        the original submit via ``_submit_ts``."""
         now = self._clock()
-        wait = now - self._submit_ts.get(req.uid, now)
+        wait = now - self._wait_from.get(req.uid, now)
         self._metrics.histogram("engine.queue_wait_s").observe(wait)
         self._tracer.emit("admit", ts=now, uid=req.uid, slot=slot,
                           queue_wait_s=wait,
                           resumed=req.uid in self._seen_uids)
         return now
 
-    def _obs_first_token(self, req: Request):
-        """TTFT for a freshly admitted request (the first token is
-        sampled from the prefill logits; a preemption-resumed request
-        already streamed its first token — no second event)."""
+    def _obs_prefill_token(self, req: Request):
+        """Timestamp the token sampled from prefill logits.  For a
+        freshly admitted request that is the FIRST token (TTFT); a
+        preemption-resumed request already streamed its first token, but
+        the resume-prefill token is still a real streamed token — it
+        gets a ``token`` event so the per-token chain and trace-derived
+        ``decode_tokens`` stay complete (summarize counts it)."""
+        now = self._clock()
         if req.uid in self._seen_uids:
+            self._tracer.emit("token", ts=now, uid=req.uid, resumed=True)
             return
         self._seen_uids.add(req.uid)
-        now = self._clock()
         ttft = now - self._submit_ts.get(req.uid, now)
         self._metrics.histogram("engine.ttft_s").observe(ttft)
         self._tracer.emit("first_token", ts=now, uid=req.uid, ttft_s=ttft)
@@ -351,8 +433,8 @@ class _EngineBase:
                                       n_tokens=len(req.prompt), rows=1,
                                       padded_len=len(req.prompt),
                                       dur_s=now - t0)
-                    self._obs_first_token(req)
-                req.out_tokens.append(nxt)
+                    self._obs_prefill_token(req)
+                self._append_token(req, nxt)
                 # the prefill-sampled token can already finish the request
                 # (EOS or max_new_tokens=1): retire without occupying the
                 # slot, and keep admitting into it
@@ -450,7 +532,7 @@ class ServingEngine(_EngineBase):
         for i in active:
             req = self.slots[i]
             nxt = int(toks[i])
-            req.out_tokens.append(nxt)
+            self._append_token(req, nxt)
             if self._finished(req, nxt):
                 self._retire(req)
                 self.slots[i] = None
@@ -506,7 +588,8 @@ class PagedServingEngine(ServingEngine):
                  max_len: int = 256, policy: QuantPolicy | None = None,
                  eos_id: int = -1, kv_bits: int | None = None,
                  page_size: int = 64, n_pages: int | None = None,
-                 prefill_bucket: int = 16, obs: Observability | None = None):
+                 prefill_bucket: int = 16, prefill_chunk: int | None = None,
+                 obs: Observability | None = None):
         self.page_size = page_size
         self.prefill_bucket = prefill_bucket
         self._n_pages_arg = n_pages
@@ -516,6 +599,19 @@ class PagedServingEngine(ServingEngine):
         self._prefill_paged = _jitted_paged_prefill(model, cfg, policy)
         self._admit_seq = 0
         self._admitted_at = [0] * max_slots
+        # chunked prefill: prompts longer than ``prefill_chunk`` stream
+        # through bounded (n, chunk) continuation dispatches interleaved
+        # with decode ticks, so a long admit can't stall a tick's worth
+        # of streaming tokens.  Requires per-row start offsets in the
+        # family's prefill_paged — families without the continuation
+        # path (SSM scan state, per-invocation hybrid KV, MLA latent
+        # pools) fall back to whole-prompt prefill, recorded in stats().
+        self.prefill_chunk = prefill_chunk
+        self._chunked = (bool(prefill_chunk) and self._pt is not None
+                         and getattr(model, "supports_chunked_prefill",
+                                     False))
+        if self._chunked:
+            self._prefill_cont = _jitted_chunked_prefill(model, cfg, policy)
 
     # -- memory layer -------------------------------------------------------
 
@@ -535,6 +631,7 @@ class PagedServingEngine(ServingEngine):
             self._free = list(range(self.n_pages - 1, -1, -1))  # pop() → 0 first
         self._len = np.zeros((self.max_slots,), np.int32)
         self.peak_pages_in_use = 0
+        self._prefilling: dict[int, int] = {}   # slot → prompt tokens done
 
     def _host_state_cache(self):
         """Cache pytree with the HOST-authoritative page table + per-slot
@@ -579,22 +676,44 @@ class PagedServingEngine(ServingEngine):
                 "peak_pages_in_use": self.peak_pages_in_use,
                 "page_occupancy": self.pages_in_use / n,
                 "page_occupancy_peak": self.peak_pages_in_use / n,
-                "paged_attention_backend": self.paged_attention_backend}
+                "paged_attention_backend": self.paged_attention_backend,
+                "prefill_chunk": self.prefill_chunk or 0,
+                "chunked_prefill": self._chunked}
 
     def _pages_needed(self, n_tokens: int) -> int:
         if self._pt is None:
             return 0
         return cm.pages_per_slot(n_tokens, self.page_size)
 
+    @staticmethod
+    def _resume_ctx(req: Request) -> np.ndarray:
+        """Full re-prefill context for a (possibly resumed) request: the
+        ORIGINAL prompt plus every token generated so far.  Computed at
+        admission time — ``_preempt_youngest`` used to fold
+        ``out_tokens`` into ``req.prompt`` in place, which corrupted the
+        caller-visible Request (retired requests came back with a prompt
+        they never submitted, and retire-event ``prompt_len`` inflated),
+        and a SECOND preemption of the same request re-folded the
+        already-folded tokens, duplicating context."""
+        if not req.out_tokens:
+            return np.asarray(req.prompt, np.int64)
+        return np.concatenate([np.asarray(req.prompt, np.int64),
+                               np.asarray(req.out_tokens, np.int64)])
+
+    @property
+    def prompt_capacity(self) -> int:
+        cap = self.max_len
+        if self._pt is not None:
+            cap = min(cap, self.table_width * self.page_size,
+                      self.n_pages * self.page_size)
+        return cap
+
     def submit(self, req: Request):
         """Reject prompts that could NEVER be admitted up front: the
         dense engines clamp out-of-range cache writes, but a paged slot
         cannot outgrow its page-table width or the whole pool — such a
         request would starve the FIFO queue forever."""
-        cap = self.max_len
-        if self._pt is not None:
-            cap = min(cap, self.table_width * self.page_size,
-                      self.n_pages * self.page_size)
+        cap = self.prompt_capacity
         if len(req.prompt) > cap:
             raise ValueError(
                 f"prompt of {len(req.prompt)} tokens exceeds the paged "
@@ -609,6 +728,10 @@ class PagedServingEngine(ServingEngine):
             self._pt[slot] = -1
         self._len[slot] = 0
         self.slots[slot] = None
+        self._prefilling.pop(slot, None)
+
+    def _evict_slot(self, slot: int):
+        self._release_slot(slot)
 
     # -- admission layer ----------------------------------------------------
 
@@ -623,9 +746,11 @@ class PagedServingEngine(ServingEngine):
         free_slots = [i for i in range(self.max_slots)
                       if self.slots[i] is None]
         batch: list[tuple[int, Request]] = []
+        admitted_chunked = False
         while free_slots and self.queue:
             req = self.queue[0]
-            need = self._pages_needed(len(req.prompt))
+            ctx = self._resume_ctx(req)
+            need = self._pages_needed(len(ctx))
             if need > len(self._free) and self._pt is not None:
                 break                    # backpressure: FIFO head waits
             self.queue.popleft()
@@ -633,27 +758,41 @@ class PagedServingEngine(ServingEngine):
             if self._pt is not None:
                 for j in range(need):
                     self._pt[slot, j] = self._free.pop()
-            batch.append((slot, req))
+            if self._chunked and len(ctx) > self.prefill_chunk:
+                # chunked-prefill path: the slot and ALL its prompt pages
+                # are assigned now (backpressure semantics unchanged) but
+                # the prompt streams through bounded per-tick chunks
+                # (_advance_prefill) instead of this round's dispatch
+                self.slots[slot] = req
+                self._len[slot] = 0
+                self._prefilling[slot] = 0
+                self._admitted_at[slot] = self._admit_seq
+                self._admit_seq += 1
+                if self.obs is not None:
+                    self._obs_admitted(req, slot)
+                admitted_chunked = True
+                continue
+            batch.append((slot, req, ctx))
         if not batch:
-            return False
+            self._note_occupancy()
+            return admitted_chunked
         # ONE (n_pad, s_pad) prefill dispatch for the whole batch:
         # prompt lengths bucket-padded, row count padded to a power of
         # two (sentinel rows' writes drop in the kernel)
         n_pad = 1 << (len(batch) - 1).bit_length()
-        s_max = max(len(r.prompt) for _, r in batch)
+        s_max = max(len(ctx) for _, _, ctx in batch)
         s_pad = min(self.max_len,
                     -(-s_max // self.prefill_bucket) * self.prefill_bucket)
         toks = np.zeros((n_pad, s_pad), np.int32)
         lens = np.zeros((n_pad,), np.int32)
         rows = np.full((n_pad,), self.max_slots, np.int32)
-        for r, (slot, req) in enumerate(batch):
-            p = np.asarray(req.prompt, np.int64)
-            toks[r, :len(p)] = p
-            lens[r] = len(p)
+        for r, (slot, req, ctx) in enumerate(batch):
+            toks[r, :len(ctx)] = ctx
+            lens[r] = len(ctx)
             rows[r] = slot
         if self.obs is not None:
             t0 = self._clock()
-            for slot, req in batch:
+            for slot, req, _ in batch:
                 self._obs_admitted(req, slot)
         logits, self.cache = self._prefill_paged(
             self.params, jnp.asarray(toks), jnp.asarray(lens),
@@ -667,13 +806,13 @@ class PagedServingEngine(ServingEngine):
             self._tracer.emit("prefill", ts=now, n_requests=len(batch),
                               n_tokens=int(lens.sum()), rows=n_pad,
                               padded_len=s_pad, dur_s=now - t0)
-        for r, (slot, req) in enumerate(batch):
+        for r, (slot, req, _) in enumerate(batch):
             self._count_prefill(req, int(lens[r]))
             nxt = int(_sample_one(logits[r], req.temperature, self._step,
                                   req.uid)[0])
             if self.obs is not None:
-                self._obs_first_token(req)
-            req.out_tokens.append(nxt)
+                self._obs_prefill_token(req)
+            self._append_token(req, nxt)
             if self._finished(req, nxt):
                 self._retire(req)
                 self._release_slot(slot)
@@ -685,37 +824,104 @@ class PagedServingEngine(ServingEngine):
         self._note_occupancy()
         return True
 
+    def _advance_prefill(self):
+        """Advance every chunk-prefilling slot by ONE bounded chunk with
+        a single batched continuation dispatch (row count padded to a
+        power of two, chunk length fixed — the jit cache stays small).
+        Rows whose prompt completes sample their first token from the
+        final chunk's logits and become decode-active; the interleave
+        with ``step()``'s decode dispatch is what bounds the per-token
+        gap concurrent streams see during a long admit."""
+        if not self._prefilling:
+            return
+        items = sorted(self._prefilling.items())
+        chunk = self.prefill_chunk
+        n_pad = 1 << (len(items) - 1).bit_length()
+        toks = np.zeros((n_pad, chunk), np.int32)
+        lens = np.zeros((n_pad,), np.int32)
+        starts = np.zeros((n_pad,), np.int32)
+        rows = np.full((n_pad,), self.max_slots, np.int32)
+        for r, (slot, done) in enumerate(items):
+            # resume contexts are stable mid-chunking: a chunk-prefilling
+            # slot sits out decode, so out_tokens cannot grow under it
+            src = self._resume_ctx(self.slots[slot])
+            take = min(chunk, len(src) - done)
+            toks[r, :take] = src[done:done + take]
+            lens[r] = take
+            starts[r] = done
+            rows[r] = slot
+        t0 = self._clock() if self.obs is not None else 0.0
+        logits, self.cache = self._prefill_cont(
+            self.params, jnp.asarray(toks), jnp.asarray(lens),
+            jnp.asarray(starts), self._host_state_cache(),
+            jnp.asarray(rows))
+        self._c_prefill.inc()
+        self._attr_prefill_dispatch(n_pad, chunk)
+        if self.obs is not None:
+            logits.block_until_ready()
+            now = self._clock()
+            self._metrics.histogram("engine.prefill_s").observe(now - t0)
+            self._tracer.emit("prefill", ts=now, n_requests=len(items),
+                              n_tokens=int(lens.sum()), rows=n_pad,
+                              padded_len=chunk, dur_s=now - t0, chunked=True)
+        for r, (slot, done) in enumerate(items):
+            req = self.slots[slot]
+            took = int(lens[r])
+            self._count_prefill(req, took)
+            self._len[slot] = done + took
+            if done + took < len(self._resume_ctx(req)):
+                self._prefilling[slot] = done + took
+                continue
+            del self._prefilling[slot]
+            nxt = int(_sample_one(logits[r], req.temperature, self._step,
+                                  req.uid)[0])
+            if self.obs is not None:
+                self._obs_prefill_token(req)
+            self._append_token(req, nxt)
+            if self._finished(req, nxt):
+                self._retire(req)
+                self._release_slot(slot)
+
     def _preempt_youngest(self, active: list[int]):
         """Deadlock breaker: every active slot needs a page and none are
-        free.  The youngest occupant folds its generated tokens into its
-        prompt and requeues — re-prefilling that context reproduces the
-        pending decode input's logits, so the greedy continuation is
-        token-identical.  A folded context that can NEVER fit again
-        (more pages than the whole pool / table width — the pool is
-        simply too small for the request) retires truncated instead of
-        requeueing: leaving it at the FIFO head would starve every
-        request behind it forever."""
+        free.  The youngest occupant requeues; re-admission re-prefills
+        its full context (``_resume_ctx``: prompt + generated tokens) —
+        that reproduces the pending decode input's logits, so the greedy
+        continuation is token-identical.  ``req.prompt`` itself is NOT
+        touched: the caller's Request must come back exactly as
+        submitted.  A context that can NEVER fit again (more pages than
+        the whole pool / table width — the pool is simply too small for
+        the request) retires truncated instead of requeueing: leaving it
+        at the FIFO head would starve every request behind it forever."""
         i = max(active, key=lambda j: self._admitted_at[j])
         req = self.slots[i]
         self._metrics.counter("engine.preemptions").inc()
         if self.obs is not None:
             self._tracer.emit("preempt", ts=self._clock(), uid=req.uid,
                               slot=i, n_generated=len(req.out_tokens))
-        req.prompt = np.concatenate([np.asarray(req.prompt, np.int64),
-                                     np.asarray(req.out_tokens, np.int64)])
         self._release_slot(i)
-        if self._pages_needed(len(req.prompt)) > min(self.n_pages,
-                                                     self.table_width):
+        ctx_len = len(req.prompt) + len(req.out_tokens)
+        if self._pages_needed(ctx_len) > min(self.n_pages,
+                                             self.table_width):
             self._retire(req)
         else:
             self.queue.appendleft(req)
+            if self.obs is not None:
+                # queue wait for the resumed admission is measured from
+                # HERE, not the original submit (see _obs_admitted)
+                self._wait_from[req.uid] = self._clock()
 
     # -- one engine tick ----------------------------------------------------
 
     def step(self) -> int:
         self._admit()
         self._step += 1
-        active = [i for i, r in enumerate(self.slots) if r is not None]
+        # one bounded prefill chunk per tick, BEFORE the decode dispatch:
+        # decoding slots and a chunk-prefilling long prompt make progress
+        # in the same tick (slots mid-chunking sit out the decode)
+        self._advance_prefill()
+        active = [i for i, r in enumerate(self.slots)
+                  if r is not None and i not in self._prefilling]
         if not active:
             return 0
         t0 = self._clock() if self.obs is not None else 0.0
@@ -776,7 +982,7 @@ class PagedServingEngine(ServingEngine):
             req = self.slots[i]
             self._len[i] += 1
             nxt = int(toks[i])
-            req.out_tokens.append(nxt)
+            self._append_token(req, nxt)
             if self._finished(req, nxt):
                 self._retire(req)
                 self._release_slot(i)
@@ -816,7 +1022,7 @@ class PerSlotServingEngine(_EngineBase):
             self._attr_decode_dispatch(1)
             nxt = int(_sample_one(logits[:, -1], req.temperature, self._step,
                                   req.uid)[0])
-            req.out_tokens.append(nxt)
+            self._append_token(req, nxt)
             if self._finished(req, nxt):
                 self._retire(req)
                 self.slots[i] = None

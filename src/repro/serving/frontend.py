@@ -1,0 +1,408 @@
+"""Async streaming HTTP front-end over the serving engines (stdlib only).
+
+The request-facing surface the ROADMAP's serving item calls for: clients
+POST a prompt and stream tokens back as they are sampled, with
+per-request deadlines and admission control, while the engine keeps its
+single-threaded batched tick.
+
+Architecture — two threads, one owner each:
+
+  * the **engine thread** owns ALL engine state.  It drains a control
+    queue (submits, cancels) between ticks, drives ``step()`` +
+    ``pop_retired()``, and parks on an event when idle.  Tokens leave
+    through the engine's streaming hooks (``on_token``/``on_retire``),
+    which forward to the asyncio loop via ``call_soon_threadsafe`` — the
+    only cross-thread channel out.
+  * the **asyncio loop** owns the sockets.  ``asyncio.start_server``
+    accepts connections; HTTP/1.1 is hand-rolled (no new deps) and
+    token streams go out as chunked transfer-encoded ndjson.
+
+Protocol (docs/serving.md):
+
+    POST /generate   {"prompt": [ints], "max_new_tokens": N,
+                      "temperature": T, "deadline_s": D}
+        → 200, one ndjson record per token {"token": t}, then a final
+          {"done": true, "uid": u, "tokens": [...], "n_tokens": n,
+           "expired": bool, "cancelled": bool}
+        → 400 invalid body / over-capacity prompt
+        → 503 admission control shed ({"error": "shed", ...})
+    GET /healthz     → 200 {"ok": true}
+    GET /stats       → 200 engine stats() + front-end counters
+
+Admission control sheds BEFORE the engine sees the request: hard cap on
+queue depth, plus a load score ``queue_depth × pool_occupancy`` (an
+empty pool never sheds; a full pool sheds at shallow queues).  Deadlines
+are enforced between streamed tokens: on expiry the front-end cancels
+the request in the engine (slot + pages free at the next tick boundary),
+emits a ``deadline`` trace event, and finishes the stream with
+``expired: true`` — already-streamed tokens stand.
+
+The engine emits the SAME trace-event schema as offline runs, so
+``repro.obs.summarize``, ``python -m repro.obs`` and the BENCH latency
+gate cover front-end traffic unchanged; shed/deadline events ride along
+in the same JSONL.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import collections
+import json
+import threading
+
+import numpy as np
+
+from repro.serving.engine import Request
+
+__all__ = ["ServingFrontend", "http_generate", "http_get"]
+
+
+def _json_bytes(obj) -> bytes:
+    return (json.dumps(obj) + "\n").encode()
+
+
+class ServingFrontend:
+    """Asyncio HTTP server wrapping one engine behind submit → stream.
+
+    ``await start()`` binds the socket and launches the engine thread;
+    ``await stop()`` closes both.  Also usable as an async context
+    manager.  ``port=0`` binds an ephemeral port (tests); the bound port
+    is ``self.port`` after ``start()``.
+    """
+
+    def __init__(self, engine, *, host: str = "127.0.0.1", port: int = 0,
+                 max_queue_depth: int = 64, shed_score: float = 32.0,
+                 default_deadline_s: float | None = None):
+        self.engine = engine
+        self.host, self.port = host, port
+        self.max_queue_depth = max_queue_depth
+        self.shed_score = shed_score
+        self.default_deadline_s = default_deadline_s
+        self.server: asyncio.AbstractServer | None = None
+        self._loop: asyncio.AbstractEventLoop | None = None
+        self._streams: dict[int, asyncio.Queue] = {}
+        self._control: collections.deque = collections.deque()
+        self._work = threading.Event()
+        self._stop_flag = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._next_uid = 0
+        self._uid_lock = threading.Lock()
+        # front-end outcome counters (engine stats() covers the rest)
+        self.accepted = 0
+        self.shed = 0
+        self.expired = 0
+
+    # -- lifecycle ----------------------------------------------------------
+
+    async def start(self) -> "ServingFrontend":
+        self._loop = asyncio.get_running_loop()
+        eng = self.engine
+        eng.on_token = self._on_token
+        eng.on_retire = self._on_retire
+        self._thread = threading.Thread(target=self._engine_loop,
+                                        name="engine-loop", daemon=True)
+        self._thread.start()
+        self.server = await asyncio.start_server(self._serve_client,
+                                                 self.host, self.port)
+        self.port = self.server.sockets[0].getsockname()[1]
+        return self
+
+    async def stop(self) -> None:
+        if self.server is not None:
+            self.server.close()
+            await self.server.wait_closed()
+        self._stop_flag.set()
+        self._work.set()
+        if self._thread is not None:
+            await asyncio.to_thread(self._thread.join)
+        self.engine.on_token = None
+        self.engine.on_retire = None
+
+    async def __aenter__(self) -> "ServingFrontend":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    # -- engine thread ------------------------------------------------------
+
+    def _engine_loop(self) -> None:
+        eng = self.engine
+        while not self._stop_flag.is_set():
+            while self._control:
+                op, arg = self._control.popleft()
+                if op == "submit":
+                    eng.submit(arg)
+                else:                            # "cancel"
+                    eng.cancel(arg)
+            if eng.queue or any(eng.slots):
+                eng.step()
+                eng.pop_retired()    # on_retire already forwarded them
+            else:
+                self._work.wait(timeout=0.05)
+                self._work.clear()
+
+    def _on_token(self, req, tok: int) -> None:
+        """Engine-thread hook: forward one sampled token to its open
+        stream (if the client is still connected)."""
+        q = self._streams.get(req.uid)
+        if q is not None:
+            self._loop.call_soon_threadsafe(q.put_nowait, ("token", tok))
+
+    def _on_retire(self, req) -> None:
+        q = self._streams.get(req.uid)
+        if q is not None:
+            self._loop.call_soon_threadsafe(q.put_nowait, ("done", req))
+
+    # -- admission control --------------------------------------------------
+
+    def _occupancy(self) -> float:
+        eng = self.engine
+        n_pages = getattr(eng, "n_pages", 0)
+        if n_pages:
+            return eng.pages_in_use / n_pages
+        busy = sum(r is not None for r in eng.slots)
+        return busy / max(eng.max_slots, 1)
+
+    def _shed_verdict(self) -> dict | None:
+        """None to admit, else the shed record (trace event + 503 body).
+
+        Depth counts engine-queued requests plus control-queue submits
+        not yet applied; occupancy is page-pool (or slot) utilization.
+        The product crossing ``shed_score`` sheds — load must be high on
+        BOTH axes — and ``max_queue_depth`` is the hard cap."""
+        depth = len(self.engine.queue) + sum(
+            1 for op, _ in list(self._control) if op == "submit")
+        occ = self._occupancy()
+        score = depth * occ
+        if depth >= self.max_queue_depth or score >= self.shed_score:
+            return {"queue_depth": depth, "occupancy": occ, "score": score}
+        return None
+
+    # -- HTTP plumbing ------------------------------------------------------
+
+    async def _serve_client(self, reader: asyncio.StreamReader,
+                            writer: asyncio.StreamWriter) -> None:
+        try:
+            req_line = await reader.readline()
+            if not req_line:
+                return
+            parts = req_line.decode("latin-1").split()
+            if len(parts) < 2:
+                return
+            method, path = parts[0], parts[1]
+            headers = {}
+            while True:
+                line = await reader.readline()
+                if line in (b"\r\n", b"\n", b""):
+                    break
+                key, _, val = line.decode("latin-1").partition(":")
+                headers[key.strip().lower()] = val.strip()
+            body = b""
+            n = int(headers.get("content-length", "0") or 0)
+            if n:
+                body = await reader.readexactly(n)
+            if method == "POST" and path == "/generate":
+                await self._handle_generate(body, writer)
+            elif method == "GET" and path == "/healthz":
+                self._respond(writer, 200, {"ok": True})
+            elif method == "GET" and path == "/stats":
+                self._respond(writer, 200, self._stats())
+            else:
+                self._respond(writer, 404, {"error": "not found"})
+            await writer.drain()
+        except (ConnectionError, asyncio.IncompleteReadError):
+            pass
+        finally:
+            writer.close()
+
+    def _stats(self) -> dict:
+        try:
+            st = self.engine.stats()
+        except RuntimeError:
+            # stats() iterates live queue/slot state the engine thread
+            # mutates; losing one poll to the race beats locking the tick
+            st = {}
+        st.pop("per_request", None)
+        st["frontend"] = {"accepted": self.accepted, "shed": self.shed,
+                          "expired": self.expired,
+                          "open_streams": len(self._streams)}
+        return st
+
+    @staticmethod
+    def _respond(writer: asyncio.StreamWriter, status: int, obj) -> None:
+        reason = {200: "OK", 400: "Bad Request", 404: "Not Found",
+                  503: "Service Unavailable"}[status]
+        body = _json_bytes(obj)
+        writer.write(
+            f"HTTP/1.1 {status} {reason}\r\n"
+            f"Content-Type: application/json\r\n"
+            f"Content-Length: {len(body)}\r\n"
+            f"Connection: close\r\n\r\n".encode() + body)
+
+    @staticmethod
+    def _chunk(writer: asyncio.StreamWriter, data: bytes) -> None:
+        writer.write(f"{len(data):x}\r\n".encode() + data + b"\r\n")
+
+    # -- the streaming endpoint --------------------------------------------
+
+    async def _handle_generate(self, body: bytes,
+                               writer: asyncio.StreamWriter) -> None:
+        try:
+            payload = json.loads(body.decode() or "{}")
+            prompt = np.asarray(payload["prompt"], np.int64).reshape(-1)
+        except (ValueError, KeyError, TypeError):
+            self._respond(writer, 400, {"error": "invalid body"})
+            return
+        if len(prompt) == 0 or len(prompt) > self.engine.prompt_capacity:
+            self._respond(writer, 400, {
+                "error": "prompt length out of range",
+                "capacity": self.engine.prompt_capacity})
+            return
+        verdict = self._shed_verdict()
+        if verdict is not None:
+            self.shed += 1
+            if self.engine.obs is not None:
+                self.engine.obs.tracer.emit("shed", **verdict)
+            self._respond(writer, 503, {"error": "shed", **verdict})
+            return
+        with self._uid_lock:
+            uid = self._next_uid
+            self._next_uid += 1
+        deadline_s = payload.get("deadline_s", self.default_deadline_s)
+        req = Request(uid=uid, prompt=prompt,
+                      max_new_tokens=int(payload.get("max_new_tokens", 32)),
+                      temperature=float(payload.get("temperature", 0.0)))
+        queue: asyncio.Queue = asyncio.Queue()
+        self._streams[uid] = queue
+        self.accepted += 1
+        self._control.append(("submit", req))
+        self._work.set()
+
+        writer.write(b"HTTP/1.1 200 OK\r\n"
+                     b"Content-Type: application/x-ndjson\r\n"
+                     b"Transfer-Encoding: chunked\r\n"
+                     b"Connection: close\r\n\r\n")
+        loop = asyncio.get_running_loop()
+        deadline_at = (loop.time() + deadline_s
+                       if deadline_s is not None else None)
+        expired, n_streamed, final = False, 0, None
+        try:
+            while final is None:
+                timeout = None
+                if deadline_at is not None and not expired:
+                    timeout = max(deadline_at - loop.time(), 0.0)
+                try:
+                    kind, val = await asyncio.wait_for(queue.get(), timeout)
+                except asyncio.TimeoutError:
+                    # deadline expired mid-stream: cancel in the engine
+                    # and drain until the retire confirmation arrives
+                    # (the engine may still race one more token out)
+                    expired = True
+                    self.expired += 1
+                    if self.engine.obs is not None:
+                        self.engine.obs.tracer.emit(
+                            "deadline", uid=uid, deadline_s=deadline_s,
+                            n_streamed=n_streamed)
+                    self._control.append(("cancel", uid))
+                    self._work.set()
+                    continue
+                if kind == "token":
+                    n_streamed += 1
+                    self._chunk(writer, _json_bytes({"token": int(val)}))
+                    await writer.drain()
+                else:
+                    final = val
+            self._chunk(writer, _json_bytes({
+                "done": True, "uid": uid,
+                "tokens": [int(t) for t in final.out_tokens],
+                "n_tokens": len(final.out_tokens),
+                "expired": expired, "cancelled": final.cancelled}))
+            writer.write(b"0\r\n\r\n")
+        finally:
+            del self._streams[uid]
+
+
+# ---------------------------------------------------------------------------
+# minimal async client (tests, benchmarks/load_gen.py, serve.py self-drive)
+# ---------------------------------------------------------------------------
+
+
+async def http_generate(host: str, port: int, payload: dict,
+                        clock=None) -> dict:
+    """POST /generate and consume the token stream.
+
+    Returns {"status", "body" (final record or error body), "tokens",
+    "token_times" (client receive timestamp per token, from ``clock`` —
+    default the running loop's clock)}.
+    """
+    clock = clock or asyncio.get_running_loop().time
+    reader, writer = await asyncio.open_connection(host, port)
+    try:
+        body = json.dumps(payload).encode()
+        writer.write(f"POST /generate HTTP/1.1\r\nHost: {host}\r\n"
+                     f"Content-Type: application/json\r\n"
+                     f"Content-Length: {len(body)}\r\n\r\n".encode() + body)
+        await writer.drain()
+        status, headers = await _read_head(reader)
+        tokens, times, final = [], [], None
+        async for rec in _ndjson_records(reader, headers):
+            if "token" in rec:
+                tokens.append(rec["token"])
+                times.append(clock())
+            else:
+                final = rec
+        return {"status": status, "body": final, "tokens": tokens,
+                "token_times": times}
+    finally:
+        writer.close()
+
+
+async def http_get(host: str, port: int, path: str) -> dict:
+    """GET a one-shot JSON endpoint (/healthz, /stats)."""
+    reader, writer = await asyncio.open_connection(host, port)
+    try:
+        writer.write(f"GET {path} HTTP/1.1\r\nHost: {host}\r\n\r\n".encode())
+        await writer.drain()
+        status, headers = await _read_head(reader)
+        n = int(headers.get("content-length", "0") or 0)
+        body = json.loads((await reader.readexactly(n)).decode() or "{}")
+        return {"status": status, "body": body}
+    finally:
+        writer.close()
+
+
+async def _read_head(reader: asyncio.StreamReader):
+    status_line = await reader.readline()
+    status = int(status_line.split()[1])
+    headers = {}
+    while True:
+        line = await reader.readline()
+        if line in (b"\r\n", b"\n", b""):
+            break
+        key, _, val = line.decode("latin-1").partition(":")
+        headers[key.strip().lower()] = val.strip()
+    return status, headers
+
+
+async def _ndjson_records(reader: asyncio.StreamReader, headers: dict):
+    """Yield ndjson records from a chunked or content-length body."""
+    buf = b""
+    if headers.get("transfer-encoding", "").lower() == "chunked":
+        while True:
+            size_line = await reader.readline()
+            size = int(size_line.strip() or b"0", 16)
+            if size == 0:
+                await reader.readline()          # trailing CRLF
+                break
+            data = await reader.readexactly(size + 2)   # chunk + CRLF
+            buf += data[:-2]
+            while b"\n" in buf:
+                line, buf = buf.split(b"\n", 1)
+                if line.strip():
+                    yield json.loads(line)
+    else:
+        n = int(headers.get("content-length", "0") or 0)
+        for line in (await reader.readexactly(n)).splitlines():
+            if line.strip():
+                yield json.loads(line)

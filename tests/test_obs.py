@@ -152,26 +152,52 @@ def _hand_events():
         {"ev": "preempt", "ts": 10.5, "uid": 2, "slot": 1, "n_generated": 2},
         {"ev": "retire", "ts": 11.0, "uid": 1, "prompt_len": 4,
          "decode_tokens": 3, "e2e_s": 11.0},
+        # uid 2 resumes: queue wait runs from the REQUEUE at 10.5 (not
+        # the original submit at 1.0), and the resume-prefill token gets
+        # its own ``token`` event joining the per-token chain
+        {"ev": "admit", "ts": 12.0, "uid": 2, "slot": 0, "queue_wait_s": 1.5,
+         "resumed": True},
+        {"ev": "token", "ts": 13.0, "uid": 2, "resumed": True},
+        # front-end events ride the same schema
+        {"ev": "shed", "ts": 13.5, "queue_depth": 5, "occupancy": 0.8,
+         "score": 4.0},
+        {"ev": "deadline", "ts": 14.0, "uid": 2, "deadline_s": 10.0,
+         "n_streamed": 3},
+        {"ev": "retire", "ts": 15.0, "uid": 2, "prompt_len": 6,
+         "decode_tokens": 3, "e2e_s": 14.0, "cancelled": True},
     ]
 
 
 def test_summarize_exact_numbers():
     s = summarize(_hand_events())
-    assert s["counts"] == {"submitted": 2, "admitted": 2, "retired": 1,
-                           "preemptions": 1, "resumes": 1, "decode_tokens": 3,
-                           "prefill_tokens": 4, "ticks": 2}
+    assert s["counts"] == {"submitted": 2, "admitted": 3, "retired": 2,
+                           "preemptions": 1, "resumes": 2, "decode_tokens": 4,
+                           "prefill_tokens": 4, "ticks": 2, "cancelled": 1,
+                           "deadline_expired": 1, "shed": 1}
     assert s["ttft_s"]["count"] == 2
     assert s["ttft_s"]["p50"] == 3.0 and s["ttft_s"]["max"] == 4.0
-    # uid 1 token ts: 3, 7, 10 → deltas 4, 3;  uid 2: 5, 7 → delta 2
-    assert s["per_token_s"]["count"] == 3
-    assert sorted((s["per_token_s"]["min"], s["per_token_s"]["p50"],
-                   s["per_token_s"]["max"])) == [2.0, 3.0, 4.0]
-    assert s["queue_wait_s"]["mean"] == pytest.approx(2.5)
+    # uid 1 token ts: 3, 7, 10 → deltas 4, 3;  uid 2: 5, 7, 13 → 2, 6
+    assert s["per_token_s"]["count"] == 4
+    assert s["per_token_s"]["min"] == 2.0 and s["per_token_s"]["max"] == 6.0
+    assert s["queue_wait_s"]["mean"] == pytest.approx(6.5 / 3)
     assert s["tick_alloc_s"]["count"] == 2
     assert s["tick_decode_s"]["max"] == pytest.approx(2.0)  # 3.0 - 1.0
-    assert s["e2e_s"]["max"] == 11.0
-    # the human table renders without error and carries the counts line
-    assert "2 submitted" in format_summary(s)
+    assert s["e2e_s"]["count"] == 2 and s["e2e_s"]["max"] == 14.0
+    # the human table renders without error and carries the counts,
+    # front-end outcome, and end-to-end rows
+    table = format_summary(s)
+    assert "2 submitted" in table
+    assert "front-end: 1 shed, 1 deadline-expired, 1 cancelled" in table
+    assert "| end-to-end | 2 |" in table
+
+
+def test_format_summary_no_frontend_line_when_clean():
+    """Offline runs (no sheds/deadlines/cancels) keep the pre-front-end
+    table layout: no front-end outcome line appears."""
+    events = [ev for ev in _hand_events()
+              if ev["ev"] not in ("shed", "deadline")
+              and not ev.get("cancelled")]
+    assert "front-end:" not in format_summary(summarize(events))
 
 
 def test_tracer_jsonl_roundtrip(tmp_path):
@@ -248,7 +274,8 @@ def test_run_stats_schema_identical_across_engines():
     assert schemas["per_slot"] == schemas["batched"]
     pool_keys = {"page_size", "n_pages", "table_width", "pages_in_use",
                  "peak_pages_in_use", "page_occupancy",
-                 "page_occupancy_peak", "paged_attention_backend"}
+                 "page_occupancy_peak", "paged_attention_backend",
+                 "prefill_chunk", "chunked_prefill"}
     assert schemas["paged"] == schemas["batched"] | pool_keys
     base_keys = {"requests", "prefill_tokens", "decode_tokens",
                  "per_request", "ticks", "decode_dispatches",
@@ -275,6 +302,62 @@ def test_engine_dispatch_attribution():
     assert st["dispatch_backends"][f"paged_attention.{pa}"] == st["ticks"]
     assert st["hbm_modeled_bytes"]["decode.bf16"] > 0
     assert st["hbm_modeled_bytes"]["prefill.bf16"] > 0
+
+
+def _preemption_run():
+    """Tiny-pool paged run under a ManualClock: both prompts fill the
+    pool exactly, so decode growth forces a preemption + resume."""
+    cfg, model, params = _setup()
+    clk = ManualClock()
+    obs = Observability(clock=clk)
+    eng = PagedServingEngine(model, params, cfg, max_slots=2, max_len=32,
+                             page_size=4, prefill_bucket=8, n_pages=2,
+                             obs=obs)
+    for r in (Request(uid=0, prompt=np.arange(1, 5), max_new_tokens=3),
+              Request(uid=1, prompt=np.arange(3, 7), max_new_tokens=3)):
+        eng.submit(r)
+    done = []
+    for _ in range(100):
+        clk.advance(1.0)
+        eng.step()
+        done += eng.pop_retired()
+        if not eng.queue and not any(eng.slots):
+            break
+    assert not eng.queue and not any(eng.slots), "run did not drain"
+    return eng, obs, done
+
+
+def test_resumed_queue_wait_measured_from_requeue():
+    """The preemption-era latency fix: a resumed request's queue wait
+    runs from the REQUEUE (the preempt tick), not the original submit —
+    otherwise the first service period is double-counted."""
+    _, obs, _ = _preemption_run()
+    events = obs.tracer.events
+    preempts = [e for e in events if e["ev"] == "preempt"]
+    assert preempts, "workload no longer preempts"
+    for pre in preempts:
+        resumed = next(e for e in events
+                       if e["ev"] == "admit" and e["uid"] == pre["uid"]
+                       and e.get("resumed") and e["ts"] >= pre["ts"])
+        # submits happened at t=0, preempts strictly later: measuring
+        # from the original submit would give queue_wait == ts
+        assert resumed["queue_wait_s"] == pytest.approx(
+            resumed["ts"] - pre["ts"])
+        assert resumed["queue_wait_s"] < resumed["ts"]
+
+
+def test_trace_token_counts_match_engine_under_preemption():
+    """The resume-prefill token gets a ``token`` event, so the
+    trace-derived token count equals the engine's: first_token +
+    decode_tokens events == every token every client streamed."""
+    eng, obs, done = _preemption_run()
+    s = obs.summary()
+    streamed = sum(len(r.out_tokens) for r in done)
+    assert streamed == eng.stats()["decode_tokens"]
+    assert s["counts"]["decode_tokens"] + s["ttft_s"]["count"] == streamed
+    assert s["counts"]["resumes"] >= 1
+    # every non-first streamed token contributes one inter-token gap
+    assert s["per_token_s"]["count"] == s["counts"]["decode_tokens"]
 
 
 def test_dispatch_resolutions_tally():

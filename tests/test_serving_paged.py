@@ -276,6 +276,40 @@ def test_total_stall_preempts_and_tokens_unchanged():
     assert outs == ref
 
 
+def test_preemption_does_not_mutate_submitted_request():
+    """Resume state must never leak into the caller's Request: the old
+    preempt path folded ``out_tokens`` into ``req.prompt`` in place, so
+    retired requests came back with a prompt they never submitted (and
+    re-serving the same prompts produced different tokens).  Retire
+    events must report the ORIGINAL prompt length too."""
+    from repro.obs import Observability
+
+    cfg, model, params, _ = _setup("stablelm_3b", False)
+    prompts = {0: np.arange(1, 5), 1: np.arange(3, 7)}
+    obs = Observability()
+    eng = PagedServingEngine(model, params, cfg, max_slots=2, max_len=32,
+                             page_size=4, n_pages=2, obs=obs)
+    reqs = [Request(uid=u, prompt=p.copy(), max_new_tokens=3)
+            for u, p in prompts.items()]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run(max_ticks=300)
+    assert any(e["ev"] == "preempt" for e in obs.tracer.events)
+    for r in done:
+        assert np.array_equal(r.prompt, prompts[r.uid])
+    for e in obs.tracer.events:
+        if e["ev"] == "retire":
+            assert e["prompt_len"] == len(prompts[e["uid"]])
+    # the untouched Requests replay token-identically on a fresh engine
+    replay = PagedServingEngine(model, params, cfg, max_slots=2,
+                                max_len=32, page_size=4, n_pages=2)
+    for r in done:
+        replay.submit(Request(uid=r.uid, prompt=r.prompt,
+                              max_new_tokens=3))
+    ref = {r.uid: list(r.out_tokens) for r in replay.run(max_ticks=300)}
+    assert {r.uid: list(r.out_tokens) for r in done} == ref
+
+
 def test_pool_too_small_for_growth_retires_truncated_not_livelock():
     """A request admitted within capacity but whose DECODE outgrows the
     whole pool cannot be resumed after preemption — it must retire
@@ -364,3 +398,96 @@ def test_run_stats_token_counts_all_engines():
         assert st["dispatches_per_tick"] == (
             1.0 if cls is not PerSlotServingEngine
             else pytest.approx(eng.decode_dispatches / max(eng.ticks, 1)))
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill (async front-end PR): long admits interleave with decode
+# ---------------------------------------------------------------------------
+
+
+def _chunked_workload(cfg):
+    victim = Request(uid=0, prompt=np.asarray([5, 3, 2]), max_new_tokens=8)
+    long_req = Request(uid=1, prompt=np.arange(1, 40) % cfg.vocab_size,
+                       max_new_tokens=4)
+    return victim, long_req
+
+
+def _drive_victim_then_long(eng, cfg):
+    """Victim decoding first, long prompt arriving mid-stream."""
+    victim, long_req = _chunked_workload(cfg)
+    eng.submit(victim)
+    eng.step()
+    eng.step()
+    eng.submit(long_req)
+    done = eng.run(max_ticks=300)
+    return {r.uid: list(r.out_tokens) for r in done}
+
+
+def test_chunked_prefill_interleaves_and_tokens_identical():
+    """With ``prefill_chunk`` set, a long prompt streams through bounded
+    continuation dispatches: the decoding victim keeps emitting tokens
+    BETWEEN chunks (no whole-prompt stall), and every output is
+    token-identical to the unchunked engine and the per-slot oracle."""
+    from repro.obs import Observability
+
+    cfg, model, params, _ = _setup("stablelm_3b", False)
+    obs = Observability()
+    eng = PagedServingEngine(model, params, cfg, max_slots=2, max_len=64,
+                             page_size=4, prefill_bucket=8, prefill_chunk=8,
+                             obs=obs)
+    outs = _drive_victim_then_long(eng, cfg)
+    assert eng.run_stats["chunked_prefill"] is True
+    assert eng.run_stats["pages_in_use"] == 0          # drained clean
+
+    # the 39-token prompt streamed through ≥2 bounded chunk dispatches
+    chunk_evs = [e for e in obs.tracer.events
+                 if e["ev"] == "prefill" and e.get("chunked")]
+    assert len(chunk_evs) >= 2
+    assert all(e["padded_len"] == 8 for e in chunk_evs)
+    # and the victim decoded BETWEEN chunk dispatches — the stall the
+    # chunking exists to remove
+    interleaved = [e for e in obs.tracer.events if e["ev"] == "tick"
+                   and chunk_evs[0]["ts"] < e["ts"] < chunk_evs[-1]["ts"]
+                   and 0 in e["uids"]]
+    assert interleaved, "victim starved during the long admit"
+
+    ref = PagedServingEngine(model, params, cfg, max_slots=2, max_len=64,
+                             page_size=4, prefill_bucket=8)
+    assert _drive_victim_then_long(ref, cfg) == outs
+    assert ref.run_stats["chunked_prefill"] is False
+    assert ref.prefill_dispatches < eng.prefill_dispatches
+
+    oracle = PerSlotServingEngine(model, params, cfg, max_slots=2,
+                                  max_len=64)
+    assert _drive_victim_then_long(oracle, cfg) == outs
+
+
+def test_chunked_prefill_exact_multiple_and_quantized():
+    """Chunk-boundary edge (prompt length an exact chunk multiple) and
+    the w8a8 path both stay token-identical to the unchunked engine."""
+    cfg, model, params, policy = _setup("stablelm_3b", True)
+    reqs = lambda: [Request(uid=0, prompt=np.arange(2, 18) % cfg.vocab_size,
+                            max_new_tokens=3),
+                    Request(uid=1, prompt=np.asarray([4, 1]),
+                            max_new_tokens=3)]
+    outs = {}
+    for name, chunk in (("chunked", 8), ("oneshot", None)):
+        eng = PagedServingEngine(model, params, cfg, max_slots=2, max_len=32,
+                                 page_size=4, prefill_bucket=8,
+                                 prefill_chunk=chunk, policy=policy,
+                                 kv_bits=8)
+        outs[name] = _serve(eng, reqs())
+    assert outs["chunked"] == outs["oneshot"]
+
+
+def test_chunked_prefill_falls_back_without_model_support():
+    """Families without a prefill continuation path (SSM scan state)
+    ignore ``prefill_chunk`` and serve whole-prompt as before."""
+    cfg, model, params, _ = _setup("mamba2_780m", False)
+    eng = PagedServingEngine(model, params, cfg, max_slots=2, max_len=32,
+                             page_size=4, prefill_bucket=8, prefill_chunk=4)
+    outs = _serve(eng, [Request(uid=0,
+                                prompt=np.arange(12) % cfg.vocab_size,
+                                max_new_tokens=3)])
+    assert len(outs[0]) == 3
+    assert eng.run_stats["chunked_prefill"] is False
