@@ -24,6 +24,19 @@ stablelm_3b, CPU interpret mode):
     attached; ``summarize(load_trace(path))`` must equal the in-memory
     summary bit-for-bit (the front-end's shed/deadline events ride the
     same schema), gated as ``trace_replay_identical``.
+  * **Retry goodput** (docs/resilience.md) — the same saturating burst
+    against a tight admission bound, once with fire-and-forget clients
+    and once with clients running capped jittered exponential backoff
+    that honors the 503 ``Retry-After`` header.  Gated:
+    ``retry_goodput`` (the retrying cohort completes at least as many
+    requests, and recovers at least one shed).
+  * **Fault recovery** (docs/resilience.md) — an injected decode
+    dispatch failure kills the engine thread mid-burst; the front-end
+    watchdog rebuilds the engine from its factory and resumes in-flight
+    requests.  Gated: ``recovered`` (restart happened AND every request
+    completed full-length), ``accounted`` (exact accounting across the
+    restart) and ``all_pages_freed`` (the rebuilt engine's pool fully
+    restored).
 
 Writes ``experiments/serving/BENCH_load.json`` (``--quick`` → the
 ``_quick`` sibling) for benchmarks/report.py's §Load table and the
@@ -48,6 +61,7 @@ import numpy as np
 from repro.configs.base import get_config
 from repro.models.api import get_model
 from repro.obs import Observability, load_trace, percentile_summary, summarize
+from repro.resilience.faults import FaultPlan, FaultSpec
 from repro.serving.engine import PagedServingEngine, Request
 from repro.serving.frontend import ServingFrontend, http_generate, http_get
 
@@ -83,11 +97,11 @@ def _setup():
 
 
 def _engine(model, params, cfg, *, obs=None, chunk=PREFILL_CHUNK,
-            max_len=MAX_LEN, page_size=PAGE_SIZE):
+            max_len=MAX_LEN, page_size=PAGE_SIZE, faults=None):
     return PagedServingEngine(model, params, cfg, max_slots=MAX_SLOTS,
                               max_len=max_len, page_size=page_size,
                               prefill_bucket=PREFILL_BUCKET,
-                              prefill_chunk=chunk, obs=obs)
+                              prefill_chunk=chunk, obs=obs, faults=faults)
 
 
 # ---------------------------------------------------------------------------
@@ -101,25 +115,48 @@ def _prompts(cfg, n: int, seed: int) -> list[np.ndarray]:
             for _ in range(n)]
 
 
+async def _generate_with_retry(port: int, payload: dict, *, seed: int,
+                               max_retries: int = 8,
+                               max_backoff_s: float = 0.5) -> dict:
+    """Resilient client: on a 503 shed, honor the ``Retry-After`` header
+    (docs/resilience.md) with capped jittered exponential backoff on top,
+    then resubmit.  Returns the final response, annotated with the retry
+    count so the scenario row can report recovered sheds."""
+    rng = np.random.default_rng(seed)
+    r = await http_generate(HOST, port, payload)
+    retries = 0
+    while r["status"] == 503 and retries < max_retries:
+        hinted = float(r.get("headers", {}).get("retry-after", 0.0) or 0.0)
+        backoff = min(max_backoff_s, 0.02 * (2 ** retries))
+        await asyncio.sleep(hinted + float(rng.uniform(0, backoff)))
+        retries += 1
+        r = await http_generate(HOST, port, payload)
+    r["retries"] = retries
+    return r
+
+
 async def _drive(frontend: ServingFrontend, prompts, *, rate: float | None,
-                 max_new: int, seed: int):
+                 max_new: int, seed: int, retry: bool = False):
     """Fire one /generate per prompt (Poisson gaps at ``rate`` req/s, or
     all at once) and gather classified results."""
     loop = asyncio.get_running_loop()
     rng = np.random.default_rng(seed + 1)
 
-    async def one(prompt):
+    async def one(prompt, i):
         t0 = loop.time()
-        r = await http_generate(HOST, frontend.port,
-                                {"prompt": prompt.tolist(),
-                                 "max_new_tokens": max_new})
+        payload = {"prompt": prompt.tolist(), "max_new_tokens": max_new}
+        if retry:
+            r = await _generate_with_retry(frontend.port, payload,
+                                           seed=seed + 100 + i)
+        else:
+            r = await http_generate(HOST, frontend.port, payload)
         r["t_submit"] = t0
         return r
 
     t_start = loop.time()
     tasks = []
-    for p in prompts:
-        tasks.append(asyncio.create_task(one(p)))
+    for i, p in enumerate(prompts):
+        tasks.append(asyncio.create_task(one(p, i)))
         if rate:
             await asyncio.sleep(float(rng.exponential(1.0 / rate)))
     results = await asyncio.gather(*tasks)
@@ -131,19 +168,21 @@ async def _drive(frontend: ServingFrontend, prompts, *, rate: float | None,
 def _scenario_row(name: str, results, wall: float, stats: dict,
                   rate: float | None) -> dict:
     offered = len(results)
-    completed = [r for r in results
-                 if r["status"] == 200 and r["body"] is not None
-                 and not r["body"].get("expired")]
+    ok = [r for r in results
+          if r["status"] == 200 and r["body"] is not None
+          and not r["body"].get("failed")]
+    completed = [r for r in ok if not r["body"].get("expired")]
     shed = [r for r in results if r["status"] == 503]
-    expired = [r for r in results
-               if r["status"] == 200 and r["body"] is not None
-               and r["body"].get("expired")]
+    expired = [r for r in ok if r["body"].get("expired")]
+    failed = [r for r in results
+              if r["status"] == 200 and r["body"] is not None
+              and r["body"].get("failed")]
     ttft = [r["token_times"][0] - r["t_submit"]
             for r in completed if r["token_times"]]
     gaps = [b - a for r in completed
             for a, b in zip(r["token_times"], r["token_times"][1:])]
     tokens = sum(len(r["tokens"]) for r in completed)
-    return {
+    row = {
         "kind": "http",
         "scenario": name,
         "offered": offered,
@@ -151,10 +190,11 @@ def _scenario_row(name: str, results, wall: float, stats: dict,
         "completed": len(completed),
         "shed": len(shed),
         "expired": len(expired),
+        "failed": len(failed),
         # --check contracts: every offered request classified, and the
         # scenario actually served traffic
         "accounted": int(len(completed) + len(shed) + len(expired)
-                         == offered),
+                         + len(failed) == offered),
         "served_any": int(len(completed) > 0),
         "wall_s": round(wall, 4),
         # report-only (wall-clock; does not transfer across machines)
@@ -163,10 +203,14 @@ def _scenario_row(name: str, results, wall: float, stats: dict,
         "client_gap_s": percentile_summary(gaps),
         "frontend": stats.get("frontend", {}),
     }
+    if any("retries" in r for r in results):
+        row["retried"] = sum(1 for r in results if r.get("retries", 0) > 0)
+    return row
 
 
 async def _http_scenario(model, params, cfg, *, name, n, rate, max_new, seed,
-                         max_queue_depth, shed_score, trace_path=None):
+                         max_queue_depth, shed_score, trace_path=None,
+                         retry=False):
     obs = Observability(trace_path=trace_path) if trace_path else None
     eng = _engine(model, params, cfg, obs=obs)
     prompts = _prompts(cfg, n, seed)
@@ -174,13 +218,53 @@ async def _http_scenario(model, params, cfg, *, name, n, rate, max_new, seed,
                                max_queue_depth=max_queue_depth,
                                shed_score=shed_score) as fe:
         results, wall, stats = await _drive(fe, prompts, rate=rate,
-                                            max_new=max_new, seed=seed)
+                                            max_new=max_new, seed=seed,
+                                            retry=retry)
     row = _scenario_row(name, results, wall, stats, rate)
     if obs is not None:
         mem = obs.summary()
         obs.close()
         row["trace_replay_identical"] = int(
             summarize(load_trace(trace_path)) == mem)
+    return row
+
+
+async def _fault_recovery_scenario(model, params, cfg, *, max_new: int) -> dict:
+    """Kill the engine thread mid-burst with an injected decode dispatch
+    failure; the watchdog rebuilds from ``engine_factory`` and resumes
+    the in-flight requests (docs/resilience.md)."""
+    n = 4
+    plan = FaultPlan([FaultSpec("dispatch_raise", op="decode", at=3)])
+    eng = _engine(model, params, cfg, faults=plan)
+    prompts = _prompts(cfg, n, seed=17)
+    async with ServingFrontend(
+            eng, host=HOST, port=0, max_queue_depth=64, shed_score=32.0,
+            engine_factory=lambda: _engine(model, params, cfg),
+            watchdog_interval_s=0.05, watchdog_stall_s=5.0) as fe:
+        results, wall, stats = await _drive(fe, prompts, rate=None,
+                                            max_new=max_new, seed=17)
+        # retires are processed on the engine thread; poll until every
+        # page is back in the rebuilt engine's pool
+        for _ in range(200):
+            if fe.engine.pages_in_use == 0:
+                break
+            await asyncio.sleep(0.02)
+        pages_free = int(fe.engine.pages_in_use == 0)
+        restarts = fe.restarts
+    row = _scenario_row("fault_recovery", results, wall, stats, None)
+    full = [r for r in results
+            if r["status"] == 200 and r["body"] is not None
+            and not r["body"].get("failed")
+            and len(r["tokens"]) == max_new]
+    row.update({
+        "restarts": restarts,
+        "faults_fired": len(plan.fired),
+        # --check contracts: the watchdog actually restarted the engine
+        # AND every request still completed full-length; the rebuilt
+        # engine's page pool is fully restored
+        "recovered": int(restarts >= 1 and len(full) == n),
+        "all_pages_freed": pages_free,
+    })
     return row
 
 
@@ -297,6 +381,29 @@ async def _run(quick: bool) -> list[dict]:
     print(f"burst: {row['completed']}/{row['offered']} completed, "
           f"{row['shed']} shed, replay_identical="
           f"{row['trace_replay_identical']}")
+
+    # retry goodput: same saturating burst against a tight admission
+    # bound, fire-and-forget vs Retry-After-honoring backoff clients
+    pair = {}
+    for name, retry in (("burst_noretry", False), ("burst_retry", True)):
+        pair[name] = await _http_scenario(
+            model, params, cfg, name=name, n=10, rate=None, max_new=max_new,
+            seed=19, max_queue_depth=2, shed_score=32.0, retry=retry)
+        rows.append(pair[name])
+    pair["burst_retry"]["retry_goodput"] = int(
+        pair["burst_retry"]["completed"] >= pair["burst_noretry"]["completed"]
+        and pair["burst_retry"]["completed"] > 0
+        and pair["burst_noretry"]["shed"] > 0)
+    print(f"retry: {pair['burst_retry']['completed']}/10 completed "
+          f"(noretry {pair['burst_noretry']['completed']}/10, "
+          f"{pair['burst_noretry']['shed']} shed), "
+          f"retry_goodput={pair['burst_retry']['retry_goodput']}")
+
+    row = await _fault_recovery_scenario(model, params, cfg, max_new=max_new)
+    rows.append(row)
+    print(f"fault_recovery: {row['completed']}/{row['offered']} completed, "
+          f"restarts={row['restarts']}, recovered={row['recovered']}, "
+          f"all_pages_freed={row['all_pages_freed']}")
 
     probe = _probe(model, params, cfg, repeats=3)
     rows.append(probe)

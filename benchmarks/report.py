@@ -179,14 +179,17 @@ def load_load() -> list[dict]:
 def load_table(rows: list[dict]) -> str:
     """HTTP front-end load scenarios + the chunked-prefill probe
     (load_gen.py → BENCH_load.json).  Offered requests are classified
-    completed / shed (503 admission control) / deadline-expired; TTFT
-    and inter-token gaps are CLIENT-side (over loopback HTTP), goodput
-    counts completed requests' tokens only."""
+    completed / shed (503 admission control) / deadline-expired /
+    failed (engine fault, docs/resilience.md); TTFT and inter-token
+    gaps are CLIENT-side (over loopback HTTP), goodput counts completed
+    requests' tokens only."""
     out = ["| scenario | offered | rate req/s | completed | shed | "
-           "expired | goodput tok/s | TTFT p50 ms | p99 ms | "
+           "expired | failed | goodput tok/s | TTFT p50 ms | p99 ms | "
            "gap p50 ms | p99 ms | accounted |",
-           "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+           "|---|---|---|---|---|---|---|---|---|---|---|---|---|"]
     probe = None
+    retry_rows = {}
+    recovery = None
     for r in rows:
         if r.get("kind") == "probe":
             probe = r
@@ -195,10 +198,31 @@ def load_table(rows: list[dict]) -> str:
         out.append(
             f"| {r['scenario']} | {r['offered']} | {r['rate_req_s']:.0f} | "
             f"{r['completed']} | {r['shed']} | {r['expired']} | "
+            f"{r.get('failed', 0)} | "
             f"{r['goodput_tok_s']:.1f} | "
             f"{1e3 * (t['p50'] or 0):.1f} | {1e3 * (t['p99'] or 0):.1f} | "
             f"{1e3 * (g['p50'] or 0):.1f} | {1e3 * (g['p99'] or 0):.1f} | "
             f"{'yes' if r['accounted'] else 'NO'} |")
+        if r["scenario"] in ("burst_noretry", "burst_retry"):
+            retry_rows[r["scenario"]] = r
+        elif r["scenario"] == "fault_recovery":
+            recovery = r
+    if len(retry_rows) == 2:
+        nr, rt = retry_rows["burst_noretry"], retry_rows["burst_retry"]
+        out += ["",
+                f"Retry goodput (Retry-After backoff clients): "
+                f"{rt['completed']}/{rt['offered']} completed with retries "
+                f"({rt.get('retried', 0)} requests retried) vs "
+                f"{nr['completed']}/{nr['offered']} fire-and-forget "
+                f"({nr['shed']} shed) — retry goodput: "
+                f"{'yes' if rt.get('retry_goodput') else 'NO'}."]
+    if recovery is not None:
+        out += ["",
+                f"Fault recovery (injected decode dispatch failure): "
+                f"{recovery['restarts']} watchdog restart(s), "
+                f"recovered: {'yes' if recovery['recovered'] else 'NO'}, "
+                f"all pages freed: "
+                f"{'yes' if recovery['all_pages_freed'] else 'NO'}."]
     if probe is not None:
         u = probe["victim_gap_unchunked_s"]["p99"]
         c = probe["victim_gap_chunked_s"]["p99"]
@@ -353,8 +377,12 @@ def _load_metrics(rows: list[dict]) -> dict[str, float]:
     """Machine-portable load-artifact metrics: client-side wall-clock
     percentiles and goodput stay report-only; the gate compares the
     per-scenario accounting contracts (every offered request classified,
-    traffic actually served) plus the chunked-prefill probe's contract
-    booleans and the trace replay-identity bit."""
+    traffic actually served), the chunked-prefill probe's contract
+    booleans, the trace replay-identity bit, and the resilience
+    scenarios' retry-goodput / watchdog-recovery booleans
+    (docs/resilience.md)."""
+    flags = ("accounted", "served_any", "trace_replay_identical",
+             "retry_goodput", "recovered", "all_pages_freed")
     out = {}
     for r in rows:
         if r.get("kind") == "probe":
@@ -364,11 +392,9 @@ def _load_metrics(rows: list[dict]) -> dict[str, float]:
                 r["chunked_tokens_identical"])
             continue
         key = r["scenario"]
-        out[f"{key}:accounted"] = float(r["accounted"])
-        out[f"{key}:served_any"] = float(r["served_any"])
-        if "trace_replay_identical" in r:
-            out[f"{key}:trace_replay_identical"] = float(
-                r["trace_replay_identical"])
+        for flag in flags:
+            if flag in r:
+                out[f"{key}:{flag}"] = float(r[flag])
     return out
 
 

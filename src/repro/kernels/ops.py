@@ -38,6 +38,8 @@ __all__ = [
     "use_pallas",
     "resolve_backend",
     "dispatch_resolutions",
+    "KernelCircuitBreaker",
+    "breaker",
     "quantize_per_token",
     "quant_matmul",
     "fused_hadamard_quant",
@@ -77,12 +79,94 @@ def dispatch_resolutions(reset: bool = False) -> dict[str, int]:
     return out
 
 
+class KernelCircuitBreaker:
+    """Per-op circuit breaker over the Pallas kernel path.
+
+    State machine (docs/resilience.md):
+
+        closed ──failure──▶ open ──cooldown resolutions──▶ half_open
+        half_open ──probe succeeds──▶ closed (recovery)
+        half_open ──probe fails────▶ open  (cooldown restarts)
+
+    An op is a dispatch family name ("decode", "prefill").  While an op
+    is ``open``, breaker-aware :func:`resolve_backend` calls return the
+    XLA fallback instead of pallas/interpret; each such resolution
+    counts down toward a ``half_open`` re-probe, where ONE native
+    dispatch is attempted again.  The breaker is process-wide — like the
+    jit caches, every engine over the same kernels shares the verdict —
+    and only consulted when the caller passes ``op=`` (legacy
+    resolutions are untouched).
+    """
+
+    def __init__(self, cooldown: int = 8):
+        self.cooldown = cooldown
+        self._state: dict[str, str] = {}        # op → closed|open|half_open
+        self._until_probe: dict[str, int] = {}
+        self.trips: dict[str, int] = {}
+        self.recoveries: dict[str, int] = {}
+
+    def allow_native(self, op: str) -> bool:
+        """May this resolution take the native (pallas/interpret) path?
+        An ``open`` op counts the refusal toward its re-probe window."""
+        st = self._state.get(op, "closed")
+        if st != "open":
+            return True
+        left = self._until_probe.get(op, 0) - 1
+        if left <= 0:
+            self._state[op] = "half_open"
+            return True
+        self._until_probe[op] = left
+        return False
+
+    def record_failure(self, op: str) -> None:
+        self._state[op] = "open"
+        self._until_probe[op] = self.cooldown
+        self.trips[op] = self.trips.get(op, 0) + 1
+
+    def record_success(self, op: str) -> bool:
+        """Close a half-open op after a successful native probe; returns
+        True exactly when a recovery happened (no-op while closed)."""
+        if self._state.get(op) != "half_open":
+            return False
+        self._state[op] = "closed"
+        self._until_probe[op] = 0
+        self.recoveries[op] = self.recoveries.get(op, 0) + 1
+        return True
+
+    def state(self) -> dict:
+        """Snapshot {op: {state, trips, recoveries, until_probe}} for
+        every op the breaker has ever seen."""
+        ops = (set(self._state) | set(self.trips) | set(self.recoveries))
+        return {op: {"state": self._state.get(op, "closed"),
+                     "trips": self.trips.get(op, 0),
+                     "recoveries": self.recoveries.get(op, 0),
+                     "until_probe": self._until_probe.get(op, 0)}
+                for op in sorted(ops)}
+
+    def reset(self) -> None:
+        self._state.clear()
+        self._until_probe.clear()
+        self.trips.clear()
+        self.recoveries.clear()
+
+
+#: process-wide breaker instance — the engines report/record through it
+#: and ``resolve_backend(op=...)`` consults it (tests reset() around it)
+breaker = KernelCircuitBreaker()
+
+
 def resolve_backend(use_kernels: Literal["auto", "never", "interpret"]
-                    = "auto") -> KernelMode:
+                    = "auto", op: str | None = None) -> KernelMode:
     """Map a ``QuantPolicy.use_kernels`` setting to the executing backend.
 
     This is the single dispatch authority (docs/kernels.md): tests pin
     the table and monkeypatch :func:`use_pallas` to emulate TPU hosts.
+
+    With ``op=`` the process-wide :data:`breaker` is consulted: while
+    that op's circuit is open, a pallas/interpret resolution is forced
+    to "xla" (tallied under ``breaker_fallback`` as well, so
+    :func:`dispatch_resolutions` surfaces how often the fallback was
+    chosen) and counts toward the half-open re-probe.
     """
     if use_kernels == "interpret":
         mode: KernelMode = "interpret"
@@ -92,6 +176,11 @@ def resolve_backend(use_kernels: Literal["auto", "never", "interpret"]
         mode = "pallas" if use_pallas("auto") else "xla"
     else:
         raise ValueError(f"unknown use_kernels setting: {use_kernels!r}")
+    if (op is not None and mode in ("pallas", "interpret")
+            and not breaker.allow_native(op)):
+        mode = "xla"
+        _resolve_counts["breaker_fallback"] = (
+            _resolve_counts.get("breaker_fallback", 0) + 1)
     _resolve_counts[mode] = _resolve_counts.get(mode, 0) + 1
     return mode
 

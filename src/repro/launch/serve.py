@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax
@@ -123,6 +124,16 @@ def main(argv=None):
                          "activations against the calibrated ranges "
                          "(absmax / clip fraction / Eq.-2 difficulty); "
                          "0 = off (no extra dispatches)")
+    ap.add_argument("--nan-guard", action="store_true",
+                    help="per-tick finite check on decode logits: a "
+                         "NaN/Inf row retires its request with status "
+                         "failed (pages freed, guard trace event) instead "
+                         "of streaming garbage (docs/resilience.md)")
+    ap.add_argument("--fault-plan", default="",
+                    help="deterministic fault-injection schedule: a "
+                         "FaultPlan JSON file (or inline JSON list) "
+                         "replayed at the instrumented sites "
+                         "(docs/resilience.md)")
     ap.add_argument("--json", action="store_true",
                     help="emit ONE structured JSON report on stdout "
                          "instead of the human tables")
@@ -198,19 +209,31 @@ def main(argv=None):
                 max_context=args.max_len)
         obs = Observability(trace_path=args.trace_out or None,
                             quant_health=qh)
+        faults = None
+        if args.fault_plan:
+            from repro.resilience.faults import FaultPlan
+
+            text = args.fault_plan
+            if os.path.exists(text):
+                with open(text) as fh:
+                    text = fh.read()
+            faults = FaultPlan.from_json(text)
+            say(f"fault plan armed: {faults}")
         if args.engine == "paged":
             eng = PagedServingEngine(
                 model, params, cfg, max_slots=args.max_slots,
                 max_len=args.max_len, policy=policy,
                 kv_bits=args.kv_bits or None, page_size=args.page_size,
                 n_pages=args.pool_pages or None,
-                prefill_chunk=args.prefill_chunk or None, obs=obs)
+                prefill_chunk=args.prefill_chunk or None, obs=obs,
+                faults=faults, nan_guard=args.nan_guard)
         else:
             engine_cls = (ServingEngine if args.engine == "batched"
                           else PerSlotServingEngine)
             eng = engine_cls(model, params, cfg, max_slots=args.max_slots,
                              max_len=args.max_len, policy=policy,
-                             kv_bits=args.kv_bits or None, obs=obs)
+                             kv_bits=args.kv_bits or None, obs=obs,
+                             faults=faults, nan_guard=args.nan_guard)
         rng = np.random.default_rng(0)
         prompts = [rng.integers(0, cfg.vocab_size, size=(4 + i % 13,))
                    for i in range(args.requests)]

@@ -50,7 +50,10 @@ def summarize(events: list[dict]) -> dict:
     e2e = []
     counts = {"submitted": 0, "admitted": 0, "retired": 0, "preemptions": 0,
               "resumes": 0, "decode_tokens": 0, "prefill_tokens": 0,
-              "ticks": 0, "cancelled": 0, "deadline_expired": 0, "shed": 0}
+              "ticks": 0, "cancelled": 0, "deadline_expired": 0, "shed": 0,
+              "failed": 0, "faults_injected": 0, "guard_trips": 0,
+              "breaker_trips": 0, "breaker_recoveries": 0,
+              "watchdog_restarts": 0, "disconnects": 0}
     qh_events = []
     for ev in events:
         kind = ev["ev"]
@@ -86,11 +89,25 @@ def summarize(events: list[dict]) -> dict:
         elif kind == "retire":
             counts["retired"] += 1
             counts["cancelled"] += bool(ev.get("cancelled"))
+            counts["failed"] += bool(ev.get("failed"))
             e2e.append(ev["e2e_s"])
         elif kind == "deadline":
             counts["deadline_expired"] += 1
         elif kind == "shed":
             counts["shed"] += 1
+        elif kind == "fault":
+            counts["faults_injected"] += 1
+        elif kind == "guard":
+            counts["guard_trips"] += 1
+        elif kind == "breaker":
+            if ev.get("action") == "trip":
+                counts["breaker_trips"] += 1
+            elif ev.get("action") == "recover":
+                counts["breaker_recoveries"] += 1
+        elif kind == "watchdog":
+            counts["watchdog_restarts"] += ev.get("action") == "restart"
+        elif kind == "disconnect":
+            counts["disconnects"] += 1
         elif kind == "quant_health":
             qh_events.append(ev)
     per_token = [b - a for ts in token_ts.values()
@@ -161,6 +178,19 @@ def format_summary(s: dict) -> str:
         lines.append(f"front-end: {c.get('shed', 0)} shed, "
                      f"{c.get('deadline_expired', 0)} deadline-expired, "
                      f"{c.get('cancelled', 0)} cancelled")
+    # resilience outcomes only when any occurred (docs/resilience.md):
+    # clean-run tables are unchanged
+    res_keys = ("faults_injected", "failed", "guard_trips", "breaker_trips",
+                "watchdog_restarts", "disconnects")
+    if any(c.get(k) for k in res_keys):
+        lines.append(
+            f"resilience: {c.get('faults_injected', 0)} faults injected, "
+            f"{c.get('guard_trips', 0)} guard trips "
+            f"({c.get('failed', 0)} failed), "
+            f"{c.get('breaker_trips', 0)} breaker trips "
+            f"({c.get('breaker_recoveries', 0)} recoveries), "
+            f"{c.get('watchdog_restarts', 0)} watchdog restarts, "
+            f"{c.get('disconnects', 0)} disconnects")
     lines += [
         "",
         "| span | count | mean s | p50 s | p90 s | p99 s | max s |",

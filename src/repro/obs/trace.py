@@ -20,6 +20,19 @@ full schema table):
     shed         queue_depth, occupancy, score — admission control
                  rejected a request before it reached the engine
     quant_health tick, uid, context_len, modules
+    fault        site [, uid, op, tick] — a FaultPlan spec fired at an
+                 instrumented site (repro.resilience.faults)
+    guard        uid, slot, tick, reason [, module, layer, difficulty] —
+                 the numerical guard retired one slot as ``failed``,
+                 citing the worst Eq.-2-difficulty layer when the
+                 quant-health tap is on
+    breaker      op, action ("trip"/"recover") [, error] — the kernel
+                 circuit breaker moved an op to/from the XLA fallback
+    watchdog     action ("engine_error"/"restart"/"give_up") [, reason,
+                 error, n_resumed, restarts] — front-end engine-thread
+                 supervision (docs/resilience.md)
+    disconnect   uid, n_streamed — a client connection dropped
+                 mid-stream; the request was cancelled in the engine
 
 The tracer buffers events in memory (``events``) and, when constructed
 with a path, streams each event as one JSON line — ``repro.obs
@@ -38,7 +51,8 @@ import time
 __all__ = ["Tracer", "load_trace"]
 
 EVENT_KINDS = ("submit", "admit", "prefill", "first_token", "token", "tick",
-               "preempt", "retire", "deadline", "shed", "quant_health")
+               "preempt", "retire", "deadline", "shed", "quant_health",
+               "fault", "guard", "breaker", "watchdog", "disconnect")
 
 
 class Tracer:

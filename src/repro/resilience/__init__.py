@@ -1,0 +1,17 @@
+"""Resilience layer: deterministic fault injection + recovery plumbing.
+
+``repro.resilience.faults`` is the injection plane (docs/resilience.md);
+the consumers live where the faults land — numerical guards and fault
+sites in ``repro.serving.engine``, the kernel circuit breaker in
+``repro.kernels.ops``, and the watchdog/recovery path in
+``repro.serving.frontend``.
+"""
+
+from repro.resilience.faults import (
+    SITES,
+    FaultInjected,
+    FaultPlan,
+    FaultSpec,
+)
+
+__all__ = ["SITES", "FaultInjected", "FaultPlan", "FaultSpec"]

@@ -1,0 +1,142 @@
+"""Deterministic, seeded fault-injection plane for the serving stack.
+
+A :class:`FaultPlan` is a SCHEDULE: each :class:`FaultSpec` names a
+fault site, an arrival window (``at``/``count``) and optional uid/op
+filters.  Code under test calls ``plan.fire(site, **ctx)`` at the
+instrumented sites; the call returns the matching spec (the fault fires)
+or ``None``.  Arrivals are counted PER SPEC over the calls that match
+its filters, so two specs at the same site trigger independently and a
+plan replays identically run after run — chaos tests rely on that to
+compare a faulted run against its fault-free twin.
+
+Sites (docs/resilience.md has the full table):
+
+    dispatch_raise    a jitted kernel dispatch raises (engine: before
+                      the call, so no donated buffer is half-consumed)
+    nan_logits        one slot's decode logits row turns NaN (engine:
+                      post-dispatch poisoning — other rows untouched)
+    page_alloc_fail   a page allocation reports an empty pool (engine:
+                      admission backpressure / mid-decode stall paths)
+    slow_tick         the engine tick blocks for ``delay_s`` (watchdog
+                      stall detection)
+    client_disconnect the front-end's writer raises mid-stream (the
+                      disconnect-cancels-request path)
+
+Zero-overhead-when-off contract: holders keep ``faults=None`` and guard
+every site with ``self._faults is not None`` — the same shape as the obs
+hooks (tests/test_resilience.py pins token identity and dispatch counts
+against a no-plan run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+__all__ = ["SITES", "FaultSpec", "FaultPlan", "FaultInjected"]
+
+SITES = ("dispatch_raise", "nan_logits", "page_alloc_fail", "slow_tick",
+         "client_disconnect")
+
+
+class FaultInjected(RuntimeError):
+    """Raised by a ``dispatch_raise``/``client_disconnect`` site when its
+    spec fires — distinguishable from organic failures in logs, handled
+    identically by the recovery machinery (that is the point)."""
+
+    def __init__(self, site: str, detail: str = ""):
+        super().__init__(f"injected fault at {site}" +
+                         (f": {detail}" if detail else ""))
+        self.site = site
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One scheduled fault.
+
+    ``at``/``count``: fire on matching arrivals ``at .. at+count-1``
+    (0-based, counted per spec over calls passing the filters).
+    ``uid``/``op``: only arrivals carrying that uid / op name match;
+    ``None`` matches everything.  ``delay_s``: sleep length for
+    ``slow_tick``."""
+
+    site: str
+    at: int = 0
+    count: int = 1
+    uid: int | None = None
+    op: str | None = None
+    delay_s: float = 0.0
+
+    def __post_init__(self):
+        if self.site not in SITES:
+            raise ValueError(f"unknown fault site: {self.site!r} "
+                             f"(sites: {SITES})")
+
+    def matches(self, uid, op) -> bool:
+        return ((self.uid is None or self.uid == uid)
+                and (self.op is None or self.op == op))
+
+
+class FaultPlan:
+    """A replayable schedule of faults over the named sites.
+
+    ``fire(site, uid=..., op=...)`` advances every spec of that site
+    whose filters match the call and returns the first spec inside its
+    arrival window (else ``None``).  ``fired`` records every trigger
+    (site + context + arrival index) so tests can assert the schedule
+    actually executed.
+    """
+
+    def __init__(self, specs: list[FaultSpec] | tuple[FaultSpec, ...] = ()):
+        self.specs = list(specs)
+        self._arrivals: list[int] = [0] * len(self.specs)
+        self.fired: list[dict] = []
+
+    def __repr__(self) -> str:
+        return f"FaultPlan({self.specs!r})"
+
+    def fire(self, site: str, *, uid: int | None = None,
+             op: str | None = None, **ctx) -> FaultSpec | None:
+        hit = None
+        for i, spec in enumerate(self.specs):
+            if spec.site != site or not spec.matches(uid, op):
+                continue
+            n = self._arrivals[i]
+            self._arrivals[i] = n + 1
+            if hit is None and spec.at <= n < spec.at + spec.count:
+                hit = spec
+                self.fired.append({"site": site, "uid": uid, "op": op,
+                                   "arrival": n, **ctx})
+        return hit
+
+    # -- construction helpers ----------------------------------------------
+
+    @classmethod
+    def random(cls, seed: int, *, n_faults: int = 3, sites=SITES,
+               uids=(), max_at: int = 24, max_count: int = 2,
+               delay_s: float = 0.0) -> "FaultPlan":
+        """Seeded random schedule (the chaos suite's generator): every
+        draw comes from one ``default_rng(seed)`` stream, so the same
+        seed always yields the same plan."""
+        rng = np.random.default_rng(seed)
+        specs = []
+        for _ in range(int(n_faults)):
+            site = sites[int(rng.integers(len(sites)))]
+            uid = (int(rng.choice(np.asarray(uids)))
+                   if len(uids) and rng.random() < 0.5 else None)
+            specs.append(FaultSpec(
+                site=site, at=int(rng.integers(max_at)),
+                count=int(rng.integers(1, max_count + 1)), uid=uid,
+                delay_s=delay_s if site == "slow_tick" else 0.0))
+        return cls(specs)
+
+    # -- serde (serve.py --fault-plan) --------------------------------------
+
+    def to_json(self) -> str:
+        return json.dumps([dataclasses.asdict(s) for s in self.specs])
+
+    @classmethod
+    def from_json(cls, text: str) -> "FaultPlan":
+        return cls([FaultSpec(**d) for d in json.loads(text)])

@@ -54,6 +54,7 @@ from repro.launch.roofline import (
 )
 from repro.models import common as cm
 from repro.obs import MetricsRegistry, Observability
+from repro.resilience.faults import FaultInjected, FaultPlan
 
 __all__ = ["Request", "ServingEngine", "PagedServingEngine",
            "PerSlotServingEngine"]
@@ -68,6 +69,7 @@ class Request:
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
     cancelled: bool = False              # set by engine.cancel()
+    failed: bool = False                 # set by the numerical guard
 
 
 @functools.lru_cache(maxsize=None)
@@ -143,13 +145,19 @@ class _EngineBase:
     def __init__(self, model, params, cfg: ModelConfig, *, max_slots: int = 4,
                  max_len: int = 256, policy: QuantPolicy | None = None,
                  eos_id: int = -1, kv_bits: int | None = None,
-                 obs: Observability | None = None):
+                 obs: Observability | None = None,
+                 faults: FaultPlan | None = None, nan_guard: bool = False):
         self.model, self.params, self.cfg = model, params, cfg
         self.policy = policy
         self.max_slots, self.max_len = max_slots, max_len
         self.eos_id = eos_id
         self.kv_bits = kv_bits
         self.obs = obs
+        # resilience layer (docs/resilience.md): both OPT-IN with the
+        # obs-hook zero-overhead contract — faults=None / nan_guard=False
+        # cost one attribute check per site and change nothing else
+        self._faults = faults
+        self._nan_guard = nan_guard
         self._metrics = obs.registry if obs is not None else MetricsRegistry()
         self._tracer = obs.tracer if obs is not None else None
         self._qhealth = obs.quant_health if obs is not None else None
@@ -173,6 +181,18 @@ class _EngineBase:
         self._per_request: dict[int, dict] = {}   # uid → token counts
         self.run_stats: dict = {}        # filled by run()
         self._backend = self.kernel_backend     # resolved once: attribution
+        # circuit-breaker fallback jits (same math, use_kernels="never"
+        # lowering) — only built when the native path is a kernel path,
+        # so a trip has somewhere safe to land (docs/resilience.md)
+        self._fb_policy = None
+        if policy is not None and self._backend in ("pallas", "interpret"):
+            self._fb_policy = dataclasses.replace(policy,
+                                                  use_kernels="never")
+        if self._fb_policy is not None:
+            self._prefill_fb, self._decode_fb = _jitted(model, cfg,
+                                                        self._fb_policy)
+        else:
+            self._prefill_fb = self._decode_fb = None
         self._init_caches()
 
     # registry-backed views of the legacy counter attributes (run_stats
@@ -216,6 +236,32 @@ class _EngineBase:
             self._tracer.emit("submit", ts=self._submit_ts[req.uid],
                               uid=req.uid, prompt_len=len(req.prompt))
 
+    def resubmit(self, req: Request):
+        """Re-admit a request that already streamed tokens on a PREVIOUS
+        engine instance — the front-end watchdog's recovery path.
+        Admission re-prefills ``_resume_ctx`` (prompt + tokens so far)
+        exactly like a preemption resume, so the greedy continuation is
+        token-identical and already-streamed tokens are neither repeated
+        nor lost; obs bookkeeping marks the re-admission ``resumed``."""
+        if req.out_tokens:
+            self._seen_uids.add(req.uid)
+        self.submit(req)
+
+    @staticmethod
+    def _resume_ctx(req: Request) -> np.ndarray:
+        """Full re-prefill context for a (possibly resumed) request: the
+        ORIGINAL prompt plus every token generated so far.  Computed at
+        admission time — ``_preempt_youngest`` used to fold
+        ``out_tokens`` into ``req.prompt`` in place, which corrupted the
+        caller-visible Request (retired requests came back with a prompt
+        they never submitted, and retire-event ``prompt_len`` inflated),
+        and a SECOND preemption of the same request re-folded the
+        already-folded tokens, duplicating context."""
+        if not req.out_tokens:
+            return np.asarray(req.prompt, np.int64)
+        return np.concatenate([np.asarray(req.prompt, np.int64),
+                               np.asarray(req.out_tokens, np.int64)])
+
     def _finished(self, req: Request, tok: int) -> bool:
         return tok == self.eos_id or len(req.out_tokens) >= req.max_new_tokens
 
@@ -249,6 +295,8 @@ class _EngineBase:
             now = self._clock()
             e2e = now - self._submit_ts.get(req.uid, now)
             extra = {"cancelled": True} if req.cancelled else {}
+            if req.failed:
+                extra["failed"] = True
             self._tracer.emit("retire", ts=now, uid=req.uid,
                               prompt_len=len(req.prompt),
                               decode_tokens=len(req.out_tokens), e2e_s=e2e,
@@ -286,6 +334,135 @@ class _EngineBase:
         """Clear a cancelled request's slot.  The dense engines just
         vacate it (admission overwrites the slot cache wholesale)."""
         self.slots[slot] = None
+
+    # -- resilience layer (docs/resilience.md) ------------------------------
+
+    def _fire(self, site: str, **ctx):
+        """Advance the fault plan at one site (callers pre-check
+        ``self._faults is not None``); a triggered spec also lands a
+        ``fault`` trace event so chaos-run traces are self-describing."""
+        spec = self._faults.fire(site, **ctx)
+        if spec is not None and self.obs is not None:
+            self._tracer.emit("fault", ts=self._clock(), site=site, **ctx)
+        return spec
+
+    def _fire_slow_tick(self):
+        spec = self._fire("slow_tick", tick=self._step)
+        if spec is not None and spec.delay_s > 0:
+            time.sleep(spec.delay_s)
+
+    def _dispatch_guarded(self, op: str, native, fallback):
+        """Issue ONE jitted dispatch through the fault plane and the
+        process-wide kernel circuit breaker (``repro.kernels.ops``).
+
+        ``native``/``fallback`` are zero-arg closures capturing their
+        argument pytrees late — a retry of a donating dispatch (paged
+        prefill) must re-materialize the donated cache.  An injected
+        ``dispatch_raise`` fires BEFORE the call for the same reason: no
+        donated buffer is ever half-consumed by a scheduled fault.
+        Returns ``(outputs, executed_backend)``.
+
+        With no fallback (bf16 engines, ``use_kernels="never"``, auto on
+        a non-TPU host) a failure propagates: containment moves up to
+        the front-end watchdog.  Otherwise a native failure trips the
+        breaker for ``op`` and the tick completes on the XLA fallback
+        jit; while the circuit is open every dispatch rides the fallback
+        (counted under ``dispatch.fallback.*``) until a half-open probe
+        succeeds and closes it again.
+        """
+        if fallback is None:
+            if self._faults is not None and self._fire("dispatch_raise",
+                                                       op=op):
+                raise FaultInjected("dispatch_raise", op)
+            return native(), self._backend
+        from repro.kernels import ops
+
+        mode = ops.resolve_backend(self.policy.use_kernels, op=op)
+        if mode == "xla":
+            # circuit open: ride the fallback until the breaker re-probes
+            self._metrics.counter(f"dispatch.fallback.{op}").inc()
+            if self._faults is not None and self._fire("dispatch_raise",
+                                                       op=op):
+                raise FaultInjected("dispatch_raise", f"{op} (fallback)")
+            return fallback(), "xla"
+        try:
+            if self._faults is not None and self._fire("dispatch_raise",
+                                                       op=op):
+                raise FaultInjected("dispatch_raise", op)
+            out = native()
+        except Exception as exc:  # noqa: BLE001 — any dispatch failure trips
+            ops.breaker.record_failure(op)
+            self._metrics.counter("engine.breaker_trips").inc()
+            self._metrics.counter(f"dispatch.fallback.{op}").inc()
+            if self.obs is not None:
+                self._tracer.emit("breaker", ts=self._clock(), op=op,
+                                  action="trip", error=repr(exc))
+            return fallback(), "xla"
+        if ops.breaker.record_success(op):
+            self._metrics.counter("engine.breaker_recoveries").inc()
+            if self.obs is not None:
+                self._tracer.emit("breaker", ts=self._clock(), op=op,
+                                  action="recover")
+        return out, mode
+
+    def _poison_logits(self, logits, active: list[int]):
+        """``nan_logits`` fault site: poison scheduled slots' logits
+        rows ON DEVICE, post-dispatch — other rows' values are the exact
+        arrays the fault-free run produced, which is what makes the
+        chaos suite's bit-identical-survivors invariant provable."""
+        for i in active:
+            if self._fire("nan_logits", uid=self.slots[i].uid,
+                          tick=self._step):
+                logits = logits.at[i].set(jnp.nan)
+        return logits
+
+    def _guard_rows(self, logits, active: list[int]) -> list[int]:
+        """Opt-in per-tick finite check over the active rows' last-token
+        logits; returns the slots to fail this tick (empty when the
+        guard is off — the common path costs one attribute check)."""
+        if not self._nan_guard or not active:
+            return []
+        finite = np.isfinite(np.asarray(logits[:, -1],
+                                        np.float32)).all(axis=-1)
+        return [i for i in active if not finite[i]]
+
+    def _fail_slot(self, slot: int, reason: str = "nonfinite_logits"):
+        """Numerical-guard containment: retire ONE slot with status
+        ``failed`` — pages freed through ``_evict_slot`` — and escalate
+        a quant-health-style ``guard`` trace event citing the layer
+        whose Eq.-2 difficulty is worst over this request's context (the
+        runtime counterpart of the passive ``quant_health`` sampler).
+        Every other slot is untouched: the guard reads only the failing
+        row."""
+        req = self.slots[slot]
+        req.failed = True
+        self._metrics.counter("engine.requests_failed").inc()
+        if self.obs is not None:
+            self._tracer.emit("guard", ts=self._clock(), uid=req.uid,
+                              slot=slot, tick=self.ticks, reason=reason,
+                              **self._guard_escalation(req))
+        self._retire(req)
+        self._evict_slot(slot)
+
+    def _guard_escalation(self, req: Request) -> dict:
+        """Name the worst-difficulty (module, layer) for the failing
+        request's context via the quant-health tap forward — only when
+        the sampler is attached (obs opt-in), else the guard event
+        carries just uid/slot/reason."""
+        if self._qhealth is None:
+            return {}
+        ctx = np.concatenate([np.asarray(req.prompt, np.int64),
+                              np.asarray(req.out_tokens, np.int64)])
+        rec = self._qhealth.sample(self.ticks, req.uid, ctx)
+        worst = (None, -1, float("-inf"))
+        for mod, sig in rec["modules"].items():
+            for layer, diff in enumerate(sig["difficulty"]):
+                if diff > worst[2]:
+                    worst = (mod, layer, diff)
+        if worst[0] is None:
+            return {}
+        return {"module": worst[0], "layer": worst[1],
+                "difficulty": float(worst[2])}
 
     @property
     def prompt_capacity(self) -> int:
@@ -329,11 +506,14 @@ class _EngineBase:
         self._metrics.histogram("engine.ttft_s").observe(ttft)
         self._tracer.emit("first_token", ts=now, uid=req.uid, ttft_s=ttft)
 
-    def _attr_decode_dispatch(self, n_rows: int):
+    def _attr_decode_dispatch(self, n_rows: int, backend: str | None = None):
         """Per-backend decode-dispatch count + modeled HBM bytes
         (launch/roofline.py) — the byte attribution only when obs is on
-        (it walks the active slots for the mean context length)."""
-        self._metrics.counter(f"dispatch.decode.{self._backend}").inc()
+        (it walks the active slots for the mean context length).
+        ``backend`` is the EXECUTED mode when the circuit breaker may
+        have rerouted the dispatch (default: the engine's native)."""
+        self._metrics.counter(
+            f"dispatch.decode.{backend or self._backend}").inc()
         if self.obs is None:
             return
         ctx = [len(r.prompt) + len(r.out_tokens)
@@ -346,10 +526,13 @@ class _EngineBase:
             kv_bits=self.kv_bits,
             backend="xla" if pa == "xla" else "pallas")
         self._metrics.counter(
-            f"hbm_modeled_bytes.decode.{self._backend}").inc(nbytes)
+            f"hbm_modeled_bytes.decode.{backend or self._backend}").inc(
+            nbytes)
 
-    def _attr_prefill_dispatch(self, n_rows: int, padded_len: int):
-        self._metrics.counter(f"dispatch.prefill.{self._backend}").inc()
+    def _attr_prefill_dispatch(self, n_rows: int, padded_len: int,
+                               backend: str | None = None):
+        self._metrics.counter(
+            f"dispatch.prefill.{backend or self._backend}").inc()
         if self.obs is None:
             return
         nbytes = serving_prefill_hbm_bytes(
@@ -357,7 +540,8 @@ class _EngineBase:
             weight_bits=self.policy.weight_bits if self.policy else None,
             kv_bits=self.kv_bits)
         self._metrics.counter(
-            f"hbm_modeled_bytes.prefill.{self._backend}").inc(nbytes)
+            f"hbm_modeled_bytes.prefill.{backend or self._backend}").inc(
+            nbytes)
 
     def _maybe_quant_health(self):
         """Opt-in every-N-ticks activation health probe over the active
@@ -386,10 +570,15 @@ class _EngineBase:
         # a truncated run (max_ticks exhausted) leaves requests in slots
         # or requeued: fold their in-flight decode counts in so the
         # aggregate never under-reports work actually done
+        from repro.kernels import ops
+
         for req in list(self.slots) + list(self.queue):
             if req is not None and req.uid in self._per_request:
                 self._per_request[req.uid]["decode"] = len(req.out_tokens)
         return {
+            "requests_failed": int(
+                self._metrics.counter("engine.requests_failed").value),
+            "breaker": ops.breaker.state(),
             "requests": len(self._per_request),
             "prefill_tokens": int(self._c_prefill_tokens.value),
             "decode_tokens": sum(r["decode"]
@@ -414,14 +603,22 @@ class _EngineBase:
                 req = self.queue.popleft()
                 if self.obs is not None:
                     t0 = self._obs_admitted(req, i)
-                slot_cache = self.model.make_cache(self.cfg, 1, self.max_len,
-                                                   bits=self.kv_bits)
-                toks = jnp.asarray(req.prompt[None, :], jnp.int32)
-                logits, slot_cache = self._prefill(self.params, toks,
-                                                   slot_cache)
+                # prefill the RESUME context (prompt + generated) — for a
+                # fresh request that is just the prompt; a watchdog
+                # re-admission replays its streamed tokens too
+                ctx = self._resume_ctx(req)
+                fresh = self.model.make_cache(self.cfg, 1, self.max_len,
+                                              bits=self.kv_bits)
+                toks = jnp.asarray(ctx[None, :], jnp.int32)
+                (logits, slot_cache), used = self._dispatch_guarded(
+                    "prefill",
+                    lambda t=toks, c=fresh: self._prefill(self.params, t, c),
+                    None if self._prefill_fb is None else
+                    (lambda t=toks, c=fresh: self._prefill_fb(self.params,
+                                                              t, c)))
                 self._c_prefill.inc()
-                self._attr_prefill_dispatch(1, len(req.prompt))
-                self._count_prefill(req, len(req.prompt))
+                self._attr_prefill_dispatch(1, len(ctx), used)
+                self._count_prefill(req, len(ctx))
                 nxt = int(_sample_one(logits[:, -1], req.temperature,
                                       self._step, req.uid)[0])
                 if self.obs is not None:
@@ -430,8 +627,8 @@ class _EngineBase:
                     self._metrics.histogram("engine.prefill_s").observe(
                         now - t0)
                     self._tracer.emit("prefill", ts=now, n_requests=1,
-                                      n_tokens=len(req.prompt), rows=1,
-                                      padded_len=len(req.prompt),
+                                      n_tokens=len(ctx), rows=1,
+                                      padded_len=len(ctx),
                                       dur_s=now - t0)
                     self._obs_prefill_token(req)
                 self._append_token(req, nxt)
@@ -498,6 +695,8 @@ class ServingEngine(_EngineBase):
         """Admit + decode one token for every active slot with a SINGLE
         (max_slots, 1) jitted dispatch. Returns the number of active
         sequences."""
+        if self._faults is not None:
+            self._fire_slow_tick()
         self._admit()
         self._step += 1
         active = [i for i, r in enumerate(self.slots) if r is not None]
@@ -515,22 +714,37 @@ class ServingEngine(_EngineBase):
         # is never sampled into a request, and admission overwrites their
         # slot cache wholesale
         t0 = self._clock() if self.obs is not None else 0.0
-        logits, self.cache = self._decode(self.params, jnp.asarray(last),
-                                          self.cache)
+        last_j = jnp.asarray(last)
+        (logits, self.cache), used = self._dispatch_guarded(
+            "decode",
+            lambda: self._decode(self.params, last_j, self.cache),
+            None if self._decode_fb is None else
+            (lambda: self._decode_fb(self.params, last_j, self.cache)))
         self._c_decode.inc()
         self._c_ticks.inc()
-        self._attr_decode_dispatch(self.max_slots)
+        self._attr_decode_dispatch(self.max_slots, used)
+        if self._faults is not None:
+            logits = self._poison_logits(logits, active)
+        failed = self._guard_rows(logits, active)
         toks = np.asarray(self._sample_batch(logits[:, -1], temps, uids))
         if self.obs is not None:
             # toks materialized ⇒ the decode dispatch completed
             now = self._clock()
             self._metrics.histogram("engine.tick_s").observe(now - t0)
+            # failed rows stream no token, so they are excluded from the
+            # tick's uid list (summarize counts one decode token per uid)
             self._tracer.emit("tick", ts=now, tick=self.ticks,
                               n_active=len(active),
-                              uids=[self.slots[i].uid for i in active],
+                              uids=[self.slots[i].uid for i in active
+                                    if i not in failed],
                               dur_s=now - t0)
         for i in active:
             req = self.slots[i]
+            if i in failed:
+                # guard containment: no token appended from a non-finite
+                # row — the request retires failed, others are untouched
+                self._fail_slot(i)
+                continue
             nxt = int(toks[i])
             self._append_token(req, nxt)
             if self._finished(req, nxt):
@@ -589,14 +803,19 @@ class PagedServingEngine(ServingEngine):
                  eos_id: int = -1, kv_bits: int | None = None,
                  page_size: int = 64, n_pages: int | None = None,
                  prefill_bucket: int = 16, prefill_chunk: int | None = None,
-                 obs: Observability | None = None):
+                 obs: Observability | None = None,
+                 faults: FaultPlan | None = None, nan_guard: bool = False):
         self.page_size = page_size
         self.prefill_bucket = prefill_bucket
         self._n_pages_arg = n_pages
         super().__init__(model, params, cfg, max_slots=max_slots,
                          max_len=max_len, policy=policy, eos_id=eos_id,
-                         kv_bits=kv_bits, obs=obs)
+                         kv_bits=kv_bits, obs=obs, faults=faults,
+                         nan_guard=nan_guard)
         self._prefill_paged = _jitted_paged_prefill(model, cfg, policy)
+        self._prefill_paged_fb = (
+            _jitted_paged_prefill(model, cfg, self._fb_policy)
+            if self._fb_policy is not None else None)
         self._admit_seq = 0
         self._admitted_at = [0] * max_slots
         # chunked prefill: prompts longer than ``prefill_chunk`` stream
@@ -612,6 +831,9 @@ class PagedServingEngine(ServingEngine):
                                      False))
         if self._chunked:
             self._prefill_cont = _jitted_chunked_prefill(model, cfg, policy)
+            self._prefill_cont_fb = (
+                _jitted_chunked_prefill(model, cfg, self._fb_policy)
+                if self._fb_policy is not None else None)
 
     # -- memory layer -------------------------------------------------------
 
@@ -685,21 +907,6 @@ class PagedServingEngine(ServingEngine):
             return 0
         return cm.pages_per_slot(n_tokens, self.page_size)
 
-    @staticmethod
-    def _resume_ctx(req: Request) -> np.ndarray:
-        """Full re-prefill context for a (possibly resumed) request: the
-        ORIGINAL prompt plus every token generated so far.  Computed at
-        admission time — ``_preempt_youngest`` used to fold
-        ``out_tokens`` into ``req.prompt`` in place, which corrupted the
-        caller-visible Request (retired requests came back with a prompt
-        they never submitted, and retire-event ``prompt_len`` inflated),
-        and a SECOND preemption of the same request re-folded the
-        already-folded tokens, duplicating context."""
-        if not req.out_tokens:
-            return np.asarray(req.prompt, np.int64)
-        return np.concatenate([np.asarray(req.prompt, np.int64),
-                               np.asarray(req.out_tokens, np.int64)])
-
     @property
     def prompt_capacity(self) -> int:
         cap = self.max_len
@@ -751,8 +958,21 @@ class PagedServingEngine(ServingEngine):
             req = self.queue[0]
             ctx = self._resume_ctx(req)
             need = self._pages_needed(len(ctx))
-            if need > len(self._free) and self._pt is not None:
-                break                    # backpressure: FIFO head waits
+            if self._pt is not None:
+                if need > min(self.n_pages, self.table_width):
+                    # a resumed context that can NEVER fit again (watchdog
+                    # re-admission can outgrow a small pool): retire
+                    # truncated, exactly like _preempt_youngest — leaving
+                    # it at the FIFO head would starve everything behind
+                    self.queue.popleft()
+                    self._retire(req)
+                    continue
+                if need > len(self._free):
+                    break                # backpressure: FIFO head waits
+                if (self._faults is not None
+                        and self._fire("page_alloc_fail", uid=req.uid,
+                                       op="admit")):
+                    break                # injected exhaustion: head waits
             self.queue.popleft()
             slot = free_slots.pop(0)
             if self._pt is not None:
@@ -794,11 +1014,20 @@ class PagedServingEngine(ServingEngine):
             t0 = self._clock()
             for slot, req, _ in batch:
                 self._obs_admitted(req, slot)
-        logits, self.cache = self._prefill_paged(
-            self.params, jnp.asarray(toks), jnp.asarray(lens),
-            self._host_state_cache(), jnp.asarray(rows))
+        toks_j, lens_j = jnp.asarray(toks), jnp.asarray(lens)
+        rows_j = jnp.asarray(rows)
+        # the cache is DONATED: each closure materializes its own host-
+        # state pytree, so a breaker retry never touches consumed buffers
+        (logits, self.cache), used = self._dispatch_guarded(
+            "prefill",
+            lambda: self._prefill_paged(self.params, toks_j, lens_j,
+                                        self._host_state_cache(), rows_j),
+            None if self._prefill_paged_fb is None else
+            (lambda: self._prefill_paged_fb(self.params, toks_j, lens_j,
+                                            self._host_state_cache(),
+                                            rows_j)))
         self._c_prefill.inc()
-        self._attr_prefill_dispatch(n_pad, s_pad)
+        self._attr_prefill_dispatch(n_pad, s_pad, used)
         if self.obs is not None:
             logits.block_until_ready()
             now = self._clock()
@@ -851,12 +1080,19 @@ class PagedServingEngine(ServingEngine):
             starts[r] = done
             rows[r] = slot
         t0 = self._clock() if self.obs is not None else 0.0
-        logits, self.cache = self._prefill_cont(
-            self.params, jnp.asarray(toks), jnp.asarray(lens),
-            jnp.asarray(starts), self._host_state_cache(),
-            jnp.asarray(rows))
+        toks_j, lens_j = jnp.asarray(toks), jnp.asarray(lens)
+        starts_j, rows_j = jnp.asarray(starts), jnp.asarray(rows)
+        (logits, self.cache), used = self._dispatch_guarded(
+            "prefill",
+            lambda: self._prefill_cont(self.params, toks_j, lens_j, starts_j,
+                                       self._host_state_cache(), rows_j),
+            None if self._prefill_cont_fb is None else
+            (lambda: self._prefill_cont_fb(self.params, toks_j, lens_j,
+                                           starts_j,
+                                           self._host_state_cache(),
+                                           rows_j)))
         self._c_prefill.inc()
-        self._attr_prefill_dispatch(n_pad, chunk)
+        self._attr_prefill_dispatch(n_pad, chunk, used)
         if self.obs is not None:
             logits.block_until_ready()
             now = self._clock()
@@ -914,6 +1150,8 @@ class PagedServingEngine(ServingEngine):
     # -- one engine tick ----------------------------------------------------
 
     def step(self) -> int:
+        if self._faults is not None:
+            self._fire_slow_tick()
         self._admit()
         self._step += 1
         # one bounded prefill chunk per tick, BEFORE the decode dispatch:
@@ -933,6 +1171,16 @@ class PagedServingEngine(ServingEngine):
             if self._pt is not None:
                 pi = self._len[i] // self.page_size
                 if pi < self.table_width and self._pt[i, pi] < 0:
+                    # an injected allocation failure behaves exactly like
+                    # a genuinely exhausted pool: the slot stalls this
+                    # tick (its tokens are unaffected — decode depends
+                    # only on its own cache), and the existing stall /
+                    # preempt machinery takes over
+                    if (self._faults is not None
+                            and self._fire("page_alloc_fail",
+                                           uid=self.slots[i].uid,
+                                           op="grow")):
+                        continue
                     if not self._free:
                         continue
                     self._pt[i, pi] = self._free.pop()
@@ -951,11 +1199,17 @@ class PagedServingEngine(ServingEngine):
             uids[i] = req.uid
         t_alloc = self._clock() if self.obs is not None else 0.0
         before = self._host_state_cache()
-        logits, self.cache = self._decode(self.params, jnp.asarray(last),
-                                          before)
+        last_j = jnp.asarray(last)
+        # decode is NOT donated, so ``before`` stays valid for both the
+        # breaker's fallback retry and the ssm rollback below
+        (logits, self.cache), used = self._dispatch_guarded(
+            "decode",
+            lambda: self._decode(self.params, last_j, before),
+            None if self._decode_fb is None else
+            (lambda: self._decode_fb(self.params, last_j, before)))
         self._c_decode.inc()
         self._c_ticks.inc()
-        self._attr_decode_dispatch(self.max_slots)
+        self._attr_decode_dispatch(self.max_slots, used)
         self._metrics.counter(
             f"dispatch.paged_attention.{self.paged_attention_backend}").inc()
         stalled = [i for i in active if i not in ready]
@@ -968,18 +1222,29 @@ class PagedServingEngine(ServingEngine):
                 self.cache,
                 ssm=self.cache.ssm.at[:, sl].set(before.ssm[:, sl]),
                 conv=self.cache.conv.at[:, sl].set(before.conv[:, sl]))
+        if self._faults is not None:
+            logits = self._poison_logits(logits, ready)
+        failed = self._guard_rows(logits, ready)
         toks = np.asarray(self._sample_batch(logits[:, -1], temps, uids))
         if self.obs is not None:
-            # toks materialized ⇒ the decode dispatch completed
+            # toks materialized ⇒ the decode dispatch completed; failed
+            # rows stream no token so they leave the tick's uid list
             now = self._clock()
             self._metrics.histogram("engine.tick_s").observe(now - t0)
             self._tracer.emit("tick", ts=now, tick=self.ticks,
                               n_active=len(ready),
-                              uids=[self.slots[i].uid for i in ready],
+                              uids=[self.slots[i].uid for i in ready
+                                    if i not in failed],
                               n_stalled=len(stalled), dur_s=now - t0,
                               alloc_dur_s=t_alloc - t0)
         for i in ready:
             req = self.slots[i]
+            if i in failed:
+                # guard containment: retire failed, pages back to the
+                # pool — co-scheduled slots' tokens are bit-identical to
+                # a fault-free run (the guard read only this row)
+                self._fail_slot(i)
+                continue
             self._len[i] += 1
             nxt = int(toks[i])
             self._append_token(req, nxt)
@@ -1005,6 +1270,8 @@ class PerSlotServingEngine(_EngineBase):
         self.caches[slot] = cache
 
     def step(self) -> int:
+        if self._faults is not None:
+            self._fire_slow_tick()
         self._admit()
         self._step += 1
         active = 0
@@ -1014,12 +1281,25 @@ class PerSlotServingEngine(_EngineBase):
             if req is None:
                 continue
             active += 1
-            uids.append(req.uid)
             tok = jnp.asarray([[req.out_tokens[-1]]], jnp.int32)
-            logits, self.caches[i] = self._decode(self.params, tok,
-                                                  self.caches[i])
+            (logits, self.caches[i]), used = self._dispatch_guarded(
+                "decode",
+                lambda t=tok, c=self.caches[i]: self._decode(self.params,
+                                                             t, c),
+                None if self._decode_fb is None else
+                (lambda t=tok, c=self.caches[i]: self._decode_fb(
+                    self.params, t, c)))
             self._c_decode.inc()
-            self._attr_decode_dispatch(1)
+            self._attr_decode_dispatch(1, used)
+            if (self._faults is not None
+                    and self._fire("nan_logits", uid=req.uid,
+                                   tick=self._step)):
+                logits = logits.at[0].set(jnp.nan)
+            if self._nan_guard and not np.isfinite(
+                    np.asarray(logits[:, -1], np.float32)).all():
+                self._fail_slot(i)
+                continue
+            uids.append(req.uid)
             nxt = int(_sample_one(logits[:, -1], req.temperature, self._step,
                                   req.uid)[0])
             self._append_token(req, nxt)

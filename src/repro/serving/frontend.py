@@ -26,16 +26,30 @@ Protocol (docs/serving.md):
            "expired": bool, "cancelled": bool}
         → 400 invalid body / over-capacity prompt
         → 503 admission control shed ({"error": "shed", ...})
-    GET /healthz     → 200 {"ok": true}
+    GET /healthz     → 200 {"ok": true, "state": "ok"|"recovering"|
+                            "degraded", "restarts": n}   (503 once failed)
     GET /stats       → 200 engine stats() + front-end counters
 
 Admission control sheds BEFORE the engine sees the request: hard cap on
 queue depth, plus a load score ``queue_depth × pool_occupancy`` (an
-empty pool never sheds; a full pool sheds at shallow queues).  Deadlines
-are enforced between streamed tokens: on expiry the front-end cancels
-the request in the engine (slot + pages free at the next tick boundary),
+empty pool never sheds; a full pool sheds at shallow queues).  503 shed
+responses carry a ``Retry-After`` header so well-behaved clients back
+off instead of hammering (benchmarks/load_gen.py).  Deadlines are
+enforced between streamed tokens: on expiry the front-end cancels the
+request in the engine (slot + pages free at the next tick boundary),
 emits a ``deadline`` trace event, and finishes the stream with
-``expired: true`` — already-streamed tokens stand.
+``expired: true`` — already-streamed tokens stand.  A client that
+disconnects mid-stream is cancelled the same way (slot evicted, pages
+freed) instead of decoding into a dead queue.
+
+Fault tolerance (docs/resilience.md): the engine thread is supervised.
+Any exception escaping the tick loop is reported to the event loop —
+every open stream terminates with an ``error`` record instead of
+hanging.  With an ``engine_factory`` the watchdog goes further: it
+detects a dead OR stuck thread (heartbeat), rebuilds the engine, and
+re-admits queued + in-flight requests through the engine's
+``_resume_ctx`` machinery, so surviving streams continue token-exact;
+``/healthz`` reports ``ok``/``recovering``/``degraded``/``failed``.
 
 The engine emits the SAME trace-event schema as offline runs, so
 ``repro.obs.summarize``, ``python -m repro.obs`` and the BENCH latency
@@ -49,9 +63,11 @@ import asyncio
 import collections
 import json
 import threading
+import time
 
 import numpy as np
 
+from repro.resilience.faults import FaultPlan
 from repro.serving.engine import Request
 
 __all__ = ["ServingFrontend", "http_generate", "http_get"]
@@ -72,12 +88,26 @@ class ServingFrontend:
 
     def __init__(self, engine, *, host: str = "127.0.0.1", port: int = 0,
                  max_queue_depth: int = 64, shed_score: float = 32.0,
-                 default_deadline_s: float | None = None):
+                 default_deadline_s: float | None = None,
+                 engine_factory=None, max_restarts: int = 2,
+                 watchdog_interval_s: float = 0.25,
+                 watchdog_stall_s: float = 10.0,
+                 retry_after_s: float = 0.05,
+                 faults: FaultPlan | None = None):
         self.engine = engine
         self.host, self.port = host, port
         self.max_queue_depth = max_queue_depth
         self.shed_score = shed_score
         self.default_deadline_s = default_deadline_s
+        # watchdog/recovery knobs (docs/resilience.md): without a
+        # factory the watchdog can only fail streams fast — with one it
+        # rebuilds the engine and resumes in-flight requests
+        self.engine_factory = engine_factory
+        self.max_restarts = max_restarts
+        self.watchdog_interval_s = watchdog_interval_s
+        self.watchdog_stall_s = watchdog_stall_s
+        self.retry_after_s = retry_after_s
+        self.faults = faults                 # client_disconnect site only
         self.server: asyncio.AbstractServer | None = None
         self._loop: asyncio.AbstractEventLoop | None = None
         self._streams: dict[int, asyncio.Queue] = {}
@@ -87,21 +117,38 @@ class ServingFrontend:
         self._thread: threading.Thread | None = None
         self._next_uid = 0
         self._uid_lock = threading.Lock()
+        # engine-thread supervision state: ``_gen`` fences stale threads
+        # (a superseded loop exits at its next iteration), ``_beat`` is
+        # the heartbeat the stall detector reads
+        self._gen = 0
+        self._beat = time.monotonic()
+        self._health = "ok"          # ok | recovering | degraded | failed
+        self._engine_exc: BaseException | None = None
+        self._kick: asyncio.Event | None = None
+        self._watchdog: asyncio.Task | None = None
         # front-end outcome counters (engine stats() covers the rest)
         self.accepted = 0
         self.shed = 0
         self.expired = 0
+        self.disconnected = 0
+        self.restarts = 0
 
     # -- lifecycle ----------------------------------------------------------
 
-    async def start(self) -> "ServingFrontend":
-        self._loop = asyncio.get_running_loop()
-        eng = self.engine
+    def _start_engine_thread(self, eng) -> None:
         eng.on_token = self._on_token
         eng.on_retire = self._on_retire
-        self._thread = threading.Thread(target=self._engine_loop,
-                                        name="engine-loop", daemon=True)
+        self._beat = time.monotonic()
+        self._thread = threading.Thread(
+            target=self._engine_loop, args=(eng, self._gen),
+            name=f"engine-loop-{self._gen}", daemon=True)
         self._thread.start()
+
+    async def start(self) -> "ServingFrontend":
+        self._loop = asyncio.get_running_loop()
+        self._kick = asyncio.Event()
+        self._start_engine_thread(self.engine)
+        self._watchdog = self._loop.create_task(self._watchdog_loop())
         self.server = await asyncio.start_server(self._serve_client,
                                                  self.host, self.port)
         self.port = self.server.sockets[0].getsockname()[1]
@@ -111,6 +158,12 @@ class ServingFrontend:
         if self.server is not None:
             self.server.close()
             await self.server.wait_closed()
+        if self._watchdog is not None:
+            self._watchdog.cancel()
+            try:
+                await self._watchdog
+            except asyncio.CancelledError:
+                pass
         self._stop_flag.set()
         self._work.set()
         if self._thread is not None:
@@ -126,21 +179,133 @@ class ServingFrontend:
 
     # -- engine thread ------------------------------------------------------
 
-    def _engine_loop(self) -> None:
-        eng = self.engine
+    def _engine_loop(self, eng, gen: int) -> None:
+        """Tick loop for ONE engine generation.  A superseded generation
+        (watchdog rebuilt the engine) exits at its next iteration; an
+        exception escaping the loop is reported to the event loop so no
+        client ever hangs on a silently dead thread."""
+        try:
+            while not self._stop_flag.is_set() and self._gen == gen:
+                self._beat = time.monotonic()
+                while self._control:
+                    op, arg = self._control.popleft()
+                    if op == "submit":
+                        eng.submit(arg)
+                    elif op == "resubmit":       # watchdog re-admission
+                        eng.resubmit(arg)
+                    else:                        # "cancel"
+                        eng.cancel(arg)
+                if eng.queue or any(eng.slots):
+                    eng.step()
+                    eng.pop_retired()    # on_retire already forwarded them
+                else:
+                    self._work.wait(timeout=0.05)
+                    self._work.clear()
+        except BaseException as exc:  # noqa: BLE001 — anything must surface
+            if self._stop_flag.is_set() or self._gen != gen:
+                return
+            self._loop.call_soon_threadsafe(self._engine_died, exc, gen)
+
+    def _engine_died(self, exc: BaseException, gen: int) -> None:
+        """Event-loop side of an engine-thread crash: record it, then
+        either wake the watchdog for a rebuild or — with no recovery
+        configured — terminate every open stream with an error record
+        (the no-hung-clients guarantee holds even without a factory)."""
+        if gen != self._gen or self._stop_flag.is_set():
+            return
+        self._engine_exc = exc
+        if self.engine.obs is not None:
+            self.engine.obs.tracer.emit("watchdog", action="engine_error",
+                                        error=repr(exc))
+        if self.engine_factory is not None and self.restarts < self.max_restarts:
+            self._health = "recovering"
+            self._kick.set()
+        else:
+            self._health = "failed"
+            self._fail_open_streams(f"engine thread died: {exc!r}")
+
+    def _fail_open_streams(self, msg: str) -> None:
+        """Push an error sentinel to every open stream (loop thread).
+        Streams that already hold their retire record finish on it
+        first; the sentinel only catches the ones that would hang."""
+        for q in list(self._streams.values()):
+            q.put_nowait(("error", msg))
+
+    # -- watchdog -----------------------------------------------------------
+
+    async def _watchdog_loop(self) -> None:
+        """Supervise the engine thread: rebuild on death (kicked by
+        ``_engine_died``) and on heartbeat stalls (a tick stuck longer
+        than ``watchdog_stall_s`` while work is pending)."""
         while not self._stop_flag.is_set():
-            while self._control:
-                op, arg = self._control.popleft()
-                if op == "submit":
-                    eng.submit(arg)
-                else:                            # "cancel"
-                    eng.cancel(arg)
-            if eng.queue or any(eng.slots):
-                eng.step()
-                eng.pop_retired()    # on_retire already forwarded them
-            else:
-                self._work.wait(timeout=0.05)
-                self._work.clear()
+            try:
+                await asyncio.wait_for(self._kick.wait(),
+                                       self.watchdog_interval_s)
+            except asyncio.TimeoutError:
+                pass
+            self._kick.clear()
+            if self._stop_flag.is_set():
+                return
+            if self._health == "failed":     # terminal: nothing to do
+                continue
+            dead = self._health == "recovering" or not self._thread.is_alive()
+            pending = bool(self._streams) or bool(self._control)
+            stalled = (pending and time.monotonic() - self._beat
+                       > self.watchdog_stall_s)
+            if dead or stalled:
+                await self._recover("died" if dead else "stalled")
+
+    async def _recover(self, why: str) -> None:
+        """Rebuild the engine and resume every live request.
+
+        Order matters: bump ``_gen`` (fences the old loop), detach the
+        old engine's hooks (a straggler thread finishing its tick can no
+        longer forward tokens), THEN snapshot live requests into fresh
+        Request copies — each resumes via the engine's ``_resume_ctx``
+        machinery (prompt + tokens so far), so clients see the exact
+        continuation with nothing duplicated or lost."""
+        if self.engine_factory is None or self.restarts >= self.max_restarts:
+            self._health = "failed"
+            if self.engine.obs is not None:
+                self.engine.obs.tracer.emit("watchdog", action="give_up",
+                                            reason=why,
+                                            restarts=self.restarts)
+            self._fail_open_streams(f"engine {why}; recovery exhausted")
+            return
+        self._health = "recovering"
+        old = self.engine
+        self._gen += 1
+        old.on_token = None
+        old.on_retire = None
+        live, seen = [], set()
+        for r in list(old.queue) + [s for s in old.slots if s is not None]:
+            if r is None or r.done or r.uid in seen:
+                continue
+            seen.add(r.uid)
+            live.append(Request(uid=r.uid, prompt=np.asarray(r.prompt),
+                                max_new_tokens=r.max_new_tokens,
+                                temperature=r.temperature,
+                                out_tokens=list(r.out_tokens)))
+        pending_uids = {a.uid for op, a in list(self._control)
+                        if op in ("submit", "resubmit")}
+        new_eng = await asyncio.to_thread(self.engine_factory)
+        self.engine = new_eng
+        self.restarts += 1
+        for r in reversed(live):
+            self._control.appendleft(("resubmit", r))
+        # any stream covered by neither the snapshot nor a pending
+        # submit cannot produce a retire record anymore — fail it now
+        for uid, q in list(self._streams.items()):
+            if uid not in seen and uid not in pending_uids:
+                q.put_nowait(("error", f"engine {why}; request lost in "
+                                       f"restart"))
+        self._start_engine_thread(new_eng)
+        self._work.set()
+        self._health = "degraded"
+        if new_eng.obs is not None:
+            new_eng.obs.tracer.emit("watchdog", action="restart",
+                                    reason=why, n_resumed=len(live),
+                                    restarts=self.restarts)
 
     def _on_token(self, req, tok: int) -> None:
         """Engine-thread hook: forward one sampled token to its open
@@ -205,7 +370,10 @@ class ServingFrontend:
             if method == "POST" and path == "/generate":
                 await self._handle_generate(body, writer)
             elif method == "GET" and path == "/healthz":
-                self._respond(writer, 200, {"ok": True})
+                ok = self._health != "failed"
+                self._respond(writer, 200 if ok else 503,
+                              {"ok": ok, "state": self._health,
+                               "restarts": self.restarts})
             elif method == "GET" and path == "/stats":
                 self._respond(writer, 200, self._stats())
             else:
@@ -226,18 +394,23 @@ class ServingFrontend:
         st.pop("per_request", None)
         st["frontend"] = {"accepted": self.accepted, "shed": self.shed,
                           "expired": self.expired,
+                          "disconnected": self.disconnected,
+                          "restarts": self.restarts,
+                          "health": self._health,
                           "open_streams": len(self._streams)}
         return st
 
     @staticmethod
-    def _respond(writer: asyncio.StreamWriter, status: int, obj) -> None:
+    def _respond(writer: asyncio.StreamWriter, status: int, obj,
+                 headers: dict | None = None) -> None:
         reason = {200: "OK", 400: "Bad Request", 404: "Not Found",
                   503: "Service Unavailable"}[status]
         body = _json_bytes(obj)
+        extra = "".join(f"{k}: {v}\r\n" for k, v in (headers or {}).items())
         writer.write(
             f"HTTP/1.1 {status} {reason}\r\n"
             f"Content-Type: application/json\r\n"
-            f"Content-Length: {len(body)}\r\n"
+            f"Content-Length: {len(body)}\r\n{extra}"
             f"Connection: close\r\n\r\n".encode() + body)
 
     @staticmethod
@@ -259,12 +432,19 @@ class ServingFrontend:
                 "error": "prompt length out of range",
                 "capacity": self.engine.prompt_capacity})
             return
+        if self._health == "failed":
+            self._respond(writer, 503,
+                          {"error": "engine_failed", "restarts": self.restarts})
+            return
         verdict = self._shed_verdict()
         if verdict is not None:
             self.shed += 1
             if self.engine.obs is not None:
                 self.engine.obs.tracer.emit("shed", **verdict)
-            self._respond(writer, 503, {"error": "shed", **verdict})
+            self._respond(writer, 503,
+                          {"error": "shed",
+                           "retry_after_s": self.retry_after_s, **verdict},
+                          headers={"Retry-After": f"{self.retry_after_s:g}"})
             return
         with self._uid_lock:
             uid = self._next_uid
@@ -286,9 +466,9 @@ class ServingFrontend:
         loop = asyncio.get_running_loop()
         deadline_at = (loop.time() + deadline_s
                        if deadline_s is not None else None)
-        expired, n_streamed, final = False, 0, None
+        expired, n_streamed, final, error = False, 0, None, None
         try:
-            while final is None:
+            while final is None and error is None:
                 timeout = None
                 if deadline_at is not None and not expired:
                     timeout = max(deadline_at - loop.time(), 0.0)
@@ -308,19 +488,48 @@ class ServingFrontend:
                     self._work.set()
                     continue
                 if kind == "token":
+                    if (self.faults is not None and
+                            self.faults.fire("client_disconnect", uid=uid)):
+                        if self.engine.obs is not None:
+                            self.engine.obs.tracer.emit(
+                                "fault", site="client_disconnect", uid=uid)
+                        raise ConnectionResetError(
+                            f"injected client disconnect uid={uid}")
                     n_streamed += 1
                     self._chunk(writer, _json_bytes({"token": int(val)}))
                     await writer.drain()
+                elif kind == "error":
+                    error = val
                 else:
                     final = val
-            self._chunk(writer, _json_bytes({
-                "done": True, "uid": uid,
-                "tokens": [int(t) for t in final.out_tokens],
-                "n_tokens": len(final.out_tokens),
-                "expired": expired, "cancelled": final.cancelled}))
+            if error is not None:
+                # engine died and recovery could not cover this stream:
+                # terminate with an error record instead of hanging
+                self._chunk(writer, _json_bytes({
+                    "done": True, "uid": uid, "error": error,
+                    "tokens": None, "n_tokens": n_streamed,
+                    "expired": expired, "cancelled": False, "failed": True}))
+            else:
+                self._chunk(writer, _json_bytes({
+                    "done": True, "uid": uid,
+                    "tokens": [int(t) for t in final.out_tokens],
+                    "n_tokens": len(final.out_tokens),
+                    "expired": expired, "cancelled": final.cancelled,
+                    "failed": final.failed}))
             writer.write(b"0\r\n\r\n")
+        except ConnectionError:
+            # client went away mid-stream: cancel in the engine so the
+            # slot/pages free at the next tick instead of decoding into
+            # a dead socket (tests/test_frontend.py pins this)
+            self.disconnected += 1
+            if self.engine.obs is not None:
+                self.engine.obs.tracer.emit("disconnect", uid=uid,
+                                            n_streamed=n_streamed)
+            self._control.append(("cancel", uid))
+            self._work.set()
+            raise
         finally:
-            del self._streams[uid]
+            self._streams.pop(uid, None)
 
 
 # ---------------------------------------------------------------------------
@@ -334,7 +543,8 @@ async def http_generate(host: str, port: int, payload: dict,
 
     Returns {"status", "body" (final record or error body), "tokens",
     "token_times" (client receive timestamp per token, from ``clock`` —
-    default the running loop's clock)}.
+    default the running loop's clock), "headers" (lower-cased response
+    headers — retry clients read ``retry-after`` off 503 sheds)}.
     """
     clock = clock or asyncio.get_running_loop().time
     reader, writer = await asyncio.open_connection(host, port)
@@ -353,7 +563,7 @@ async def http_generate(host: str, port: int, payload: dict,
             else:
                 final = rec
         return {"status": status, "body": final, "tokens": tokens,
-                "token_times": times}
+                "token_times": times, "headers": headers}
     finally:
         writer.close()
 

@@ -173,7 +173,10 @@ def test_summarize_exact_numbers():
     assert s["counts"] == {"submitted": 2, "admitted": 3, "retired": 2,
                            "preemptions": 1, "resumes": 2, "decode_tokens": 4,
                            "prefill_tokens": 4, "ticks": 2, "cancelled": 1,
-                           "deadline_expired": 1, "shed": 1}
+                           "deadline_expired": 1, "shed": 1, "failed": 0,
+                           "faults_injected": 0, "guard_trips": 0,
+                           "breaker_trips": 0, "breaker_recoveries": 0,
+                           "watchdog_restarts": 0, "disconnects": 0}
     assert s["ttft_s"]["count"] == 2
     assert s["ttft_s"]["p50"] == 3.0 and s["ttft_s"]["max"] == 4.0
     # uid 1 token ts: 3, 7, 10 → deltas 4, 3;  uid 2: 5, 7, 13 → 2, 6
