@@ -62,7 +62,7 @@ from repro.configs.base import get_config
 from repro.models.api import get_model
 from repro.obs import Observability, load_trace, percentile_summary, summarize
 from repro.resilience.faults import FaultPlan, FaultSpec
-from repro.serving.engine import PagedServingEngine, Request
+from repro.serving.engine import EngineConfig, PagedServingEngine, Request
 from repro.serving.frontend import ServingFrontend, http_generate, http_get
 
 ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "experiments",
@@ -98,10 +98,12 @@ def _setup():
 
 def _engine(model, params, cfg, *, obs=None, chunk=PREFILL_CHUNK,
             max_len=MAX_LEN, page_size=PAGE_SIZE, faults=None):
-    return PagedServingEngine(model, params, cfg, max_slots=MAX_SLOTS,
-                              max_len=max_len, page_size=page_size,
-                              prefill_bucket=PREFILL_BUCKET,
-                              prefill_chunk=chunk, obs=obs, faults=faults)
+    return PagedServingEngine(
+        model, params, cfg,
+        config=EngineConfig(max_slots=MAX_SLOTS, max_len=max_len,
+                            page_size=page_size,
+                            prefill_bucket=PREFILL_BUCKET,
+                            prefill_chunk=chunk, obs=obs, faults=faults))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,196 @@
+"""Prefix-cache benchmark: shared-system-prompt serving, cache on vs off.
+
+The workload the cache exists for: every request opens with the SAME
+system prompt (several full pages) and ends with a unique per-user tail.
+A seeder request (the bare system prompt) populates the cache, then a
+burst of requests is served twice on the paged engine — ``prefix_cache``
+off (the pre-cache allocator) and on — and the runs are compared:
+
+  * **hit rate** — every burst request must match the seeded prefix
+    (``all_hits``);
+  * **prefill-token reduction** — the cache-on run dispatches prefill
+    only for the non-shared suffix, so its engine-counted prefill
+    tokens drop by exactly ``n_requests * system_tokens``
+    (``suffix_only_prefill`` — the ISSUE's acceptance pin);
+  * **token identity** — greedy outputs are bit-identical across the
+    two runs (``tokens_identical``);
+  * wall-clock tok/s for both runs (report-only: does not transfer
+    across machines) plus the engine's roofline-modeled savings
+    (``saved_prefill_flops`` / ``saved_hbm_bytes``, analytic).
+
+Writes ``experiments/serving/BENCH_prefix.json`` (``--quick`` → the
+``_quick`` sibling) for benchmarks/report.py's §Prefix table and the
+``report.py --check`` regression gate, which compares only the
+deterministic counters and contract booleans above.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import get_config
+from repro.models.api import get_model
+from repro.serving.engine import EngineConfig, PagedServingEngine, Request
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "serving", "BENCH_prefix.json")
+
+MAX_SLOTS = 4
+MAX_LEN = 64
+PAGE_SIZE = 4          # reduced-config scale (serving_throughput idiom)
+PREFILL_BUCKET = 8
+SYS_PAGES = 6          # shared system prompt: 6 full pages = 24 tokens
+
+REPEATS = 3   # timed sections take the best of N runs (CPU wall clock
+#               is too noisy single-shot); counters are deterministic
+
+
+def _system(cfg) -> np.ndarray:
+    rng = np.random.default_rng(42)
+    return rng.integers(0, cfg.vocab_size, size=(SYS_PAGES * PAGE_SIZE,))
+
+
+def _requests(cfg, n: int, max_new: int) -> list[Request]:
+    system = _system(cfg)
+    rng = np.random.default_rng(1)
+    return [Request(uid=i,
+                    prompt=np.concatenate(
+                        [system,
+                         rng.integers(0, cfg.vocab_size, size=(3 + i % 5,))]),
+                    max_new_tokens=max_new) for i in range(n)]
+
+
+def _serve_once(model, params, cfg, *, prefix_cache, n_requests, max_new):
+    eng = PagedServingEngine(
+        model, params, cfg,
+        config=EngineConfig(max_slots=MAX_SLOTS, max_len=MAX_LEN,
+                            page_size=PAGE_SIZE,
+                            prefill_bucket=PREFILL_BUCKET,
+                            prefix_cache=prefix_cache))
+    # seeder: the bare system prompt, run to completion BEFORE the burst
+    # so its pages are registered when the burst admits (same-round
+    # co-admissions never share — docs/serving.md §Prefix caching)
+    eng.submit(Request(uid=1000, prompt=_system(cfg), max_new_tokens=1))
+    eng.run(max_ticks=10_000)
+    for r in _requests(cfg, n_requests, max_new):
+        eng.submit(r)
+    t0 = time.perf_counter()
+    done = eng.run(max_ticks=10_000)
+    return eng, done, time.perf_counter() - t0
+
+
+def _serve(model, params, cfg, *, prefix_cache, n_requests, max_new,
+           repeats=REPEATS):
+    dt = float("inf")
+    for _ in range(repeats):
+        eng, done, t = _serve_once(model, params, cfg,
+                                   prefix_cache=prefix_cache,
+                                   n_requests=n_requests, max_new=max_new)
+        dt = min(dt, t)
+    st = eng.run_stats
+    burst = [r for r in done if r.uid < 1000]
+    row = {
+        "tokens": st["decode_tokens"],
+        "prefill_tokens": st["prefill_tokens"],
+        "prefill_dispatches": st["prefill_dispatches"],
+        "decode_dispatches": st["decode_dispatches"],
+        "ticks": st["ticks"],
+        "seconds": round(dt, 4),
+        "tok_s": round(st["decode_tokens"] / max(dt, 1e-9), 2),
+        "outputs": {r.uid: list(map(int, r.out_tokens)) for r in burst},
+    }
+    px = st["prefix"]
+    if px["enabled"]:
+        row["prefix"] = {k: px[k] for k in
+                         ("hits", "misses", "hit_rate", "shared_pages",
+                          "cow_copies", "evictions", "cached_pages",
+                          "saved_prefill_tokens", "saved_prefill_flops",
+                          "saved_hbm_bytes")}
+    return row
+
+
+def bench_arch(arch: str, *, n_requests: int = 8, max_new: int = 8) -> dict:
+    cfg = get_config(arch).reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    sys_len = SYS_PAGES * PAGE_SIZE
+    row = {"arch": arch, "max_slots": MAX_SLOTS, "n_requests": n_requests,
+           "max_new": max_new, "system_tokens": sys_len,
+           "system_pages": SYS_PAGES}
+    for mode, on in (("off", False), ("on", True)):
+        # warmup: identical workload so the timed pass hits warm jit
+        # caches only (the suffix-prefill shape differs from the full
+        # prefill shape, so each mode warms its own compiles)
+        _serve(model, params, cfg, prefix_cache=on, n_requests=n_requests,
+               max_new=max_new, repeats=1)
+        row[mode] = _serve(model, params, cfg, prefix_cache=on,
+                           n_requests=n_requests, max_new=max_new)
+    outs = {m: row[m].pop("outputs") for m in ("off", "on")}
+    px = row["on"]["prefix"]
+    # --check contracts: deterministic, machine-portable
+    row["tokens_identical"] = int(outs["on"] == outs["off"])
+    row["all_hits"] = int(px["hits"] == n_requests)
+    row["suffix_only_prefill"] = int(
+        row["off"]["prefill_tokens"] - row["on"]["prefill_tokens"]
+        == n_requests * sys_len
+        and px["saved_prefill_tokens"] == n_requests * sys_len)
+    row["prefill_tokens_reduced"] = int(
+        row["on"]["prefill_tokens"] < row["off"]["prefill_tokens"])
+    row["shared_pages_accounted"] = int(
+        px["shared_pages"] == n_requests * SYS_PAGES)
+    return row
+
+
+def run(archs=("stablelm_3b",), *, n_requests: int = 8, max_new: int = 8,
+        out_path: str = ARTIFACT) -> list[dict]:
+    rows = []
+    for arch in archs:
+        row = bench_arch(arch, n_requests=n_requests, max_new=max_new)
+        rows.append(row)
+        px = row["on"]["prefix"]
+        for mode in ("off", "on"):
+            r = row[mode]
+            emit(f"prefix_{arch}_{mode}",
+                 1e6 * r["seconds"] / max(r["tokens"], 1),
+                 f"tok_s={r['tok_s']};prefill_tokens={r['prefill_tokens']};"
+                 f"prefill_dispatches={r['prefill_dispatches']}")
+        emit(f"prefix_{arch}_contracts", 0.0,
+             f"hit_rate={px['hit_rate']};"
+             f"saved_prefill_tokens={px['saved_prefill_tokens']};"
+             f"tokens_identical={row['tokens_identical']};"
+             f"suffix_only_prefill={row['suffix_only_prefill']}")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", action="append", default=None,
+                    help="repeatable; default stablelm_3b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fewer requests/tokens, writes the "
+                         "_quick sibling artifact (never truncates the "
+                         "committed baseline)")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+    suffix = "_quick.json" if args.quick else ".json"
+    out = args.out or ARTIFACT.replace(".json", suffix)
+    kw = (dict(n_requests=4, max_new=4) if args.quick
+          else dict(n_requests=args.requests, max_new=args.max_new))
+    run(tuple(args.arch or ("stablelm_3b",)), out_path=out, **kw)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,8 +1,9 @@
-"""Generate the EXPERIMENTS.md §Dry-run, §Roofline, §Autoplan, §Serving
-and §Kernels tables from the JSON artifacts
+"""Generate the EXPERIMENTS.md §Dry-run, §Roofline, §Autoplan, §Serving,
+§Prefix and §Kernels tables from the JSON artifacts
 (experiments/dryrun/<mesh>/<arch>__<shape>.json,
 experiments/autoplan/<arch>_telemetry.json,
 experiments/serving/BENCH_serving.json,
+experiments/serving/BENCH_prefix.json,
 experiments/kernels/BENCH_kernels.json).
 
 Usage: PYTHONPATH=src python -m benchmarks.report [--out EXPERIMENTS_tables.md]
@@ -32,6 +33,7 @@ SERVING_PATH = os.path.join(EXPERIMENTS, "serving", "BENCH_serving.json")
 LATENCY_PATH = os.path.join(EXPERIMENTS, "serving", "BENCH_latency.json")
 KERNELS_PATH = os.path.join(EXPERIMENTS, "kernels", "BENCH_kernels.json")
 LOAD_PATH = os.path.join(EXPERIMENTS, "serving", "BENCH_load.json")
+PREFIX_PATH = os.path.join(EXPERIMENTS, "serving", "BENCH_prefix.json")
 
 CHECK_THRESHOLD = 0.8      # fresh metric must be ≥ 80% of the baseline
 
@@ -237,6 +239,37 @@ def load_table(rows: list[dict]) -> str:
     return "\n".join(out)
 
 
+def load_prefix() -> list[dict]:
+    if not os.path.exists(PREFIX_PATH):
+        return []
+    with open(PREFIX_PATH) as f:
+        return json.load(f)
+
+
+def prefix_table(rows: list[dict]) -> str:
+    """Prefix-cache on/off comparison on the shared-system-prompt
+    workload (prefix_bench.py → BENCH_prefix.json).  Prefill tokens are
+    the engine's own dispatch accounting — the cache-on run prefills
+    only the non-shared suffix (docs/serving.md §Prefix caching); tok/s
+    is report-only wall clock."""
+    out = ["| arch | reqs | sys tokens | hit rate | prefill tok off→on | "
+           "saved tok | saved GFLOPs | COW | evict | tok/s off→on | "
+           "identical | suffix-only |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        px = r["on"]["prefix"]
+        out.append(
+            f"| {r['arch']} | {r['n_requests']} | {r['system_tokens']} | "
+            f"{px['hit_rate']:.2f} | {r['off']['prefill_tokens']}→"
+            f"{r['on']['prefill_tokens']} | {px['saved_prefill_tokens']} | "
+            f"{px['saved_prefill_flops'] / 1e9:.3f} | {px['cow_copies']} | "
+            f"{px['evictions']} | {r['off']['tok_s']:.0f}→"
+            f"{r['on']['tok_s']:.0f} | "
+            f"{'yes' if r['tokens_identical'] else 'NO'} | "
+            f"{'yes' if r['suffix_only_prefill'] else 'NO'} |")
+    return "\n".join(out)
+
+
 def load_kernels() -> list[dict]:
     if not os.path.exists(KERNELS_PATH):
         return []
@@ -398,6 +431,24 @@ def _load_metrics(rows: list[dict]) -> dict[str, float]:
     return out
 
 
+def _prefix_metrics(rows: list[dict]) -> dict[str, float]:
+    """Machine-portable prefix-cache metrics: wall-clock tok/s stays
+    report-only; the gate compares the deterministic cache counters
+    (hit rate, saved prefill tokens — a broken matcher collapses both
+    to 0) and the contract booleans (higher = better throughout)."""
+    out = {}
+    for r in rows:
+        key = r["arch"]
+        px = r["on"]["prefix"]
+        out[f"{key}:hit_rate"] = px["hit_rate"]
+        out[f"{key}:saved_prefill_tokens"] = float(
+            px["saved_prefill_tokens"])
+        for flag in ("tokens_identical", "all_hits", "suffix_only_prefill",
+                     "prefill_tokens_reduced", "shared_pages_accounted"):
+            out[f"{key}:{flag}"] = float(r[flag])
+    return out
+
+
 def _bench_metrics(path: str, rows: list[dict]) -> dict[str, float]:
     name = os.path.basename(path)
     if "kernels" in name:
@@ -406,6 +457,8 @@ def _bench_metrics(path: str, rows: list[dict]) -> dict[str, float]:
         return _latency_metrics(rows)
     if "load" in name:         # ditto: BENCH_load* lives under serving/
         return _load_metrics(rows)
+    if "prefix" in name:       # ditto: BENCH_prefix* lives under serving/
+        return _prefix_metrics(rows)
     if "serving" in name:
         return _serving_metrics(rows)
     raise SystemExit(f"--check: no metric extractor for {name}")
@@ -484,6 +537,11 @@ def main(argv=None):
         parts.append(f"\n### Serving load — HTTP front-end "
                      f"({n_http} scenarios)\n")
         parts.append(load_table(ld_rows))
+    px_rows = load_prefix()
+    if px_rows:
+        parts.append(f"\n### Serving prefix cache — shared system prompt "
+                     f"({len(px_rows)} archs)\n")
+        parts.append(prefix_table(px_rows))
     kn_all = load_kernels()
     kn_rows = [r for r in kn_all if r.get("kind") != "paged_attention"]
     pa_rows = [r for r in kn_all if r.get("kind") == "paged_attention"]

@@ -45,8 +45,9 @@ from repro.configs.base import get_config
 from repro.launch.roofline import serving_prefill_flops, serving_tick_flops
 from repro.models.api import get_model
 from repro.obs import Observability
-from repro.serving.engine import (PagedServingEngine, PerSlotServingEngine,
-                                  Request, ServingEngine)
+from repro.serving.engine import (EngineConfig, PagedServingEngine,
+                                  PerSlotServingEngine, Request,
+                                  ServingEngine)
 
 ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "experiments",
                         "serving", "BENCH_serving.json")
@@ -58,11 +59,18 @@ PAGE_SIZE = 4          # reduced-config scale (max_len 64)
 PREFILL_BUCKET = 8
 
 ENGINES = {
-    "paged": lambda *a, **kw: PagedServingEngine(
-        *a, page_size=PAGE_SIZE, prefill_bucket=PREFILL_BUCKET, **kw),
+    "paged": PagedServingEngine,
     "batched": ServingEngine,
     "per_slot": PerSlotServingEngine,
 }
+
+
+def _config(*, max_slots, max_len, obs=None) -> EngineConfig:
+    # one config builds all three engines: the non-paged engines ignore
+    # the page-pool fields (docs/api.md)
+    return EngineConfig(max_slots=max_slots, max_len=max_len,
+                        page_size=PAGE_SIZE, prefill_bucket=PREFILL_BUCKET,
+                        obs=obs)
 
 
 def _requests(cfg, n: int, max_new: int) -> list[Request]:
@@ -79,7 +87,8 @@ REPEATS = 3   # timed sections take the best of N runs: single-shot wall
 
 def _serve_once(engine_cls, model, params, cfg, *, max_slots, max_len,
                 n_requests, max_new):
-    eng = engine_cls(model, params, cfg, max_slots=max_slots, max_len=max_len)
+    eng = engine_cls(model, params, cfg,
+                     config=_config(max_slots=max_slots, max_len=max_len))
     for r in _requests(cfg, n_requests, max_new):
         eng.submit(r)
     t0 = time.perf_counter()
@@ -125,8 +134,8 @@ def _prefill_phase(engine_cls, model, params, cfg, *, max_slots, max_len,
     Fields are namespaced so they never clobber the main run's row."""
     dt = float("inf")
     for _ in range(repeats):
-        eng = engine_cls(model, params, cfg, max_slots=max_slots,
-                         max_len=max_len)
+        eng = engine_cls(model, params, cfg,
+                         config=_config(max_slots=max_slots, max_len=max_len))
         for r in _requests(cfg, n_requests, 1):
             eng.submit(r)
         t0 = time.perf_counter()
@@ -213,8 +222,9 @@ def bench_latency_arch(arch: str, *, max_slots: int = 4, max_len: int = 64,
         _serve(cls, model, params, cfg, max_slots=max_slots, max_len=max_len,
                n_requests=n_requests, max_new=max_new, repeats=1)
         obs = Observability()
-        eng = cls(model, params, cfg, max_slots=max_slots, max_len=max_len,
-                  obs=obs)
+        eng = cls(model, params, cfg,
+                  config=_config(max_slots=max_slots, max_len=max_len,
+                                 obs=obs))
         for r in _requests(cfg, n_requests, max_new):
             eng.submit(r)
         eng.run(max_ticks=10_000)

@@ -43,8 +43,9 @@ from repro.launch import compat
 from repro.launch.mesh import make_test_mesh
 from repro.models.api import get_model
 from repro.obs import Observability, QuantHealthSampler, format_summary
-from repro.serving.engine import (PagedServingEngine, PerSlotServingEngine,
-                                  Request, ServingEngine)
+from repro.serving.engine import (EngineConfig, PagedServingEngine,
+                                  PerSlotServingEngine, Request,
+                                  ServingEngine)
 from repro.serving.fold import collect_calibration, fold_quantize
 
 
@@ -111,6 +112,12 @@ def main(argv=None):
                          "zero-overcommit sizing, max_slots × pages/slot; "
                          "smaller pools overcommit and rely on admission "
                          "backpressure)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="paged engine: share identical prompt prefixes "
+                         "page-granularly across requests (refcounted "
+                         "pages, copy-on-write on divergence, LRU "
+                         "eviction under pool pressure — docs/serving.md "
+                         "§Prefix caching; dense-transformer family only)")
     ap.add_argument("--trace-out", default="",
                     help="stream per-request span events (submit/admit/"
                          "prefill/first-token/tick/preempt/retire) to this "
@@ -219,24 +226,31 @@ def main(argv=None):
                     text = fh.read()
             faults = FaultPlan.from_json(text)
             say(f"fault plan armed: {faults}")
-        if args.engine == "paged":
-            eng = PagedServingEngine(
-                model, params, cfg, max_slots=args.max_slots,
-                max_len=args.max_len, policy=policy,
-                kv_bits=args.kv_bits or None, page_size=args.page_size,
-                n_pages=args.pool_pages or None,
-                prefill_chunk=args.prefill_chunk or None, obs=obs,
-                faults=faults, nan_guard=args.nan_guard)
-        else:
-            engine_cls = (ServingEngine if args.engine == "batched"
-                          else PerSlotServingEngine)
-            eng = engine_cls(model, params, cfg, max_slots=args.max_slots,
-                             max_len=args.max_len, policy=policy,
-                             kv_bits=args.kv_bits or None, obs=obs,
-                             faults=faults, nan_guard=args.nan_guard)
+        # ONE EngineConfig carries every engine knob (docs/api.md); the
+        # non-paged engines ignore the page-pool fields
+        econfig = EngineConfig(
+            max_slots=args.max_slots, max_len=args.max_len, policy=policy,
+            kv_bits=args.kv_bits or None, page_size=args.page_size,
+            n_pages=args.pool_pages or None,
+            prefill_chunk=args.prefill_chunk or None, obs=obs,
+            faults=faults, nan_guard=args.nan_guard,
+            prefix_cache=args.prefix_cache)
+        engine_cls = {"paged": PagedServingEngine, "batched": ServingEngine,
+                      "per-slot": PerSlotServingEngine}[args.engine]
+        eng = engine_cls(model, params, cfg, config=econfig)
         rng = np.random.default_rng(0)
         prompts = [rng.integers(0, cfg.vocab_size, size=(4 + i % 13,))
                    for i in range(args.requests)]
+        if args.prefix_cache:
+            # the workload shape the cache exists for: every request
+            # opens with the same "system prompt", unique tail per user;
+            # whole pages, capped so prompt + tail + decode fit max_len
+            max_tail = max(len(p) for p in prompts)
+            headroom = args.max_len - max_tail - args.max_new
+            sys_len = max(args.page_size,
+                          min(4, headroom // args.page_size) * args.page_size)
+            system = rng.integers(0, cfg.vocab_size, size=(sys_len,))
+            prompts = [np.concatenate([system, p]) for p in prompts]
         if args.serve_http:
             import asyncio
 
@@ -311,6 +325,14 @@ def main(argv=None):
                   f"pages at peak ({100 * st['page_occupancy_peak']:.0f}% "
                   f"occupancy, page size {st['page_size']}), "
                   f"paged attention: {st['paged_attention_backend']}")
+        if st.get("prefix", {}).get("enabled"):
+            px = st["prefix"]
+            print(f"  prefix cache: {px['hits']}/{px['hits'] + px['misses']} "
+                  f"hits ({100 * px['hit_rate']:.0f}%), "
+                  f"{px['shared_pages']} shared pages, "
+                  f"{px['saved_prefill_tokens']} prefill tokens saved, "
+                  f"{px['cow_copies']} COW copies, "
+                  f"{px['evictions']} evictions")
         for r in done[:3]:
             print(f"  req {r.uid}: {r.out_tokens[:12]}...")
         print()

@@ -33,6 +33,9 @@ full schema table):
                  supervision (docs/resilience.md)
     disconnect   uid, n_streamed — a client connection dropped
                  mid-stream; the request was cancelled in the engine
+    prefix_hit   uid, slot, matched_tokens, shared_pages, suffix_tokens
+                 — a paged-engine admission matched cached prefix pages
+                 and re-prefilled only the suffix (docs/serving.md)
 
 The tracer buffers events in memory (``events``) and, when constructed
 with a path, streams each event as one JSON line — ``repro.obs
@@ -52,7 +55,8 @@ __all__ = ["Tracer", "load_trace"]
 
 EVENT_KINDS = ("submit", "admit", "prefill", "first_token", "token", "tick",
                "preempt", "retire", "deadline", "shed", "quant_health",
-               "fault", "guard", "breaker", "watchdog", "disconnect")
+               "fault", "guard", "breaker", "watchdog", "disconnect",
+               "prefix_hit")
 
 
 class Tracer:

@@ -1,0 +1,136 @@
+"""Unified engine configuration (docs/api.md).
+
+The three serving engines grew ~13 constructor kwargs duplicated across
+``serve.py``, the front-end, and every benchmark; the prefix-cache knobs
+would have made it worse.  :class:`EngineConfig` consolidates them into
+ONE frozen value object:
+
+  * engines take ``Engine(model, params, cfg, config=EngineConfig(...))``
+    — the legacy per-kwarg form still works through a deprecation shim
+    that warns ONCE per process (``resolve_engine_config``);
+  * the config JSON round-trips like ``FaultPlan`` (``to_json`` /
+    ``from_json``) so launch scripts and benchmark manifests can pin an
+    engine setup as data.  ``obs`` is the one runtime-only field
+    (tracers hold open files and injected clocks): it is dropped from
+    the JSON form and comes back ``None``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import warnings
+
+from repro.core.qlinear import QuantPolicy
+from repro.obs import Observability
+from repro.resilience.faults import FaultPlan
+
+__all__ = ["EngineConfig", "resolve_engine_config"]
+
+# eviction policies the paged engine's prefix cache understands; a tuple
+# so the validation error can enumerate them (docs/serving.md)
+PREFIX_EVICT_POLICIES = ("lru",)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Every serving-engine knob in one frozen, JSON-able value.
+
+    Fields the non-paged engines don't use (``page_size`` ...) are
+    simply ignored by them, so ONE config can build any of the three
+    engines (the schema-equality tests rely on exactly that).
+    """
+
+    max_slots: int = 4
+    max_len: int = 256
+    policy: QuantPolicy | None = None
+    eos_id: int = -1
+    kv_bits: int | None = None
+    page_size: int = 64
+    n_pages: int | None = None
+    prefill_bucket: int = 16
+    prefill_chunk: int | None = None
+    obs: Observability | None = None
+    faults: FaultPlan | None = None
+    nan_guard: bool = False
+    # prefix caching over the paged pool (docs/serving.md §Prefix
+    # caching): OFF by default — the cache-off engine is byte-identical
+    # to the pre-cache allocator
+    prefix_cache: bool = False
+    prefix_evict: str = "lru"
+
+    def __post_init__(self):
+        for name in ("max_slots", "max_len", "page_size", "prefill_bucket"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"{name} must be >= 1, got "
+                                 f"{getattr(self, name)}")
+        for name in ("n_pages", "prefill_chunk"):
+            val = getattr(self, name)
+            if val is not None and val < 1:
+                raise ValueError(f"{name} must be None or >= 1, got {val}")
+        if self.kv_bits not in (None, 8):
+            raise ValueError(f"kv_bits must be None or 8, got {self.kv_bits}")
+        if self.prefix_evict not in PREFIX_EVICT_POLICIES:
+            raise ValueError(
+                f"prefix_evict must be one of {PREFIX_EVICT_POLICIES}, "
+                f"got {self.prefix_evict!r}")
+
+    # -- JSON round trip (the FaultPlan pattern) ----------------------------
+
+    def to_json(self) -> str:
+        """Serialize every field except the runtime-only ``obs``."""
+        d = {f.name: getattr(self, f.name)
+             for f in dataclasses.fields(self) if f.name != "obs"}
+        if self.policy is not None:
+            d["policy"] = dataclasses.asdict(self.policy)
+        if self.faults is not None:
+            d["faults"] = json.loads(self.faults.to_json())
+        return json.dumps(d, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "EngineConfig":
+        d = json.loads(text)
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise ValueError(f"unknown EngineConfig fields: {sorted(unknown)}")
+        if d.get("policy") is not None:
+            d["policy"] = QuantPolicy(**d["policy"])
+        if d.get("faults") is not None:
+            d["faults"] = FaultPlan.from_json(json.dumps(d["faults"]))
+        return cls(**d)
+
+
+# the legacy-kwarg deprecation warns ONCE per process, not once per
+# engine: property tests construct hundreds of engines
+_legacy_warned = False
+
+
+def resolve_engine_config(config: EngineConfig | None,
+                          legacy: dict) -> EngineConfig:
+    """Resolve an engine constructor's ``config=`` / legacy-kwarg pair.
+
+    ``config=EngineConfig(...)`` is the supported path.  Legacy kwargs
+    (``max_slots=4, ...``) build an equivalent config through a
+    deprecation shim that warns once per process; mixing both forms or
+    passing a kwarg ``EngineConfig`` doesn't know is a ``TypeError``
+    (the old constructors rejected typos the same way)."""
+    global _legacy_warned
+    if legacy:
+        known = {f.name for f in dataclasses.fields(EngineConfig)}
+        unknown = set(legacy) - known
+        if unknown:
+            raise TypeError(
+                f"unknown engine kwargs: {sorted(unknown)} "
+                f"(EngineConfig fields: {sorted(known)})")
+        if config is not None:
+            raise TypeError(
+                "pass either config=EngineConfig(...) or legacy kwargs, "
+                f"not both (got legacy {sorted(legacy)})")
+        if not _legacy_warned:
+            warnings.warn(
+                "per-kwarg engine construction is deprecated; pass "
+                "config=EngineConfig(...) (see docs/api.md)",
+                DeprecationWarning, stacklevel=3)
+            _legacy_warned = True
+        return EngineConfig(**legacy)
+    return config if config is not None else EngineConfig()

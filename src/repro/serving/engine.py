@@ -49,14 +49,16 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.qlinear import QuantPolicy
 from repro.launch.roofline import (
+    serving_prefill_flops,
     serving_prefill_hbm_bytes,
     serving_tick_hbm_bytes,
 )
 from repro.models import common as cm
-from repro.obs import MetricsRegistry, Observability
-from repro.resilience.faults import FaultInjected, FaultPlan
+from repro.obs import MetricsRegistry
+from repro.resilience.faults import FaultInjected
+from repro.serving.config import EngineConfig, resolve_engine_config
 
-__all__ = ["Request", "ServingEngine", "PagedServingEngine",
+__all__ = ["Request", "EngineConfig", "ServingEngine", "PagedServingEngine",
            "PerSlotServingEngine"]
 
 
@@ -105,6 +107,12 @@ def _jitted_chunked_prefill(model, cfg: ModelConfig,
         donate_argnums=4)
 
 
+# copy-on-write page clone: one donated jit per pool-leaf shape copies a
+# single physical page's data inside the pool buffer (page axis 1)
+_page_copy = jax.jit(lambda buf, src, dst: buf.at[:, dst].set(buf[:, src]),
+                     donate_argnums=0)
+
+
 def _sample_key(step: int, uid: int) -> jax.Array:
     """Per-(tick, request) PRNG key.  Folding in the uid is load-bearing:
     a step-only fold hands every slot in a tick the SAME key, i.e.
@@ -142,17 +150,21 @@ class _EngineBase:
     dispatches (tests/test_obs.py pins zero overhead and token
     identity)."""
 
-    def __init__(self, model, params, cfg: ModelConfig, *, max_slots: int = 4,
-                 max_len: int = 256, policy: QuantPolicy | None = None,
-                 eos_id: int = -1, kv_bits: int | None = None,
-                 obs: Observability | None = None,
-                 faults: FaultPlan | None = None, nan_guard: bool = False):
+    def __init__(self, model, params, cfg: ModelConfig, *,
+                 config: EngineConfig | None = None, **legacy):
+        # ONE EngineConfig carries every knob (docs/api.md); the legacy
+        # per-kwarg form builds an equivalent config through a shim that
+        # warns once per process (serving/config.py)
+        config = resolve_engine_config(config, legacy)
+        self.config = config
+        policy, obs = config.policy, config.obs
         self.model, self.params, self.cfg = model, params, cfg
         self.policy = policy
-        self.max_slots, self.max_len = max_slots, max_len
-        self.eos_id = eos_id
-        self.kv_bits = kv_bits
+        self.max_slots, self.max_len = config.max_slots, config.max_len
+        self.eos_id = config.eos_id
+        self.kv_bits = config.kv_bits
         self.obs = obs
+        faults, nan_guard = config.faults, config.nan_guard
         # resilience layer (docs/resilience.md): both OPT-IN with the
         # obs-hook zero-overhead contract — faults=None / nan_guard=False
         # cost one attribute check per site and change nothing else
@@ -174,7 +186,7 @@ class _EngineBase:
         self.on_token = None                      # fn(req, tok) per token
         self.on_retire = None                     # fn(req) at retirement
         self.queue: deque[Request] = deque()
-        self.slots: list[Request | None] = [None] * max_slots
+        self.slots: list[Request | None] = [None] * self.max_slots
         self.retired: list[Request] = []
         self._prefill, self._decode = _jitted(model, cfg, policy)
         self._step = 0
@@ -796,28 +808,32 @@ class PagedServingEngine(ServingEngine):
     Decode keeps the batched engine's contract: ONE ``(max_slots, 1)``
     dispatch per tick, greedy output token-identical to
     ``PerSlotServingEngine``.
+
+    Prefix caching (``EngineConfig(prefix_cache=True)``, docs/serving.md
+    §Prefix caching): prompts are chain-hashed in page-size chunks into
+    a host-side map from chunk chain → physical page.  A cache-hit
+    admission points its page-table row at the shared pages (per-page
+    refcounts) and re-prefills ONLY the non-shared suffix through the
+    chunked-continuation dispatch; freed pages park in an LRU tier
+    reclaimed under pool pressure, and copy-on-write clones any shared
+    page before a write could touch it.  Off (the default) the engine
+    runs the pre-cache allocator byte for byte.
     """
 
-    def __init__(self, model, params, cfg: ModelConfig, *, max_slots: int = 4,
-                 max_len: int = 256, policy: QuantPolicy | None = None,
-                 eos_id: int = -1, kv_bits: int | None = None,
-                 page_size: int = 64, n_pages: int | None = None,
-                 prefill_bucket: int = 16, prefill_chunk: int | None = None,
-                 obs: Observability | None = None,
-                 faults: FaultPlan | None = None, nan_guard: bool = False):
-        self.page_size = page_size
-        self.prefill_bucket = prefill_bucket
-        self._n_pages_arg = n_pages
-        super().__init__(model, params, cfg, max_slots=max_slots,
-                         max_len=max_len, policy=policy, eos_id=eos_id,
-                         kv_bits=kv_bits, obs=obs, faults=faults,
-                         nan_guard=nan_guard)
+    def __init__(self, model, params, cfg: ModelConfig, *,
+                 config: EngineConfig | None = None, **legacy):
+        config = resolve_engine_config(config, legacy)
+        self.page_size = config.page_size
+        self.prefill_bucket = config.prefill_bucket
+        self._n_pages_arg = config.n_pages
+        super().__init__(model, params, cfg, config=config)
+        policy = config.policy
         self._prefill_paged = _jitted_paged_prefill(model, cfg, policy)
         self._prefill_paged_fb = (
             _jitted_paged_prefill(model, cfg, self._fb_policy)
             if self._fb_policy is not None else None)
         self._admit_seq = 0
-        self._admitted_at = [0] * max_slots
+        self._admitted_at = [0] * self.max_slots
         # chunked prefill: prompts longer than ``prefill_chunk`` stream
         # through bounded (n, chunk) continuation dispatches interleaved
         # with decode ticks, so a long admit can't stall a tick's worth
@@ -825,11 +841,13 @@ class PagedServingEngine(ServingEngine):
         # family's prefill_paged — families without the continuation
         # path (SSM scan state, per-invocation hybrid KV, MLA latent
         # pools) fall back to whole-prompt prefill, recorded in stats().
-        self.prefill_chunk = prefill_chunk
-        self._chunked = (bool(prefill_chunk) and self._pt is not None
+        self.prefill_chunk = config.prefill_chunk
+        self._chunked = (bool(config.prefill_chunk) and self._pt is not None
                          and getattr(model, "supports_chunked_prefill",
                                      False))
-        if self._chunked:
+        # the prefix cache's suffix re-prefill rides the same per-row
+        # ``start=`` continuation jit, so it is built for either feature
+        if self._chunked or self._prefix_on:
             self._prefill_cont = _jitted_chunked_prefill(model, cfg, policy)
             self._prefill_cont_fb = (
                 _jitted_chunked_prefill(model, cfg, self._fb_policy)
@@ -854,6 +872,26 @@ class PagedServingEngine(ServingEngine):
         self._len = np.zeros((self.max_slots,), np.int32)
         self.peak_pages_in_use = 0
         self._prefilling: dict[int, int] = {}   # slot → prompt tokens done
+        # prefix cache (docs/serving.md §Prefix caching): content-chained
+        # chunk hashes → physical pages, per-page slot refcounts, and an
+        # LRU tier of cached-but-unreferenced pages reclaimed under pool
+        # pressure.  Gated on the chunked-prefill continuation dispatch
+        # (the suffix re-prefill needs per-row ``start`` offsets):
+        # families without it admit every request as a miss, and the
+        # knob defaults OFF — a cache-off engine runs the pre-cache
+        # allocator byte for byte.
+        self._prefix_on = (bool(self.config.prefix_cache)
+                           and self._pt is not None
+                           and getattr(self.model,
+                                       "supports_chunked_prefill", False))
+        # refcounts are maintained whenever a pool exists (cache on or
+        # off — with the map empty they reduce to the old free list)
+        self._ref = (np.zeros((self.n_pages,), np.int64)
+                     if self._pt is not None else None)
+        self._cache_map: dict[int, int] = {}   # chain key → physical page
+        self._page_key: dict[int, int] = {}    # physical page → chain key
+        self._lru: dict[int, int] = {}         # chain key → last-use seq
+        self._lru_seq = 0
 
     def _host_state_cache(self):
         """Cache pytree with the HOST-authoritative page table + per-slot
@@ -892,6 +930,9 @@ class PagedServingEngine(ServingEngine):
 
     def _pool_stats(self) -> dict:
         n = max(self.n_pages, 1)
+        c = self._metrics.counter
+        hits = int(c("prefix.hits").value)
+        misses = int(c("prefix.misses").value)
         return {"page_size": self.page_size, "n_pages": self.n_pages,
                 "table_width": self.table_width,
                 "pages_in_use": self.pages_in_use,
@@ -900,7 +941,21 @@ class PagedServingEngine(ServingEngine):
                 "page_occupancy_peak": self.peak_pages_in_use / n,
                 "paged_attention_backend": self.paged_attention_backend,
                 "prefill_chunk": self.prefill_chunk or 0,
-                "chunked_prefill": self._chunked}
+                "chunked_prefill": self._chunked,
+                "prefix": {
+                    "enabled": self._prefix_on,
+                    "hits": hits, "misses": misses,
+                    "hit_rate": hits / max(hits + misses, 1),
+                    "shared_pages": int(c("prefix.shared_pages").value),
+                    "cow_copies": int(c("prefix.cow_copies").value),
+                    "evictions": int(c("prefix.evictions").value),
+                    "cached_pages": len(self._page_key),
+                    "saved_prefill_tokens": int(
+                        c("prefix.saved_prefill_tokens").value),
+                    "saved_prefill_flops": int(
+                        c("prefix.saved_prefill_flops").value),
+                    "saved_hbm_bytes": int(
+                        c("prefix.saved_hbm_bytes").value)}}
 
     def _pages_needed(self, n_tokens: int) -> int:
         if self._pt is None:
@@ -929,9 +984,14 @@ class PagedServingEngine(ServingEngine):
         super().submit(req)
 
     def _release_slot(self, slot: int):
-        """Free the slot and return its pages to the shared pool."""
+        """Free the slot and drop its page references.  A page returns
+        to the free list only at refcount 0 AND out of the cache map —
+        prefix-shared pages survive a co-resident's retirement, and
+        cached pages park in the LRU eviction tier instead."""
         if self._pt is not None:
-            self._free.extend(int(p) for p in self._pt[slot] if p >= 0)
+            for p in self._pt[slot]:
+                if p >= 0:
+                    self._decref(int(p))
             self._pt[slot] = -1
         self._len[slot] = 0
         self.slots[slot] = None
@@ -939,6 +999,162 @@ class PagedServingEngine(ServingEngine):
 
     def _evict_slot(self, slot: int):
         self._release_slot(slot)
+
+    # -- page allocator (refcounts + prefix-cache LRU tier) -----------------
+
+    def _decref(self, p: int):
+        self._ref[p] -= 1
+        if self._ref[p] == 0 and p not in self._page_key:
+            self._free.append(p)
+
+    def _alloc_page(self) -> int | None:
+        """Pop a free page, reclaiming an LRU cached-but-unreferenced
+        page first when the free list is dry.  Returns None when nothing
+        can be reclaimed (the caller stalls or backpressures)."""
+        if not self._free and self._prefix_on:
+            self._evict_lru()
+        return self._free.pop() if self._free else None
+
+    def _evict_lru(self) -> bool:
+        """Reclaim the least-recently-used cached page no slot
+        references.  Evicting a mid-chain entry orphans its descendants
+        (their keys stop being reachable by any match walk) — they age
+        out of the LRU the same way, a deliberate simplification over
+        cascading the eviction."""
+        for key in sorted(self._lru, key=self._lru.get):
+            p = self._cache_map[key]
+            if self._ref[p] == 0:
+                del self._cache_map[key]
+                del self._page_key[p]
+                del self._lru[key]
+                self._free.append(p)
+                self._metrics.counter("prefix.evictions").inc()
+                return True
+        return False
+
+    def _avail_pages(self) -> int:
+        """Pages an admission could obtain: the free list plus the LRU
+        eviction tier (cached pages no slot references)."""
+        n = len(self._free)
+        if self._prefix_on:
+            n += sum(1 for p in self._page_key if self._ref[p] == 0)
+        return n
+
+    def _page_shared(self, p: int) -> bool:
+        """A write must never mutate this page in place: another slot
+        still references it, or the cache map could hand it to a future
+        admission."""
+        return self._ref[p] > 1 or p in self._page_key
+
+    def _cow_slot_page(self, slot: int, pi: int) -> bool:
+        """Copy-on-write: clone the slot's logical page ``pi`` into a
+        fresh physical page before a write would hit pool memory other
+        rows (or the cache map) still reference — ``paged_update``
+        itself never mutates a shared page.  Returns False when no page
+        can be allocated for the clone (the caller stalls, exactly like
+        an allocation failure)."""
+        dst = self._alloc_page()
+        if dst is None:
+            return False
+        src = int(self._pt[slot, pi])
+        self._clone_pool_page(src, dst)
+        self._pt[slot, pi] = dst
+        self._ref[dst] += 1
+        self._decref(src)
+        self._metrics.counter("prefix.cow_copies").inc()
+        return True
+
+    def _clone_pool_page(self, src: int, dst: int):
+        """Copy one physical page across every pool data leaf (k/v +
+        int8 scales) with a donated jit per leaf, so the pool updates in
+        place instead of re-materializing."""
+        part = _paged_part(self.cache)
+        src_j, dst_j = jnp.asarray(src), jnp.asarray(dst)
+        rep = {name: _page_copy(getattr(part, name), src_j, dst_j)
+               for name in ("k", "v", "k_scale", "v_scale")
+               if getattr(part, name) is not None}
+        new_part = dataclasses.replace(part, **rep)
+        if isinstance(self.cache, cm.PagedKVCache):
+            self.cache = new_part
+        else:
+            self.cache = dataclasses.replace(self.cache, attn=new_part)
+
+    # -- prefix cache (chunk-chain hashing over the page pool) --------------
+
+    def _chain_keys(self, ctx: np.ndarray) -> list[int]:
+        """Chain hash per FULL page-size chunk of ``ctx``: key_k folds
+        key_{k-1} with chunk k's tokens, so a chunk only matches under
+        an identical full prefix — page k's KV depends on positions
+        ``[0, k*page)`` as much as on its own tokens.  A partial tail
+        chunk gets no key (only whole pages are ever shared)."""
+        ps = self.page_size
+        keys, prev = [], 0
+        for k in range(len(ctx) // ps):
+            prev = hash((prev,
+                         np.asarray(ctx[k * ps:(k + 1) * ps],
+                                    np.int64).tobytes()))
+            keys.append(prev)
+        return keys
+
+    def _touch(self, key: int):
+        self._lru_seq += 1
+        self._lru[key] = self._lru_seq
+
+    def _match_prefix(self, ctx: np.ndarray) -> tuple[list[int], int]:
+        """Longest cached chunk chain prefixing ``ctx`` → (physical
+        pages, matched token count).  Touches every matched entry, so
+        LRU eviction drops the deepest chain nodes first."""
+        if not self._prefix_on:
+            return [], 0
+        pages = []
+        for key in self._chain_keys(ctx):
+            p = self._cache_map.get(key)
+            if p is None:
+                break
+            self._touch(key)
+            pages.append(p)
+        return pages, len(pages) * self.page_size
+
+    def _register_prefix(self, slot: int, ctx: np.ndarray):
+        """Publish the slot's freshly prefilled FULL prompt pages into
+        the chain map (the partial tail page stays exclusive — decode
+        keeps writing into it).  Runs AFTER the prefill dispatch that
+        wrote the pages completes, so a same-round co-admission can
+        never point at not-yet-written pool memory.  Existing entries
+        win: the content is identical, and re-pointing would strand the
+        old page's cache hold."""
+        if not self._prefix_on:
+            return
+        for k, key in enumerate(self._chain_keys(ctx)):
+            p = int(self._pt[slot, k])
+            if p < 0:
+                break
+            self._touch(key)
+            if key in self._cache_map:
+                continue
+            self._cache_map[key] = p
+            self._page_key[p] = key
+
+    def _note_prefix_hit(self, req: Request, slot: int, ctx: np.ndarray,
+                         start: int, n_shared: int):
+        """Attribution for one cache-hit admission: hit counters, the
+        roofline-modeled prefill work the shared pages avoided, and the
+        ``prefix_hit`` trace event."""
+        self._metrics.counter("prefix.hits").inc()
+        self._metrics.counter("prefix.shared_pages").inc(n_shared)
+        self._metrics.counter("prefix.saved_prefill_tokens").inc(start)
+        self._metrics.counter("prefix.saved_prefill_flops").inc(
+            serving_prefill_flops(self.cfg, 1, start))
+        self._metrics.counter("prefix.saved_hbm_bytes").inc(
+            serving_prefill_hbm_bytes(
+                self.cfg, 1, start,
+                weight_bits=self.policy.weight_bits if self.policy else None,
+                kv_bits=self.kv_bits))
+        if self.obs is not None:
+            self._tracer.emit("prefix_hit", ts=self._clock(), uid=req.uid,
+                              slot=slot, matched_tokens=start,
+                              shared_pages=n_shared,
+                              suffix_tokens=len(ctx) - start)
 
     # -- admission layer ----------------------------------------------------
 
@@ -952,22 +1168,31 @@ class PagedServingEngine(ServingEngine):
     def _admit_round(self) -> bool:
         free_slots = [i for i in range(self.max_slots)
                       if self.slots[i] is None]
-        batch: list[tuple[int, Request]] = []
-        admitted_chunked = False
+        batch: list[tuple[int, Request, np.ndarray]] = []
+        hits: list[tuple[int, Request, np.ndarray, int]] = []
+        admitted_deferred = False
         while free_slots and self.queue:
             req = self.queue[0]
             ctx = self._resume_ctx(req)
-            need = self._pages_needed(len(ctx))
+            total = self._pages_needed(len(ctx))
+            if self._pt is not None and total > min(self.n_pages,
+                                                    self.table_width):
+                # a resumed context that can NEVER fit again (watchdog
+                # re-admission can outgrow a small pool): retire
+                # truncated, exactly like _preempt_youngest — leaving
+                # it at the FIFO head would starve everything behind
+                self.queue.popleft()
+                self._retire(req)
+                continue
+            shared, matched = self._match_prefix(ctx)
+            # a FULL match still re-prefills the last token for its
+            # next-token logits; that write lands inside the final
+            # shared page, so admission reserves one page for the COW
+            # clone and the suffix start backs up to len-1
+            full = shared and matched == len(ctx)
+            need = total - len(shared) + (1 if full else 0)
             if self._pt is not None:
-                if need > min(self.n_pages, self.table_width):
-                    # a resumed context that can NEVER fit again (watchdog
-                    # re-admission can outgrow a small pool): retire
-                    # truncated, exactly like _preempt_youngest — leaving
-                    # it at the FIFO head would starve everything behind
-                    self.queue.popleft()
-                    self._retire(req)
-                    continue
-                if need > len(self._free):
+                if need > self._avail_pages():
                     break                # backpressure: FIFO head waits
                 if (self._faults is not None
                         and self._fire("page_alloc_fail", uid=req.uid,
@@ -976,8 +1201,36 @@ class PagedServingEngine(ServingEngine):
             self.queue.popleft()
             slot = free_slots.pop(0)
             if self._pt is not None:
-                for j in range(need):
-                    self._pt[slot, j] = self._free.pop()
+                # shared pages first: the incref pins them against any
+                # eviction the fresh allocations below may trigger
+                for j, p in enumerate(shared):
+                    self._pt[slot, j] = p
+                    self._ref[p] += 1
+                for j in range(len(shared), total):
+                    p = self._alloc_page()
+                    self._pt[slot, j] = p
+                    self._ref[p] += 1
+            if shared:
+                start = min(matched, len(ctx) - 1)
+                self._note_prefix_hit(req, slot, ctx, start, len(shared))
+                if full:
+                    self._cow_slot_page(slot, total - 1)
+                self.slots[slot] = req
+                self._len[slot] = start
+                self._admitted_at[slot] = self._admit_seq
+                self._admit_seq += 1
+                if self.obs is not None:
+                    self._obs_admitted(req, slot)
+                if self._chunked and len(ctx) - start > self.prefill_chunk:
+                    # long suffix: ride the chunked-prefill continuation
+                    # machinery from the matched offset
+                    self._prefilling[slot] = start
+                    admitted_deferred = True
+                else:
+                    hits.append((slot, req, ctx, start))
+                continue
+            if self._prefix_on:
+                self._metrics.counter("prefix.misses").inc()
             if self._chunked and len(ctx) > self.prefill_chunk:
                 # chunked-prefill path: the slot and ALL its prompt pages
                 # are assigned now (backpressure semantics unchanged) but
@@ -990,12 +1243,14 @@ class PagedServingEngine(ServingEngine):
                 self._admit_seq += 1
                 if self.obs is not None:
                     self._obs_admitted(req, slot)
-                admitted_chunked = True
+                admitted_deferred = True
                 continue
             batch.append((slot, req, ctx))
         if not batch:
+            if hits:
+                self._prefill_suffix(hits)
             self._note_occupancy()
-            return admitted_chunked
+            return bool(hits) or admitted_deferred
         # ONE (n_pad, s_pad) prefill dispatch for the whole batch:
         # prompt lengths bucket-padded, row count padded to a power of
         # two (sentinel rows' writes drop in the kernel)
@@ -1035,8 +1290,12 @@ class PagedServingEngine(ServingEngine):
             self._tracer.emit("prefill", ts=now, n_requests=len(batch),
                               n_tokens=int(lens.sum()), rows=n_pad,
                               padded_len=s_pad, dur_s=now - t0)
-        for r, (slot, req, _) in enumerate(batch):
+        for r, (slot, req, ctx) in enumerate(batch):
             self._count_prefill(req, int(lens[r]))
+            # register AFTER the dispatch wrote the pages; BEFORE the
+            # finish check, so a one-shot request (the system-prompt
+            # seeding shape) still populates the cache as it retires
+            self._register_prefix(slot, ctx)
             nxt = int(_sample_one(logits[r], req.temperature, self._step,
                                   req.uid)[0])
             if self.obs is not None:
@@ -1050,8 +1309,71 @@ class PagedServingEngine(ServingEngine):
                 self._len[slot] = int(lens[r])
                 self._admitted_at[slot] = self._admit_seq
                 self._admit_seq += 1
+        if hits:
+            self._prefill_suffix(hits)
         self._note_occupancy()
         return True
+
+    def _prefill_suffix(self, hits: list):
+        """ONE batched continuation dispatch for this round's cache-hit
+        admissions: each row re-prefills ONLY its non-shared suffix at
+        its per-row ``start`` offset, attending over the shared pages
+        through its page table (prefix caching requires
+        ``supports_chunked_prefill`` for exactly this dispatch).  Suffix
+        lengths are bucket-padded and the row count padded to a power of
+        two like the whole-prompt path.  Only the dispatched suffix
+        tokens are counted as prefill work — the acceptance pin for "the
+        second admit prefills only the non-shared suffix"."""
+        n_pad = 1 << (len(hits) - 1).bit_length()
+        s_max = max(len(ctx) - start for _, _, ctx, start in hits)
+        s_pad = min(self.max_len,
+                    -(-s_max // self.prefill_bucket) * self.prefill_bucket)
+        toks = np.zeros((n_pad, s_pad), np.int32)
+        lens = np.zeros((n_pad,), np.int32)
+        starts = np.zeros((n_pad,), np.int32)
+        rows = np.full((n_pad,), self.max_slots, np.int32)
+        for r, (slot, req, ctx, start) in enumerate(hits):
+            suffix = ctx[start:]
+            toks[r, :len(suffix)] = suffix
+            lens[r] = len(suffix)
+            starts[r] = start
+            rows[r] = slot
+        t0 = self._clock() if self.obs is not None else 0.0
+        toks_j, lens_j = jnp.asarray(toks), jnp.asarray(lens)
+        starts_j, rows_j = jnp.asarray(starts), jnp.asarray(rows)
+        (logits, self.cache), used = self._dispatch_guarded(
+            "prefill",
+            lambda: self._prefill_cont(self.params, toks_j, lens_j, starts_j,
+                                       self._host_state_cache(), rows_j),
+            None if self._prefill_cont_fb is None else
+            (lambda: self._prefill_cont_fb(self.params, toks_j, lens_j,
+                                           starts_j,
+                                           self._host_state_cache(),
+                                           rows_j)))
+        self._c_prefill.inc()
+        self._attr_prefill_dispatch(n_pad, s_pad, used)
+        if self.obs is not None:
+            logits.block_until_ready()
+            now = self._clock()
+            self._metrics.histogram("engine.prefill_s").observe(now - t0)
+            self._tracer.emit("prefill", ts=now, n_requests=len(hits),
+                              n_tokens=int(lens.sum()), rows=n_pad,
+                              padded_len=s_pad, dur_s=now - t0, prefix=True)
+        for r, (slot, req, ctx, start) in enumerate(hits):
+            took = int(lens[r])
+            self._count_prefill(req, took)
+            self._len[slot] = start + took
+            # deepen the chain: matched entries are skipped, the hit's
+            # own full suffix pages register as new descendants
+            self._register_prefix(slot, ctx)
+            nxt = int(_sample_one(logits[r], req.temperature, self._step,
+                                  req.uid)[0])
+            if self.obs is not None:
+                self._obs_prefill_token(req)
+            self._append_token(req, nxt)
+            if self._finished(req, nxt):
+                self._retire(req)
+                self._release_slot(slot)
 
     def _advance_prefill(self):
         """Advance every chunk-prefilling slot by ONE bounded chunk with
@@ -1109,6 +1431,10 @@ class PagedServingEngine(ServingEngine):
                 self._prefilling[slot] = done + took
                 continue
             del self._prefilling[slot]
+            # the prompt is fully written: publish its full pages (a
+            # cache-hit slot chunking from a matched offset deepens the
+            # chain — its matched entries are skipped)
+            self._register_prefix(slot, self._resume_ctx(req))
             nxt = int(_sample_one(logits[r], req.temperature, self._step,
                                   req.uid)[0])
             if self.obs is not None:
@@ -1181,9 +1507,21 @@ class PagedServingEngine(ServingEngine):
                                            uid=self.slots[i].uid,
                                            op="grow")):
                         continue
-                    if not self._free:
+                    p = self._alloc_page()
+                    if p is None:
                         continue
-                    self._pt[i, pi] = self._free.pop()
+                    self._pt[i, pi] = p
+                    self._ref[p] += 1
+                elif (self._prefix_on and pi < self.table_width
+                      and self._page_shared(int(self._pt[i, pi]))
+                      and not self._cow_slot_page(i, pi)):
+                    # shared/cached pages are always FULL pages, so a
+                    # decode write (position >= the prefilled length)
+                    # structurally lands in an exclusive tail or a fresh
+                    # page — this guard is the paged_update contract's
+                    # backstop, and a failed clone stalls like an
+                    # allocation failure
+                    continue
             ready.append(i)
         self._note_occupancy()
         if not ready:

@@ -17,18 +17,23 @@ Architecture — two threads, one owner each:
     accepts connections; HTTP/1.1 is hand-rolled (no new deps) and
     token streams go out as chunked transfer-encoded ndjson.
 
-Protocol (docs/serving.md):
+Protocol, wire version 1 (docs/api.md has the full field-by-field
+schema; versioning is additive — new fields may appear, existing ones
+never change meaning, and ``WIRE_VERSION`` bumps only on a break):
 
     POST /generate   {"prompt": [ints], "max_new_tokens": N,
                       "temperature": T, "deadline_s": D}
         → 200, one ndjson record per token {"token": t}, then a final
           {"done": true, "uid": u, "tokens": [...], "n_tokens": n,
-           "expired": bool, "cancelled": bool}
-        → 400 invalid body / over-capacity prompt
+           "expired": bool, "cancelled": bool, "failed": bool}
+        → 400 invalid body / over-capacity prompt / unknown request
+          fields (named in the error, so client typos fail loudly
+          instead of being silently ignored)
         → 503 admission control shed ({"error": "shed", ...})
-    GET /healthz     → 200 {"ok": true, "state": "ok"|"recovering"|
-                            "degraded", "restarts": n}   (503 once failed)
-    GET /stats       → 200 engine stats() + front-end counters
+    GET /healthz     → 200 {"v": 1, "ok": true, "state": "ok"|
+                            "recovering"|"degraded", "restarts": n}
+                       (503 once failed)
+    GET /stats       → 200 {"v": 1, ...engine stats(), "frontend": {...}}
 
 Admission control sheds BEFORE the engine sees the request: hard cap on
 queue depth, plus a load score ``queue_depth × pool_occupancy`` (an
@@ -70,7 +75,14 @@ import numpy as np
 from repro.resilience.faults import FaultPlan
 from repro.serving.engine import Request
 
-__all__ = ["ServingFrontend", "http_generate", "http_get"]
+__all__ = ["ServingFrontend", "http_generate", "http_get", "WIRE_VERSION"]
+
+# wire-contract version stamped into /stats and /healthz JSON; request
+# fields outside GENERATE_FIELDS are a 400 (tests/test_frontend.py pins
+# the schema so future fields stay additive)
+WIRE_VERSION = 1
+GENERATE_FIELDS = frozenset(
+    {"prompt", "max_new_tokens", "temperature", "deadline_s"})
 
 
 def _json_bytes(obj) -> bytes:
@@ -372,7 +384,8 @@ class ServingFrontend:
             elif method == "GET" and path == "/healthz":
                 ok = self._health != "failed"
                 self._respond(writer, 200 if ok else 503,
-                              {"ok": ok, "state": self._health,
+                              {"v": WIRE_VERSION, "ok": ok,
+                               "state": self._health,
                                "restarts": self.restarts})
             elif method == "GET" and path == "/stats":
                 self._respond(writer, 200, self._stats())
@@ -392,6 +405,7 @@ class ServingFrontend:
             # mutates; losing one poll to the race beats locking the tick
             st = {}
         st.pop("per_request", None)
+        st["v"] = WIRE_VERSION
         st["frontend"] = {"accepted": self.accepted, "shed": self.shed,
                           "expired": self.expired,
                           "disconnected": self.disconnected,
@@ -426,6 +440,14 @@ class ServingFrontend:
             prompt = np.asarray(payload["prompt"], np.int64).reshape(-1)
         except (ValueError, KeyError, TypeError):
             self._respond(writer, 400, {"error": "invalid body"})
+            return
+        unknown = sorted(set(payload) - GENERATE_FIELDS)
+        if unknown:
+            # fail typos loudly: the v1 contract names the accepted
+            # fields instead of silently dropping the unknown ones
+            self._respond(writer, 400, {
+                "error": f"unknown fields: {', '.join(unknown)}",
+                "known_fields": sorted(GENERATE_FIELDS)})
             return
         if len(prompt) == 0 or len(prompt) > self.engine.prompt_capacity:
             self._respond(writer, 400, {

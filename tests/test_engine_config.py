@@ -1,0 +1,178 @@
+"""Unified EngineConfig surface (repro.serving.config + docs/api.md).
+
+Pins the api_redesign satellite's contracts:
+
+  * ONE frozen value object configures all three engines — every engine
+    accepts ``config=EngineConfig(...)`` and serves with it;
+  * JSON round trip like FaultPlan (policy and faults embedded; ``obs``
+    is runtime-only and dropped), unknown fields rejected by name;
+  * field validation at construction (bounds, kv_bits, eviction policy);
+  * the legacy per-kwarg constructor still works through a deprecation
+    shim that warns ONCE per process, rejects unknown kwargs with a
+    TypeError, and refuses to mix both forms;
+  * config-built and shim-built engines are behaviorally IDENTICAL:
+    same greedy tokens, same deterministic run_stats counters.
+"""
+
+import dataclasses
+import functools
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.qlinear import QuantPolicy
+from repro.models.api import get_model
+from repro.resilience.faults import FaultPlan, FaultSpec
+from repro.serving import config as config_mod
+from repro.serving.engine import (EngineConfig, PagedServingEngine,
+                                  PerSlotServingEngine, Request,
+                                  ServingEngine)
+
+KEY = jax.random.PRNGKey(0)
+
+ENGINES = {
+    "per_slot": PerSlotServingEngine,
+    "batched": ServingEngine,
+    "paged": PagedServingEngine,
+}
+
+
+@functools.lru_cache(maxsize=None)
+def _setup():
+    cfg = get_config("stablelm_3b").reduced()
+    model = get_model(cfg)
+    return cfg, model, model.init(KEY, cfg)
+
+
+def _requests(cfg, n=3, max_new=4):
+    return [Request(uid=i,
+                    prompt=np.random.default_rng(i).integers(
+                        0, cfg.vocab_size, size=(3 + i,)),
+                    max_new_tokens=max_new) for i in range(n)]
+
+
+def _serve(eng, cfg, **kw):
+    for r in _requests(cfg, **kw):
+        eng.submit(r)
+    done = eng.run(max_ticks=300)
+    return {r.uid: list(map(int, r.out_tokens)) for r in done}
+
+
+# ---------------------------------------------------------------------------
+# the value object
+# ---------------------------------------------------------------------------
+
+
+def test_json_round_trip():
+    ec = EngineConfig(max_slots=2, max_len=32,
+                      policy=QuantPolicy(weight_bits=8, act_bits=8,
+                                         pack_weights=False,
+                                         use_kernels="never"),
+                      kv_bits=8, page_size=4, n_pages=12, prefill_chunk=8,
+                      faults=FaultPlan([FaultSpec("dispatch_raise",
+                                                  op="decode", at=3)]),
+                      nan_guard=True, prefix_cache=True)
+    rt = EngineConfig.from_json(ec.to_json())
+    # FaultPlan carries mutable firing state and compares by identity,
+    # so equality is checked via the spec list + the JSON fixed point
+    assert rt.faults.specs == ec.faults.specs
+    assert rt.to_json() == ec.to_json()
+    assert dataclasses.replace(rt, faults=None) == dataclasses.replace(
+        ec, faults=None)
+    # defaults round-trip too, and obs is runtime-only: never serialized
+    assert EngineConfig.from_json(EngineConfig().to_json()) == EngineConfig()
+    assert '"obs"' not in ec.to_json()
+
+
+def test_from_json_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown EngineConfig fields"):
+        EngineConfig.from_json('{"max_slots": 2, "max_new_tokens": 4}')
+
+
+@pytest.mark.parametrize("bad", [dict(max_slots=0), dict(max_len=0),
+                                 dict(page_size=0), dict(prefill_bucket=-1),
+                                 dict(n_pages=0), dict(prefill_chunk=0),
+                                 dict(kv_bits=4),
+                                 dict(prefix_evict="fifo")])
+def test_validation(bad):
+    with pytest.raises(ValueError):
+        EngineConfig(**bad)
+
+
+def test_frozen():
+    ec = EngineConfig()
+    with pytest.raises(Exception):
+        ec.max_slots = 8
+
+
+# ---------------------------------------------------------------------------
+# the legacy-kwarg shim
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_kwargs_warn_once_per_process(monkeypatch):
+    cfg, model, params = _setup()
+    monkeypatch.setattr(config_mod, "_legacy_warned", False)
+    with pytest.warns(DeprecationWarning, match="config=EngineConfig"):
+        ServingEngine(model, params, cfg, max_slots=2, max_len=32)
+    # second legacy construction: silent (property tests build hundreds)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ServingEngine(model, params, cfg, max_slots=2, max_len=32)
+    assert config_mod._legacy_warned
+
+
+def test_unknown_kwarg_is_typeerror():
+    cfg, model, params = _setup()
+    with pytest.raises(TypeError, match="unknown engine kwargs.*max_slotz"):
+        ServingEngine(model, params, cfg, max_slotz=2)
+
+
+def test_mixing_config_and_kwargs_is_typeerror():
+    cfg, model, params = _setup()
+    with pytest.raises(TypeError, match="not both"):
+        ServingEngine(model, params, cfg, config=EngineConfig(), max_slots=2)
+
+
+# ---------------------------------------------------------------------------
+# engines under the config
+# ---------------------------------------------------------------------------
+
+
+def test_all_engines_accept_one_config():
+    """ONE config builds any engine (non-paged engines ignore the
+    page-pool fields) and every engine serves under it."""
+    cfg, model, params = _setup()
+    ec = EngineConfig(max_slots=2, max_len=32, page_size=4, prefill_bucket=8)
+    outs = {}
+    for name, cls in ENGINES.items():
+        eng = cls(model, params, cfg, config=ec)
+        assert eng.config == ec
+        outs[name] = _serve(eng, cfg)
+    # greedy equivalence across engine families still holds via config
+    assert outs["per_slot"] == outs["batched"] == outs["paged"]
+
+
+def test_config_and_shim_builds_identical():
+    """A config-built engine and a legacy-kwarg-built engine are the
+    SAME engine: identical greedy tokens and deterministic counters."""
+    cfg, model, params = _setup()
+    kw = dict(max_slots=2, max_len=32, page_size=4, prefill_bucket=8,
+              prefill_chunk=8, kv_bits=8)
+    via_config = PagedServingEngine(model, params, cfg,
+                                    config=EngineConfig(**kw))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        via_shim = PagedServingEngine(model, params, cfg, **kw)
+    assert via_shim.config == via_config.config
+    toks_c = _serve(via_config, cfg)
+    toks_s = _serve(via_shim, cfg)
+    assert toks_c == toks_s
+    st_c, st_s = via_config.run_stats, via_shim.run_stats
+    for key in ("decode_tokens", "prefill_tokens", "decode_dispatches",
+                "prefill_dispatches", "ticks", "n_pages", "page_size",
+                "prefill_chunk", "prefix"):
+        assert st_c[key] == st_s[key], key

@@ -36,7 +36,7 @@ from repro.configs.base import get_config
 from repro.models.api import get_model
 from repro.obs import Observability, load_trace, summarize
 from repro.resilience.faults import FaultPlan, FaultSpec
-from repro.serving.engine import PagedServingEngine, Request
+from repro.serving.engine import EngineConfig, PagedServingEngine, Request
 from repro.serving.frontend import ServingFrontend, http_generate, http_get
 
 KEY = jax.random.PRNGKey(0)
@@ -55,8 +55,8 @@ def _engine(obs=None, **kw):
     kw.setdefault("max_slots", 2)
     kw.setdefault("max_len", 32)
     kw.setdefault("page_size", 4)
-    return PagedServingEngine(model, params, cfg, prefill_bucket=8, obs=obs,
-                              **kw)
+    cfgE = EngineConfig(prefill_bucket=8, obs=obs, **kw)
+    return PagedServingEngine(model, params, cfg, config=cfgE)
 
 
 def _prompts(n):
@@ -219,13 +219,45 @@ def test_endpoints_and_validation():
 
     h, st, nf, bad, huge = asyncio.run(go())
     assert h["status"] == 200
-    assert h["body"] == {"ok": True, "state": "ok", "restarts": 0}
+    assert h["body"] == {"v": 1, "ok": True, "state": "ok", "restarts": 0}
     assert st["status"] == 200
     assert st["body"]["frontend"]["open_streams"] == 0
     assert nf["status"] == 404
     assert bad["status"] == 400
     assert huge["status"] == 400
     assert huge["body"]["capacity"] == eng.prompt_capacity
+
+
+def test_wire_schema_v1():
+    """The wire schema pin (docs/api.md): /healthz and /stats carry the
+    version tag, and a POST body with fields outside the documented
+    /generate schema is a 400 NAMING the offenders — versioning is
+    additive, so an old client never silently loses a field."""
+    from repro.serving.frontend import GENERATE_FIELDS, WIRE_VERSION
+
+    assert WIRE_VERSION == 1
+    assert GENERATE_FIELDS == {"prompt", "max_new_tokens", "temperature",
+                               "deadline_s"}
+
+    async def go():
+        async with ServingFrontend(_engine()) as fe:
+            h = await http_get(HOST, fe.port, "/healthz")
+            st = await http_get(HOST, fe.port, "/stats")
+            unk = await _gen(fe.port, {"prompt": [1, 2, 3], "max_new": 3,
+                                       "stop": ["x"]})
+            ok = await _gen(fe.port, {"prompt": [1, 2, 3],
+                                      "max_new_tokens": 2,
+                                      "temperature": 0.0})
+        return h, st, unk, ok
+
+    h, st, unk, ok = asyncio.run(go())
+    assert h["body"]["v"] == WIRE_VERSION
+    assert st["body"]["v"] == WIRE_VERSION
+    assert unk["status"] == 400
+    # the error names every unknown field (sorted) and the known set
+    assert unk["body"]["error"] == "unknown fields: max_new, stop"
+    assert unk["body"]["known_fields"] == sorted(GENERATE_FIELDS)
+    assert ok["status"] == 200 and ok["body"]["n_tokens"] == 2
 
 
 def test_client_disconnect_cancels_request_in_engine():
@@ -323,7 +355,8 @@ def test_engine_crash_terminates_streams_with_error_record():
         assert r["body"]["failed"] is True and "error" in r["body"]
         assert r["body"]["tokens"] is None
     assert h["status"] == 503
-    assert h["body"] == {"ok": False, "state": "failed", "restarts": 0}
+    assert h["body"] == {"v": 1, "ok": False, "state": "failed",
+                         "restarts": 0}
     assert rejected["status"] == 503
     assert rejected["body"]["error"] == "engine_failed"
     wd = [e for e in obs.tracer.events if e["ev"] == "watchdog"]
@@ -361,7 +394,8 @@ def test_watchdog_rebuilds_engine_and_stream_continues_token_exact():
     r, h, st = asyncio.run(go())
     assert r["status"] == 200 and r["body"]["failed"] is False
     assert r["tokens"] == r["body"]["tokens"] == list(ref.out_tokens)
-    assert h["body"] == {"ok": True, "state": "degraded", "restarts": 1}
+    assert h["body"] == {"v": 1, "ok": True, "state": "degraded",
+                         "restarts": 1}
     assert st["body"]["frontend"]["restarts"] == 1
     wd = [e["action"] for e in obs.tracer.events if e["ev"] == "watchdog"]
     assert "engine_error" in wd and "restart" in wd

@@ -278,7 +278,7 @@ def test_run_stats_schema_identical_across_engines():
     pool_keys = {"page_size", "n_pages", "table_width", "pages_in_use",
                  "peak_pages_in_use", "page_occupancy",
                  "page_occupancy_peak", "paged_attention_backend",
-                 "prefill_chunk", "chunked_prefill"}
+                 "prefill_chunk", "chunked_prefill", "prefix"}
     assert schemas["paged"] == schemas["batched"] | pool_keys
     base_keys = {"requests", "prefill_tokens", "decode_tokens",
                  "per_request", "ticks", "decode_dispatches",

@@ -1,0 +1,414 @@
+"""Prefix caching over the paged KV pool (docs/serving.md §Prefix
+caching).
+
+Pins the tentpole's contracts:
+
+  * **suffix-only re-prefill** (the acceptance pin): with two requests
+    sharing a ≥2-page prompt prefix, the second admit dispatches prefill
+    only for the non-shared suffix — pinned via ``run_stats``
+    prefill-token counts — with output tokens BIT-IDENTICAL to a
+    cache-off run;
+  * correctness matrix: cache-hit streams bit-identical to cache-off
+    for dense bf16 / W8A8 / int8-KV, one-shot and chunked prefill; the
+    moe family (no ``supports_chunked_prefill``) falls back to
+    cache-off behavior with ``prefix.enabled == False``;
+  * **COW isolation**: a full-prefix-match request clones its final
+    shared page before the last-token re-prefill writes it, so a
+    divergent continuation never perturbs a co-resident (or the cache
+    itself — a later identical request still hits and still matches);
+  * **refcount partition**: free ∪ cached-unreferenced ∪ referenced is
+    a disjoint cover of ``range(n_pages)`` — held after every workload
+    here, including the seeded hypothesis chaos plans from
+    tests/test_resilience.py (no page leaked or double-freed);
+  * LRU eviction reclaims cached pages under pool pressure;
+  * preemption and the front-end watchdog restart both resume
+    shared-prefix requests token-exact (shared pages survive a
+    co-resident's preemption; a rebuilt engine re-admits from
+    ``_resume_ctx`` against an empty cache).
+"""
+
+import asyncio
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.qlinear import QuantPolicy
+from repro.kernels import ops
+from repro.models.api import get_model
+from repro.obs import Observability
+from repro.resilience.faults import FaultPlan, FaultSpec
+from repro.serving.engine import EngineConfig, PagedServingEngine, Request
+from repro.serving.fold import collect_calibration, fold_quantize
+from repro.serving.frontend import ServingFrontend, http_generate
+from tests._hypothesis_support import given, settings, st
+
+KEY = jax.random.PRNGKey(0)
+PAGE = 4
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(arch: str, use_kernels: str | None = None):
+    """(cfg, model, params, policy); ``use_kernels=None`` → bf16, else a
+    W8A8 folded model ("never" = pure XLA, "interpret" = the kernel path
+    with a fallback jit — what the chaos plans need so dispatch_raise is
+    recoverable)."""
+    cfg = get_config(arch).reduced()
+    model = get_model(cfg)
+    params = model.init(KEY, cfg)
+    policy = None
+    if use_kernels is not None:
+        toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+        stats = collect_calibration(model, params, cfg, [{"tokens": toks}])
+        policy = QuantPolicy(weight_bits=8, act_bits=8, pack_weights=False,
+                             use_kernels=use_kernels)
+        params = fold_quantize(params, cfg, policy=policy, stats=stats)
+    return cfg, model, params, policy
+
+
+def _engine(cfg, model, params, *, policy=None, prefix=True, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_len", 32)
+    return PagedServingEngine(
+        model, params, cfg,
+        config=EngineConfig(policy=policy, page_size=PAGE, prefill_bucket=8,
+                            prefix_cache=prefix, **kw))
+
+
+def _sys(cfg, pages=2):
+    """The shared system prefix: PAGES full pages of tokens."""
+    return np.random.default_rng(99).integers(0, cfg.vocab_size,
+                                              size=(pages * PAGE,))
+
+
+def _shared_reqs(cfg, n=2, max_new=4, pages=2):
+    sys_prompt = _sys(cfg, pages)
+    return [Request(uid=i,
+                    prompt=np.concatenate(
+                        [sys_prompt,
+                         np.random.default_rng(50 + i).integers(
+                             0, cfg.vocab_size, size=(3 + i,))]),
+                    max_new_tokens=max_new) for i in range(n)]
+
+
+def _seed(cfg, uid=100):
+    """A request whose prompt IS the bare system prefix: running it to
+    completion registers the shared pages (same-round co-admissions
+    never share, so tests seed the cache explicitly first)."""
+    return Request(uid=uid, prompt=_sys(cfg), max_new_tokens=1)
+
+
+def _serve(eng, reqs, max_ticks=300):
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run(max_ticks=max_ticks)
+    return {r.uid: list(map(int, r.out_tokens)) for r in done}
+
+
+def _assert_partition(eng):
+    """The allocator's page-accounting invariant: the free list, the
+    cached-but-unreferenced tier, and the referenced pages partition
+    ``range(n_pages)`` — disjoint, no page lost, none double-entered."""
+    free = {int(p) for p in eng._free}
+    assert len(free) == len(eng._free)          # no double-free
+    referenced = {p for p in range(eng.n_pages) if eng._ref[p] > 0}
+    cached0 = {p for p in eng._page_key if eng._ref[p] == 0}
+    assert not free & referenced
+    assert not free & cached0
+    assert not referenced & cached0
+    assert sorted(free | referenced | cached0) == list(range(eng.n_pages))
+
+
+# ---------------------------------------------------------------------------
+# the acceptance pin: suffix-only prefill, bit-identical tokens
+# ---------------------------------------------------------------------------
+
+
+def test_second_admit_prefills_suffix_only():
+    """Two requests share a 2-page (8-token) prefix and are admitted
+    sequentially: the second dispatches prefill ONLY for its 4-token
+    suffix (run_stats prefill-token pin), tokens bit-identical to
+    cache-off."""
+    cfg, model, params, _ = _setup("stablelm_3b")
+
+    def serve(prefix):
+        eng = _engine(cfg, model, params, prefix=prefix)
+        a, b = _shared_reqs(cfg, n=2)           # prompts: 8+3 and 8+4
+        toks = _serve(eng, [a])
+        toks.update(_serve(eng, [b]))
+        return eng, toks
+
+    eng_off, toks_off = serve(False)
+    eng_on, toks_on = serve(True)
+    assert toks_on == toks_off
+    assert eng_off.run_stats["prefill_tokens"] == 11 + 12
+    assert eng_on.run_stats["prefill_tokens"] == 11 + 4   # suffix only
+    px = eng_on.run_stats["prefix"]
+    assert px["enabled"]
+    assert px["hits"] == 1 and px["misses"] == 1
+    assert px["shared_pages"] == 2
+    assert px["saved_prefill_tokens"] == 8
+    assert px["saved_prefill_flops"] > 0 and px["saved_hbm_bytes"] > 0
+    # cache-off engine reports the block too, disabled and all-zero
+    off = eng_off.run_stats["prefix"]
+    assert not off["enabled"] and off["hits"] == 0
+    _assert_partition(eng_on)
+
+
+# ---------------------------------------------------------------------------
+# correctness matrix
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [None, 8], ids=["oneshot", "chunked"])
+@pytest.mark.parametrize("precision", ["bf16", "w8a8", "int8kv"])
+def test_cache_hit_streams_bit_identical(precision, chunk):
+    """Seed the cache, then co-admit two shared-prefix requests: both
+    hit, and every stream matches the cache-off run token for token —
+    bf16, W8A8 (folded scales), int8 KV (scale leaves ride the page
+    clone), one-shot and chunked prefill."""
+    cfg, model, params, policy = _setup(
+        "stablelm_3b", "never" if precision == "w8a8" else None)
+    kv = 8 if precision == "int8kv" else None
+
+    def serve(prefix):
+        eng = _engine(cfg, model, params, policy=policy, prefix=prefix,
+                      kv_bits=kv, prefill_chunk=chunk)
+        toks = _serve(eng, [_seed(cfg)])
+        toks.update(_serve(eng, _shared_reqs(cfg, n=2)))
+        return eng, toks
+
+    eng_off, toks_off = serve(False)
+    eng_on, toks_on = serve(True)
+    assert toks_on == toks_off
+    px = eng_on.run_stats["prefix"]
+    assert px["hits"] == 2 and px["misses"] == 1     # seed was the miss
+    _assert_partition(eng_on)
+
+
+def test_moe_falls_back_to_miss():
+    """The MoE family has no chunked-prefill continuation path, so the
+    cache gates itself off: identical serving behavior, ``enabled``
+    False, zero counters."""
+    cfg, model, params, _ = _setup("deepseek_v2_lite_16b")
+
+    def serve(prefix):
+        eng = _engine(cfg, model, params, prefix=prefix)
+        toks = _serve(eng, [_seed(cfg)])
+        toks.update(_serve(eng, _shared_reqs(cfg, n=2)))
+        return eng, toks
+
+    eng_off, toks_off = serve(False)
+    eng_on, toks_on = serve(True)
+    assert toks_on == toks_off
+    px = eng_on.run_stats["prefix"]
+    assert not px["enabled"]
+    assert px["hits"] == 0 and px["misses"] == 0 and px["cached_pages"] == 0
+    assert eng_on.pages_in_use == 0            # nothing retained
+    assert sorted(eng_on._free) == list(range(eng_on.n_pages))
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write
+# ---------------------------------------------------------------------------
+
+
+def test_cow_isolation():
+    """A FULL-prefix-match request re-prefills its last token, whose KV
+    write lands in the final shared page — the engine clones that page
+    first (COW).  The divergent co-resident and the cache itself are
+    unperturbed: every stream matches cache-off, and a later identical
+    request still hits and reproduces the first request's tokens."""
+    cfg, model, params, _ = _setup("stablelm_3b")
+    sys_prompt = _sys(cfg)
+
+    def full(uid, n):
+        return Request(uid=uid, prompt=sys_prompt.copy(), max_new_tokens=n)
+
+    def serve(prefix):
+        eng = _engine(cfg, model, params, prefix=prefix)
+        toks = _serve(eng, [_seed(cfg)])
+        # full match (uid 0) co-resident with a divergent hit (uid 1)
+        toks.update(_serve(eng, [full(0, 5), _shared_reqs(cfg, n=2)[1]]))
+        toks.update(_serve(eng, [full(2, 5)]))   # cache still intact?
+        return eng, toks
+
+    eng_off, toks_off = serve(False)
+    eng_on, toks_on = serve(True)
+    assert toks_on == toks_off
+    assert toks_on[2] == toks_on[0]              # identical prompt, identical
+    px = eng_on.run_stats["prefix"]
+    assert px["hits"] == 3                       # uids 0, 1, 2
+    assert px["cow_copies"] == 2                 # both full matches cloned
+    _assert_partition(eng_on)
+
+
+# ---------------------------------------------------------------------------
+# eviction
+# ---------------------------------------------------------------------------
+
+
+def test_lru_eviction_under_pool_pressure():
+    """A pool too small to cache every retired prefix: the LRU tier
+    evicts cached-unreferenced pages instead of stalling admission, and
+    every request still serves bit-identically to cache-off."""
+    cfg, model, params, _ = _setup("stablelm_3b")
+    rng = np.random.default_rng(3)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=(2 * PAGE,)),
+                    max_new_tokens=2) for i in range(4)]
+
+    def serve(prefix):
+        eng = _engine(cfg, model, params, prefix=prefix, max_slots=1,
+                      n_pages=6)
+        toks = {}
+        for r in reqs:
+            toks.update(_serve(
+                eng, [Request(uid=r.uid, prompt=r.prompt.copy(),
+                              max_new_tokens=r.max_new_tokens)]))
+        return eng, toks
+
+    eng_off, toks_off = serve(False)
+    eng_on, toks_on = serve(True)
+    assert toks_on == toks_off
+    px = eng_on.run_stats["prefix"]
+    assert px["evictions"] > 0
+    assert px["cached_pages"] <= eng_on.n_pages
+    _assert_partition(eng_on)
+
+
+# ---------------------------------------------------------------------------
+# preemption with shared pages
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_resume_with_shared_pages():
+    """A tight pool forces a full stall while two shared-prefix requests
+    decode: the youngest is preempted (its refs released — the shared
+    pages SURVIVE because the co-resident still holds them), resumes
+    against the cache, and every stream matches a roomy cache-off run."""
+    cfg, model, params, _ = _setup("stablelm_3b")
+
+    def reqs():
+        # EQUAL-length prompts: both slots cross page boundaries on the
+        # same tick, so pool exhaustion stalls both at once (a full
+        # stall is what triggers _preempt_youngest)
+        return [Request(uid=i,
+                        prompt=np.concatenate(
+                            [_sys(cfg),
+                             np.random.default_rng(60 + i).integers(
+                                 0, cfg.vocab_size, size=(3,))]),
+                        max_new_tokens=14) for i in range(2)]
+
+    def serve(prefix, n_pages):
+        obs = Observability()
+        eng = _engine(cfg, model, params, prefix=prefix, n_pages=n_pages,
+                      obs=obs)
+        toks = _serve(eng, [_seed(cfg)])
+        toks.update(_serve(eng, reqs(), max_ticks=500))
+        return eng, obs, toks
+
+    eng_off, _, toks_off = serve(False, n_pages=None)    # roomy reference
+    eng_on, obs, toks_on = serve(True, n_pages=8)
+    assert toks_on == toks_off
+    preempts = [e for e in obs.tracer.events if e["ev"] == "preempt"]
+    assert preempts                              # the stall actually happened
+    px = eng_on.run_stats["prefix"]
+    assert px["hits"] >= 3                       # 2 admits + ≥1 resume
+    _assert_partition(eng_on)
+
+
+# ---------------------------------------------------------------------------
+# chaos: the partition invariant under random fault plans
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_chaos_partition_invariant(seed):
+    """The resilience suite's seeded chaos plans (NaN logits, dispatch
+    raise, page-alloc fail, slow ticks + a random mid-run cancel) on a
+    prefix-sharing workload: every request retires exactly once and the
+    refcount partition holds — no page leaked or double-freed."""
+    ops.breaker.reset()
+    try:
+        rng = np.random.default_rng(seed)
+        plan = FaultPlan.random(seed, n_faults=4,
+                                sites=("nan_logits", "dispatch_raise",
+                                       "page_alloc_fail", "slow_tick"),
+                                uids=range(4), max_at=12)
+        # the quantized-interpret engine: dispatch_raise is recoverable
+        # through the kernel circuit breaker's fallback jit
+        cfg, model, params, policy = _setup("stablelm_3b", "interpret")
+        eng = _engine(cfg, model, params, policy=policy, max_slots=2,
+                      n_pages=12, faults=plan, nan_guard=True)
+        _serve(eng, [_seed(cfg)])
+        reqs = _shared_reqs(cfg, n=2, max_new=5) + [
+            Request(uid=2 + i,
+                    prompt=np.random.default_rng(200 + i).integers(
+                        0, cfg.vocab_size, size=(5 + i,)),
+                    max_new_tokens=5) for i in range(2)]
+        for r in reqs:
+            eng.submit(r)
+        cancel_uid = int(rng.integers(4))
+        cancel_tick = int(rng.integers(1, 6))
+        for _ in range(300):
+            if not (eng.queue or any(s is not None for s in eng.slots)):
+                break
+            eng.step()
+            if eng.ticks == cancel_tick:
+                eng.cancel(cancel_uid)
+        done = {r.uid: r for r in eng.pop_retired()}
+        assert sorted(u for u in done if u < 100) == list(range(4))
+        assert not any(eng.slots)
+        _assert_partition(eng)
+    finally:
+        ops.breaker.reset()
+
+
+# ---------------------------------------------------------------------------
+# watchdog restart with shared pages
+# ---------------------------------------------------------------------------
+
+
+def test_watchdog_resume_with_shared_pages():
+    """An engine crash mid-decode on a prefix-cached engine: the
+    front-end watchdog rebuilds from the factory (EMPTY cache) and
+    resumes the in-flight request via ``_resume_ctx`` — the client
+    stream is token-exact vs an uninterrupted run, and the rebuilt
+    engine's page accounting is clean."""
+    cfg, model, params, _ = _setup("stablelm_3b")
+    prompt = np.concatenate([_sys(cfg), np.asarray([3, 1, 4])])
+
+    ref_eng = _engine(cfg, model, params)
+    _serve(ref_eng, [_seed(cfg)])
+    ref = _serve(ref_eng, [Request(uid=0, prompt=prompt.copy(),
+                                   max_new_tokens=6)])[0]
+
+    obs = Observability()
+    plan = FaultPlan([FaultSpec("dispatch_raise", op="decode", at=2)])
+
+    def factory():
+        return _engine(cfg, model, params, obs=obs)
+
+    eng = _engine(cfg, model, params, obs=obs, faults=plan)
+    _serve(eng, [_seed(cfg)])
+
+    async def go():
+        async with ServingFrontend(eng, host="127.0.0.1", port=0,
+                                   engine_factory=factory,
+                                   watchdog_interval_s=0.05) as fe:
+            r = await http_generate("127.0.0.1", fe.port,
+                                    {"prompt": prompt.tolist(),
+                                     "max_new_tokens": 6})
+            final = fe.engine
+        return r, final
+
+    r, final = asyncio.run(go())
+    assert r["status"] == 200 and r["body"]["failed"] is False
+    assert r["tokens"] == ref
+    wd = [e["action"] for e in obs.tracer.events if e["ev"] == "watchdog"]
+    assert "restart" in wd
+    _assert_partition(final)
