@@ -1,9 +1,10 @@
 """Generate the EXPERIMENTS.md §Dry-run, §Roofline, §Autoplan, §Serving,
-§Prefix and §Kernels tables from the JSON artifacts
+§Prefix, §Speculative and §Kernels tables from the JSON artifacts
 (experiments/dryrun/<mesh>/<arch>__<shape>.json,
 experiments/autoplan/<arch>_telemetry.json,
 experiments/serving/BENCH_serving.json,
 experiments/serving/BENCH_prefix.json,
+experiments/serving/BENCH_spec.json,
 experiments/kernels/BENCH_kernels.json).
 
 Usage: PYTHONPATH=src python -m benchmarks.report [--out EXPERIMENTS_tables.md]
@@ -34,6 +35,7 @@ LATENCY_PATH = os.path.join(EXPERIMENTS, "serving", "BENCH_latency.json")
 KERNELS_PATH = os.path.join(EXPERIMENTS, "kernels", "BENCH_kernels.json")
 LOAD_PATH = os.path.join(EXPERIMENTS, "serving", "BENCH_load.json")
 PREFIX_PATH = os.path.join(EXPERIMENTS, "serving", "BENCH_prefix.json")
+SPEC_PATH = os.path.join(EXPERIMENTS, "serving", "BENCH_spec.json")
 
 CHECK_THRESHOLD = 0.8      # fresh metric must be ≥ 80% of the baseline
 
@@ -270,6 +272,39 @@ def prefix_table(rows: list[dict]) -> str:
     return "\n".join(out)
 
 
+def load_spec() -> list[dict]:
+    if not os.path.exists(SPEC_PATH):
+        return []
+    with open(SPEC_PATH) as f:
+        return json.load(f)
+
+
+def spec_table(rows: list[dict]) -> str:
+    """Speculative-decoding on/off comparison (spec_bench.py →
+    BENCH_spec.json).  Accepted tokens per verify dispatch is the
+    headline — the plain engine's ceiling is exactly 1.0; tok/s is
+    report-only wall clock."""
+    out = ["| arch | reqs | mode | accept rate | tok/dispatch | "
+           "verify disp. | draft disp. | tok/s | identical | accounted |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        ident = "yes" if r["tokens_identical"] else "NO"
+        acct = "yes" if r["acceptance_accounted"] else "NO"
+        for mode in (["off"] + [f"k{k}" for k in r["spec_ks"]]):
+            e = r[mode]
+            sp = e.get("spec")
+            rate = "—" if sp is None else f"{sp['acceptance_rate']:.2f}"
+            tpd = 1.0 if sp is None else sp["accepted_per_dispatch"]
+            verify = (e["decode_dispatches"] if sp is None
+                      else sp["verify_dispatches"])
+            drafts = 0 if sp is None else sp["draft_dispatches"]
+            out.append(
+                f"| {r['arch']} | {r['n_requests']} | {mode} | {rate} | "
+                f"{tpd:.2f} | {verify} | {drafts} | "
+                f"{e['tok_s']:.0f} | {ident} | {acct} |")
+    return "\n".join(out)
+
+
 def load_kernels() -> list[dict]:
     if not os.path.exists(KERNELS_PATH):
         return []
@@ -449,6 +484,27 @@ def _prefix_metrics(rows: list[dict]) -> dict[str, float]:
     return out
 
 
+def _spec_metrics(rows: list[dict]) -> dict[str, float]:
+    """Machine-portable speculative-decoding metrics: wall-clock tok/s
+    stays report-only; the gate compares the deterministic acceptance
+    counters (accepted tokens per verify dispatch — a broken draft or
+    verify path collapses it toward 1) and the contract booleans
+    (higher = better throughout)."""
+    out = {}
+    for r in rows:
+        key = r["arch"]
+        for k in r["spec_ks"]:
+            sp = r[f"k{k}"]["spec"]
+            out[f"{key}:k{k}:accepted_per_dispatch"] = (
+                sp["accepted_per_dispatch"])
+            out[f"{key}:k{k}:acceptance_rate"] = sp["acceptance_rate"]
+        for flag in ("tokens_identical", "acceptance_accounted",
+                     "one_dispatch_per_tick",
+                     "accepted_per_dispatch_exceeds_plain"):
+            out[f"{key}:{flag}"] = float(r[flag])
+    return out
+
+
 def _bench_metrics(path: str, rows: list[dict]) -> dict[str, float]:
     name = os.path.basename(path)
     if "kernels" in name:
@@ -459,6 +515,8 @@ def _bench_metrics(path: str, rows: list[dict]) -> dict[str, float]:
         return _load_metrics(rows)
     if "prefix" in name:       # ditto: BENCH_prefix* lives under serving/
         return _prefix_metrics(rows)
+    if "spec" in name:         # ditto: BENCH_spec* lives under serving/
+        return _spec_metrics(rows)
     if "serving" in name:
         return _serving_metrics(rows)
     raise SystemExit(f"--check: no metric extractor for {name}")
@@ -542,6 +600,11 @@ def main(argv=None):
         parts.append(f"\n### Serving prefix cache — shared system prompt "
                      f"({len(px_rows)} archs)\n")
         parts.append(prefix_table(px_rows))
+    sp_rows = load_spec()
+    if sp_rows:
+        parts.append(f"\n### Serving speculative decoding — draft-verify "
+                     f"({len(sp_rows)} archs)\n")
+        parts.append(spec_table(sp_rows))
     kn_all = load_kernels()
     kn_rows = [r for r in kn_all if r.get("kind") != "paged_attention"]
     pa_rows = [r for r in kn_all if r.get("kind") == "paged_attention"]

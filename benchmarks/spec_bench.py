@@ -1,0 +1,194 @@
+"""Speculative-decoding benchmark: draft-verify serving, spec on vs off.
+
+One greedy burst is served on the paged engine with speculation off (the
+plain one-token-per-tick path) and then with self-draft speculation at
+each ``spec_k``, and the runs are compared:
+
+  * **token identity** — greedy outputs are bit-identical across every
+    run (``tokens_identical``: speculation is a latency transform, not a
+    sampling change — the ISSUE's acceptance pin);
+  * **acceptance accounting** — the spec counters reconcile exactly:
+    drafted == accepted + rejected, and every decode-phase token was
+    emitted through a verify dispatch (``acceptance_accounted``);
+  * **accepted tokens per verify dispatch** — the headline: the plain
+    engine's ceiling is exactly 1.0 token per decode dispatch; the
+    self-draft run must clear ``> 1.5`` at the deepest ``spec_k``
+    (``accepted_per_dispatch_exceeds_plain``) while still issuing ONE
+    verify dispatch per tick (``one_dispatch_per_tick``);
+  * wall-clock tok/s for every run (report-only: does not transfer
+    across machines).
+
+Writes ``experiments/serving/BENCH_spec.json`` (``--quick`` → the
+``_quick`` sibling) for benchmarks/report.py's §Speculative table and
+the ``report.py --check`` regression gate, which compares only the
+deterministic counters and contract booleans above.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import get_config
+from repro.models.api import get_model
+from repro.serving.engine import EngineConfig, PagedServingEngine, Request
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "serving", "BENCH_spec.json")
+
+MAX_SLOTS = 4
+MAX_LEN = 64
+PAGE_SIZE = 4          # reduced-config scale (serving_throughput idiom)
+PREFILL_BUCKET = 8
+SPEC_KS = (1, 2, 4)
+HEADLINE_FLOOR = 1.5   # accepted tokens per verify dispatch at max spec_k
+
+REPEATS = 3   # timed sections take the best of N runs (CPU wall clock
+#               is too noisy single-shot); counters are deterministic
+
+
+def _requests(cfg, n: int, max_new: int) -> list[Request]:
+    rng = np.random.default_rng(7)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=(4 + i % 5,)),
+                    max_new_tokens=max_new) for i in range(n)]
+
+
+def _serve_once(model, params, cfg, *, spec_k, n_requests, max_new):
+    eng = PagedServingEngine(
+        model, params, cfg,
+        config=EngineConfig(max_slots=MAX_SLOTS, max_len=MAX_LEN,
+                            page_size=PAGE_SIZE,
+                            prefill_bucket=PREFILL_BUCKET, spec_k=spec_k))
+    for r in _requests(cfg, n_requests, max_new):
+        eng.submit(r)
+    t0 = time.perf_counter()
+    done = eng.run(max_ticks=10_000)
+    return eng, done, time.perf_counter() - t0
+
+
+def _serve(model, params, cfg, *, spec_k, n_requests, max_new,
+           repeats=REPEATS):
+    dt = float("inf")
+    for _ in range(repeats):
+        eng, done, t = _serve_once(model, params, cfg, spec_k=spec_k,
+                                   n_requests=n_requests, max_new=max_new)
+        dt = min(dt, t)
+    st = eng.run_stats
+    row = {
+        "tokens": st["decode_tokens"],
+        "prefill_tokens": st["prefill_tokens"],
+        "decode_dispatches": st["decode_dispatches"],
+        "ticks": st["ticks"],
+        "dispatches_per_tick": st["dispatches_per_tick"],
+        "seconds": round(dt, 4),
+        "tok_s": round(st["decode_tokens"] / max(dt, 1e-9), 2),
+        "outputs": {r.uid: list(map(int, r.out_tokens)) for r in done},
+    }
+    sp = st["spec"]
+    if sp["enabled"]:
+        row["spec"] = {k: sp[k] for k in
+                       ("k", "drafted", "accepted", "rejected",
+                        "acceptance_rate", "emitted_tokens",
+                        "verify_dispatches", "draft_dispatches",
+                        "draft_prefill_dispatches",
+                        "accepted_per_dispatch")}
+    return row
+
+
+def bench_arch(arch: str, *, n_requests: int = 8, max_new: int = 8,
+               spec_ks=SPEC_KS) -> dict:
+    cfg = get_config(arch).reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    row = {"arch": arch, "max_slots": MAX_SLOTS, "n_requests": n_requests,
+           "max_new": max_new, "spec_ks": list(spec_ks)}
+    for k in (0, *spec_ks):
+        # warmup: identical workload so the timed pass hits warm jit
+        # caches only (each spec_k verifies a different ragged width, so
+        # each mode warms its own compiles)
+        _serve(model, params, cfg, spec_k=k, n_requests=n_requests,
+               max_new=max_new, repeats=1)
+        row["off" if k == 0 else f"k{k}"] = _serve(
+            model, params, cfg, spec_k=k, n_requests=n_requests,
+            max_new=max_new)
+    modes = ["off"] + [f"k{k}" for k in spec_ks]
+    outs = {m: row[m].pop("outputs") for m in modes}
+    # --check contracts: deterministic, machine-portable
+    row["tokens_identical"] = int(
+        all(outs[m] == outs["off"] for m in modes[1:]))
+    # every decode-phase token (all but each request's prefill-sampled
+    # first) was emitted through a verify dispatch, and the draft ledger
+    # balances
+    row["acceptance_accounted"] = int(all(
+        row[m]["spec"]["drafted"] == (row[m]["spec"]["accepted"]
+                                      + row[m]["spec"]["rejected"])
+        and row[m]["spec"]["emitted_tokens"]
+        == row[m]["tokens"] - n_requests
+        for m in modes[1:]))
+    row["one_dispatch_per_tick"] = int(all(
+        row[m]["dispatches_per_tick"] == 1.0 for m in modes))
+    deepest = row[f"k{max(spec_ks)}"]["spec"]
+    row["accepted_per_dispatch_exceeds_plain"] = int(
+        deepest["accepted_per_dispatch"] > HEADLINE_FLOOR)
+    return row
+
+
+def run(archs=("stablelm_3b",), *, n_requests: int = 8, max_new: int = 8,
+        spec_ks=SPEC_KS, out_path: str = ARTIFACT) -> list[dict]:
+    rows = []
+    for arch in archs:
+        row = bench_arch(arch, n_requests=n_requests, max_new=max_new,
+                         spec_ks=spec_ks)
+        rows.append(row)
+        for mode in (["off"] + [f"k{k}" for k in spec_ks]):
+            r = row[mode]
+            sp = r.get("spec")
+            extra = ("" if sp is None else
+                     f";acceptance_rate={sp['acceptance_rate']};"
+                     f"accepted_per_dispatch={sp['accepted_per_dispatch']}")
+            emit(f"spec_{arch}_{mode}",
+                 1e6 * r["seconds"] / max(r["tokens"], 1),
+                 f"tok_s={r['tok_s']};"
+                 f"decode_dispatches={r['decode_dispatches']}{extra}")
+        emit(f"spec_{arch}_contracts", 0.0,
+             f"tokens_identical={row['tokens_identical']};"
+             f"acceptance_accounted={row['acceptance_accounted']};"
+             f"one_dispatch_per_tick={row['one_dispatch_per_tick']};"
+             "accepted_per_dispatch_exceeds_plain="
+             f"{row['accepted_per_dispatch_exceeds_plain']}")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", action="append", default=None,
+                    help="repeatable; default stablelm_3b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fewer requests/tokens, writes the "
+                         "_quick sibling artifact (never truncates the "
+                         "committed baseline)")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+    suffix = "_quick.json" if args.quick else ".json"
+    out = args.out or ARTIFACT.replace(".json", suffix)
+    kw = (dict(n_requests=4, max_new=6, spec_ks=(2, 4)) if args.quick
+          else dict(n_requests=args.requests, max_new=args.max_new))
+    run(tuple(args.arch or ("stablelm_3b",)), out_path=out, **kw)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,11 @@ snapshot, ``--quant-health N`` probes live activation health every N
 ticks against the calibrated ranges, and ``--json`` swaps the human
 report for one structured JSON document on stdout.
 
+``--speculate K`` turns on draft-verify speculative decoding in the
+paged engine (docs/speculative.md): K drafted tokens per slot verify in
+ONE batched ragged dispatch per tick, greedy outputs bit-identical to
+the plain path.
+
 ``--serve-http`` routes the same workload through the async streaming
 front-end (repro.serving.frontend) over loopback — per-request
 deadlines (``--deadline-s``), admission control (``--shed-queue-depth``
@@ -118,6 +123,12 @@ def main(argv=None):
                          "pages, copy-on-write on divergence, LRU "
                          "eviction under pool pressure — docs/serving.md "
                          "§Prefix caching; dense-transformer family only)")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="paged engine: draft K tokens per slot per tick "
+                         "(self-draft) and verify all K+1 positions in ONE "
+                         "batched ragged dispatch; greedy outputs stay "
+                         "bit-identical to K=0 (docs/speculative.md; "
+                         "dense-transformer family only)")
     ap.add_argument("--trace-out", default="",
                     help="stream per-request span events (submit/admit/"
                          "prefill/first-token/tick/preempt/retire) to this "
@@ -234,7 +245,7 @@ def main(argv=None):
             n_pages=args.pool_pages or None,
             prefill_chunk=args.prefill_chunk or None, obs=obs,
             faults=faults, nan_guard=args.nan_guard,
-            prefix_cache=args.prefix_cache)
+            prefix_cache=args.prefix_cache, spec_k=args.speculate)
         engine_cls = {"paged": PagedServingEngine, "batched": ServingEngine,
                       "per-slot": PerSlotServingEngine}[args.engine]
         eng = engine_cls(model, params, cfg, config=econfig)
@@ -333,6 +344,15 @@ def main(argv=None):
                   f"{px['saved_prefill_tokens']} prefill tokens saved, "
                   f"{px['cow_copies']} COW copies, "
                   f"{px['evictions']} evictions")
+        if st.get("spec", {}).get("enabled"):
+            sp = st["spec"]
+            print(f"  speculative (k={sp['k']}, "
+                  f"{'self' if sp['self_draft'] else 'separate'}-draft): "
+                  f"{sp['accepted']}/{sp['drafted']} drafts accepted "
+                  f"({100 * sp['acceptance_rate']:.0f}%), "
+                  f"{sp['emitted_tokens']} tokens over "
+                  f"{sp['verify_dispatches']} verify dispatches = "
+                  f"{sp['accepted_per_dispatch']:.2f} tokens/dispatch")
         for r in done[:3]:
             print(f"  req {r.uid}: {r.out_tokens[:12]}...")
         print()

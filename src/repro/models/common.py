@@ -609,6 +609,24 @@ def take_last_valid(x: jax.Array, lengths) -> jax.Array:
     return jnp.take_along_axis(x, idx[:, None, None], axis=1)
 
 
+def spec_accept_greedy(proposed, greedy) -> list[int]:
+    """Greedy speculative acceptance: longest matching prefix + one
+    corrected token (docs/speculative.md).
+
+    ``proposed``: the k drafted tokens for one slot; ``greedy``: the
+    target's argmax at each of the k+1 verified positions (position j
+    scored the context ending in draft j's predecessor, so ``greedy[j]``
+    is what plain greedy decode would have emitted there).  Accept
+    drafts while they match, then emit the target's own token at the
+    first divergence — the emitted stream is exactly what plain greedy
+    decode produces, one token at a time.  Always emits ≥ 1 token.
+    """
+    m = 0
+    while m < len(proposed) and int(proposed[m]) == int(greedy[m]):
+        m += 1
+    return [int(t) for t in proposed[:m]] + [int(greedy[m])]
+
+
 def quant_roundtrip_kv(x: jax.Array) -> jax.Array:
     """Quantize→dequantize through the int8 KV path (what a reader of the
     cache would see).  Batched prefill attends over LOCAL fresh k/v

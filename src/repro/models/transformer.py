@@ -177,6 +177,38 @@ def prefill_paged(params, cfg: ModelConfig, tokens, lengths,
     return logits, new_cache
 
 
+def verify_paged(params, cfg: ModelConfig, tokens, lengths,
+                 cache: cm.PagedKVCache, slots, start,
+                 policy: QuantPolicy | None = None):
+    """Speculative verify: score k+1 candidate positions per slot in ONE
+    ragged dispatch (docs/speculative.md).
+
+    Identical to the chunked-prefill continuation path of
+    :func:`prefill_paged` — same per-row ``start`` offsets, same pool
+    writes (int8 scale leaves included), same ``paged_view`` prefix
+    gather — except logits come back for ALL ``s_pad`` positions,
+    (n, s_pad, vocab), not just the last valid one: position j's row is
+    exactly what a plain s=1 decode dispatch at depth ``start + j``
+    would have produced, which is what makes greedy acceptance
+    bit-identical to non-speculative greedy decode.  Rows beyond a row's
+    ``lengths`` are garbage (the engine never reads them); rejected
+    suffix writes are rolled back host-side by the engine (lengths +
+    page refcounts), not here.
+    """
+    h = cm.embed(params["embed"], tokens)
+    ptab = cm.gather_page_rows(cache.page_table, slots)
+    starts = jnp.asarray(start, jnp.int32)
+    x, new_cache = _backbone(params, cfg, h, cache=cache, length=starts,
+                             policy=policy, page_table=ptab,
+                             valid_new=lengths, prefill_local=False)
+    new_len = starts + jnp.asarray(lengths, jnp.int32)
+    logits = cm.dense(x, params["lm_head"], policy)
+    new_cache = dataclasses.replace(
+        new_cache, length=cache.length.at[jnp.asarray(slots)].set(
+            new_len, mode="drop"))
+    return logits, new_cache
+
+
 def decode_step(params, cfg: ModelConfig, tokens, cache: cm.KVCache,
                 policy: QuantPolicy | None = None):
     """One token per sequence against the cache.

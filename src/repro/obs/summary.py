@@ -55,6 +55,8 @@ def summarize(events: list[dict]) -> dict:
               "breaker_trips": 0, "breaker_recoveries": 0,
               "watchdog_restarts": 0, "disconnects": 0}
     qh_events = []
+    spec = {"ticks": 0, "drafted": 0, "accepted": 0, "rejected": 0,
+            "emitted": 0}
     for ev in events:
         kind = ev["ev"]
         if kind == "submit":
@@ -110,6 +112,13 @@ def summarize(events: list[dict]) -> dict:
             counts["disconnects"] += 1
         elif kind == "quant_health":
             qh_events.append(ev)
+        elif kind == "spec":
+            # per-tick speculative accounting (docs/speculative.md); the
+            # accepted tokens themselves arrived as tick uids + extra
+            # ``token`` events, so decode_tokens already counts them
+            spec["ticks"] += 1
+            for k in ("drafted", "accepted", "rejected", "emitted"):
+                spec[k] += ev.get(k, 0)
     per_token = [b - a for ts in token_ts.values()
                  for a, b in zip(ts, ts[1:])]
     out = {
@@ -123,6 +132,11 @@ def summarize(events: list[dict]) -> dict:
         "tick_decode_s": percentile_summary(decode_dur),
         "e2e_s": percentile_summary(e2e),
     }
+    if spec["ticks"]:
+        # present only when speculation ran (the exact-counts pin on
+        # plain-run summaries is untouched)
+        spec["acceptance_rate"] = spec["accepted"] / max(spec["drafted"], 1)
+        out["spec"] = spec
     if qh_events:
         out["quant_health"] = _quant_health_summary(qh_events)
     return out
@@ -191,6 +205,14 @@ def format_summary(s: dict) -> str:
             f"({c.get('breaker_recoveries', 0)} recoveries), "
             f"{c.get('watchdog_restarts', 0)} watchdog restarts, "
             f"{c.get('disconnects', 0)} disconnects")
+    # speculative-decoding line only when speculation ran
+    # (docs/speculative.md): plain-run tables are unchanged
+    sp = s.get("spec")
+    if sp:
+        lines.append(
+            f"spec: {sp['drafted']} drafted, {sp['accepted']} accepted "
+            f"(rate {sp['acceptance_rate']:.3f}), {sp['rejected']} rejected, "
+            f"{sp['emitted']} emitted over {sp['ticks']} verify ticks")
     lines += [
         "",
         "| span | count | mean s | p50 s | p90 s | p99 s | max s |",

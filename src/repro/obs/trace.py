@@ -36,6 +36,10 @@ full schema table):
     prefix_hit   uid, slot, matched_tokens, shared_pages, suffix_tokens
                  — a paged-engine admission matched cached prefix pages
                  and re-prefilled only the suffix (docs/serving.md)
+    spec         tick, drafted, accepted, rejected, emitted, n_rows —
+                 one speculative tick's draft/verify accounting; the
+                 accepted tokens themselves land as the tick's uid list
+                 plus extra ``token`` events (docs/speculative.md)
 
 The tracer buffers events in memory (``events``) and, when constructed
 with a path, streams each event as one JSON line — ``repro.obs
@@ -56,7 +60,7 @@ __all__ = ["Tracer", "load_trace"]
 EVENT_KINDS = ("submit", "admit", "prefill", "first_token", "token", "tick",
                "preempt", "retire", "deadline", "shed", "quant_health",
                "fault", "guard", "breaker", "watchdog", "disconnect",
-               "prefix_hit")
+               "prefix_hit", "spec")
 
 
 class Tracer:

@@ -21,6 +21,7 @@ import dataclasses
 import json
 import warnings
 
+from repro.configs.base import ModelConfig
 from repro.core.qlinear import QuantPolicy
 from repro.obs import Observability
 from repro.resilience.faults import FaultPlan
@@ -58,6 +59,12 @@ class EngineConfig:
     # to the pre-cache allocator
     prefix_cache: bool = False
     prefix_evict: str = "lru"
+    # speculative decoding (docs/speculative.md): spec_k > 0 turns it on
+    # for the paged engine; spec_draft_config names the draft model
+    # (None = self-draft, the target drafts for itself).  Ignored by the
+    # non-paged engines, like the page knobs above.
+    spec_k: int = 0
+    spec_draft_config: ModelConfig | None = None
 
     def __post_init__(self):
         for name in ("max_slots", "max_len", "page_size", "prefill_bucket"):
@@ -74,6 +81,12 @@ class EngineConfig:
             raise ValueError(
                 f"prefix_evict must be one of {PREFIX_EVICT_POLICIES}, "
                 f"got {self.prefix_evict!r}")
+        if self.spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {self.spec_k}")
+        if self.spec_draft_config is not None and self.spec_k < 1:
+            raise ValueError(
+                "spec_draft_config requires spec_k >= 1 (a draft model "
+                "with nothing to draft is a misconfiguration)")
 
     # -- JSON round trip (the FaultPlan pattern) ----------------------------
 
@@ -85,6 +98,8 @@ class EngineConfig:
             d["policy"] = dataclasses.asdict(self.policy)
         if self.faults is not None:
             d["faults"] = json.loads(self.faults.to_json())
+        if self.spec_draft_config is not None:
+            d["spec_draft_config"] = dataclasses.asdict(self.spec_draft_config)
         return json.dumps(d, sort_keys=True)
 
     @classmethod
@@ -97,6 +112,8 @@ class EngineConfig:
             d["policy"] = QuantPolicy(**d["policy"])
         if d.get("faults") is not None:
             d["faults"] = FaultPlan.from_json(json.dumps(d["faults"]))
+        if d.get("spec_draft_config") is not None:
+            d["spec_draft_config"] = ModelConfig(**d["spec_draft_config"])
         return cls(**d)
 
 

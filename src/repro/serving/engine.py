@@ -107,6 +107,20 @@ def _jitted_chunked_prefill(model, cfg: ModelConfig,
         donate_argnums=4)
 
 
+@functools.lru_cache(maxsize=None)
+def _jitted_verify(model, cfg: ModelConfig, policy: QuantPolicy | None):
+    """Speculative VERIFY dispatch (docs/speculative.md): one batched
+    ragged call scores k+1 candidate positions per slot at per-row
+    ``start`` offsets — the chunked-prefill continuation shape, but
+    logits come back for ALL positions so greedy acceptance can compare
+    the target's argmax against every draft.  The cache is donated like
+    the prefill paths (closures re-materialize host state on retry)."""
+    return jax.jit(
+        lambda p, t, ln, st, c, s: model.verify_paged(
+            p, cfg, t, ln, c, s, st, policy=policy),
+        donate_argnums=4)
+
+
 # copy-on-write page clone: one donated jit per pool-leaf shape copies a
 # single physical page's data inside the pool buffer (page axis 1)
 _page_copy = jax.jit(lambda buf, src, dst: buf.at[:, dst].set(buf[:, src]),
@@ -852,6 +866,60 @@ class PagedServingEngine(ServingEngine):
             self._prefill_cont_fb = (
                 _jitted_chunked_prefill(model, cfg, self._fb_policy)
                 if self._fb_policy is not None else None)
+        # speculative decoding (docs/speculative.md): a draft model
+        # autoregressively proposes spec_k tokens per ready slot against
+        # its OWN slot-major dense cache, the target scores all k+1
+        # positions in ONE batched ragged verify dispatch per tick, and
+        # greedy acceptance (longest matching prefix + one corrected
+        # token) keeps output bit-identical to the plain path.  Gated
+        # like the prefix cache on the per-row ``start`` continuation
+        # machinery (verify IS a continuation dispatch returning
+        # all-position logits); families without ``verify_paged`` serve
+        # identically with ``stats()["spec"]["enabled"] is False``.
+        self._spec_on = (config.spec_k > 0 and self._pt is not None
+                         and getattr(model, "supports_chunked_prefill",
+                                     False)
+                         and getattr(model, "verify_paged", None)
+                         is not None)
+        if self._spec_on:
+            self._verify = _jitted_verify(model, cfg, policy)
+            self._verify_fb = (_jitted_verify(model, cfg, self._fb_policy)
+                               if self._fb_policy is not None else None)
+            dcfg = config.spec_draft_config
+            if dcfg is None:
+                # self-draft: the target drafts for itself through the
+                # dense batch-slot decode path (the per-slot oracle's
+                # numerics, including the int8-KV roundtrip), so every
+                # draft matches the verify argmax and each dispatch
+                # emits k+1 tokens — the bench's acceptance ceiling
+                self.draft_model, self.draft_cfg = model, cfg
+                self.draft_params = params
+                self._draft_policy = policy
+                self._draft_bits = self.kv_bits
+            else:
+                if dcfg.vocab_size != cfg.vocab_size:
+                    raise ValueError(
+                        "spec_draft_config vocab_size "
+                        f"{dcfg.vocab_size} != target vocab_size "
+                        f"{cfg.vocab_size}: draft and target must share "
+                        "a token space")
+                from repro.models.api import get_model
+
+                self.draft_model = get_model(dcfg)
+                self.draft_cfg = dcfg
+                self.draft_params = self.draft_model.init(
+                    jax.random.PRNGKey(11), dcfg)
+                self._draft_policy = None
+                self._draft_bits = None
+            self._draft_prefill, self._draft_decode = _jitted(
+                self.draft_model, self.draft_cfg, self._draft_policy)
+            # headroom past max_len: a fully accepted run's draft length
+            # reaches _len + spec_k + 1 before the next tick's writes
+            self._draft_max_len = self.max_len + config.spec_k + 1
+            self._draft_cache = cm.batch_slot_cache(
+                self.draft_model.make_cache(self.draft_cfg, self.max_slots,
+                                            self._draft_max_len,
+                                            bits=self._draft_bits))
 
     # -- memory layer -------------------------------------------------------
 
@@ -870,6 +938,10 @@ class PagedServingEngine(ServingEngine):
                                np.int32)
             self._free = list(range(self.n_pages - 1, -1, -1))  # pop() → 0 first
         self._len = np.zeros((self.max_slots,), np.int32)
+        # speculative draft sync state: slot i's draft cache holds KV
+        # for positions [0, _draft_len[i]); in-sync means equal to
+        # _len[i] (lazy — _spec_step re-prefills on mismatch)
+        self._draft_len = np.zeros((self.max_slots,), np.int32)
         self.peak_pages_in_use = 0
         self._prefilling: dict[int, int] = {}   # slot → prompt tokens done
         # prefix cache (docs/serving.md §Prefix caching): content-chained
@@ -955,7 +1027,27 @@ class PagedServingEngine(ServingEngine):
                     "saved_prefill_flops": int(
                         c("prefix.saved_prefill_flops").value),
                     "saved_hbm_bytes": int(
-                        c("prefix.saved_hbm_bytes").value)}}
+                        c("prefix.saved_hbm_bytes").value)},
+                "spec": self._spec_stats()}
+
+    def _spec_stats(self) -> dict:
+        c = self._metrics.counter
+        drafted = int(c("spec.drafted").value)
+        accepted = int(c("spec.accepted").value)
+        emitted = int(c("spec.emitted_tokens").value)
+        verifies = int(c("spec.verify_dispatches").value)
+        return {"enabled": getattr(self, "_spec_on", False),
+                "k": self.config.spec_k,
+                "self_draft": self.config.spec_draft_config is None,
+                "drafted": drafted, "accepted": accepted,
+                "rejected": int(c("spec.rejected").value),
+                "acceptance_rate": accepted / max(drafted, 1),
+                "emitted_tokens": emitted,
+                "verify_dispatches": verifies,
+                "draft_dispatches": int(c("spec.draft_dispatches").value),
+                "draft_prefill_dispatches": int(
+                    c("spec.draft_prefill_dispatches").value),
+                "accepted_per_dispatch": emitted / max(verifies, 1)}
 
     def _pages_needed(self, n_tokens: int) -> int:
         if self._pt is None:
@@ -994,6 +1086,9 @@ class PagedServingEngine(ServingEngine):
                     self._decref(int(p))
             self._pt[slot] = -1
         self._len[slot] = 0
+        # a reused slot's draft cache is stale by construction: zeroing
+        # the sync mark forces a draft re-prefill before it drafts again
+        self._draft_len[slot] = 0
         self.slots[slot] = None
         self._prefilling.pop(slot, None)
 
@@ -1488,6 +1583,8 @@ class PagedServingEngine(ServingEngine):
                   if r is not None and i not in self._prefilling]
         if not active:
             return 0
+        if self._spec_on:
+            return self._spec_step(active)
         t0 = self._clock() if self.obs is not None else 0.0
         # on-demand growth: a slot whose next write starts a new page
         # allocates it now; allocation failure stalls the slot this tick
@@ -1589,6 +1686,238 @@ class PagedServingEngine(ServingEngine):
             if self._finished(req, nxt):
                 self._retire(req)
                 self._release_slot(i)
+        self._maybe_quant_health()
+        return len(ready)
+
+    # -- speculative decoding (docs/speculative.md) -------------------------
+
+    def _draft_sync(self, slot: int):
+        """Re-prefill one slot's context into its draft-cache slot (lazy:
+        fresh admissions, preemption resumes, and slot reuse all land
+        here the first tick they draft).  Batch-1 through the draft's
+        own jit — counted under ``spec.*``, NOT the engine prefill
+        counters (dispatch attribution stays target-only)."""
+        req = self.slots[slot]
+        ctx = self._resume_ctx(req)[:int(self._len[slot])]
+        fresh = self.draft_model.make_cache(self.draft_cfg, 1,
+                                            self._draft_max_len,
+                                            bits=self._draft_bits)
+        _, slot_cache = self._draft_prefill(
+            self.draft_params, jnp.asarray(ctx[None, :], jnp.int32), fresh)
+        # full-extent copy: no stale KV/scales from the slot's previous
+        # occupant survive into the draft pass
+        self._draft_cache = _write_slot(self._draft_cache, slot_cache, slot)
+        self._draft_len[slot] = self._len[slot]
+        self._metrics.counter("spec.draft_prefill_dispatches").inc()
+
+    def _spec_budget(self, ready: list[int], active: list[int]) -> dict:
+        """Per-slot draft depth + page allocation for the verify write
+        range.  Row i's verify writes positions ``[L, L+k_i]`` into the
+        pool, so every page covering that span is allocated (or COW'd
+        out of sharing) NOW; a dry pool shrinks ``k_i`` to the allocated
+        range, and a slot whose FIRST page can't be had stalls exactly
+        like the plain path.  Temperature rows draft nothing (k_i = 0 —
+        the verify row degenerates to the plain single-position decode,
+        sampled with the same per-(tick, uid) key)."""
+        ks: dict[int, int] = {}
+        for i in active:
+            req = self.slots[i]
+            L = int(self._len[i])
+            ki = 0
+            if req.temperature <= 0:
+                # one token is always emitted; drafts beyond the request's
+                # remaining budget could never be accepted into out_tokens
+                ki = max(0, min(self.config.spec_k,
+                                req.max_new_tokens - len(req.out_tokens) - 1,
+                                self.table_width * self.page_size - 1 - L))
+            ok = True
+            for pi in range(L // self.page_size,
+                            (L + ki) // self.page_size + 1):
+                if self._pt[i, pi] < 0:
+                    p = None
+                    if not (self._faults is not None
+                            and self._fire("page_alloc_fail",
+                                           uid=req.uid, op="grow")):
+                        p = self._alloc_page()
+                    if p is None:
+                        if pi == L // self.page_size:
+                            ok = False
+                        else:
+                            ki = pi * self.page_size - 1 - L
+                        break
+                    self._pt[i, pi] = p
+                    self._ref[p] += 1
+                elif (self._prefix_on
+                      and self._page_shared(int(self._pt[i, pi]))
+                      and not self._cow_slot_page(i, pi)):
+                    if pi == L // self.page_size:
+                        ok = False
+                    else:
+                        ki = pi * self.page_size - 1 - L
+                    break
+            if ok:
+                ready.append(i)
+                ks[i] = ki
+        return ks
+
+    def _spec_step(self, active: list[int]) -> int:
+        """One speculative tick: draft up to k tokens per ready slot
+        against the slot-major draft cache, verify every candidate
+        position in ONE batched ragged target dispatch, emit the longest
+        draft prefix the target's argmax agrees with plus one corrected
+        token, and roll back rejected-suffix lengths/pages.  Keeps the
+        plain tick's contracts: one decode dispatch, host-authoritative
+        state pushed per dispatch, stall/preempt/guard semantics."""
+        t0 = self._clock() if self.obs is not None else 0.0
+        ready: list[int] = []
+        ks = self._spec_budget(ready, active)
+        self._note_occupancy()
+        if not ready:
+            self._preempt_youngest(active)
+            return 0
+        # -- draft phase: k_max+1 batched (max_slots, 1) dense dispatches.
+        # Dispatch j consumes the previous token and WRITES its KV, so
+        # the (k_max+1)-th writes the deepest draft's KV — on full
+        # acceptance the draft cache is exactly in sync at the new
+        # length and the next tick drafts with no re-prefill.
+        kbig = max(ks.values())
+        drafts: dict[int, list[int]] = {i: [] for i in ready}
+        if kbig > 0:
+            for i in ready:
+                if ks[i] > 0 and self._draft_len[i] != self._len[i]:
+                    self._draft_sync(i)
+            last = np.zeros((self.max_slots, 1), np.int32)
+            for i in ready:
+                last[i, 0] = self.slots[i].out_tokens[-1]
+            dlen = np.array(self._draft_len)
+            for j in range(kbig + 1):
+                cache = dataclasses.replace(self._draft_cache,
+                                            length=jnp.asarray(dlen))
+                logits, self._draft_cache = self._draft_decode(
+                    self.draft_params, jnp.asarray(last), cache)
+                self._metrics.counter("spec.draft_dispatches").inc()
+                if j == kbig:
+                    break               # KV-write-only: logits discarded
+                toks = np.asarray(jnp.argmax(logits[:, -1], -1))
+                for i in ready:
+                    if len(drafts[i]) < ks[i]:
+                        drafts[i].append(int(toks[i]))
+                        last[i, 0] = int(toks[i])
+                dlen += 1
+        # -- verify phase: ONE (max_slots, spec_k+1) ragged dispatch.
+        # Row i scores [out[-1], d_1 .. d_k_i] at start _len[i]; stalled
+        # and empty rows ride as sentinels (slot id max_slots → writes
+        # drop), exactly like batched-prefill padding rows.
+        W = self.config.spec_k + 1
+        toks = np.zeros((self.max_slots, W), np.int32)
+        lens = np.zeros((self.max_slots,), np.int32)
+        starts = np.zeros((self.max_slots,), np.int32)
+        rows = np.full((self.max_slots,), self.max_slots, np.int32)
+        temps = np.zeros((self.max_slots,), np.float32)
+        uids = np.zeros((self.max_slots,), np.int32)
+        for i in ready:
+            req = self.slots[i]
+            toks[i, 0] = req.out_tokens[-1]
+            toks[i, 1:1 + ks[i]] = drafts[i]
+            lens[i] = 1 + ks[i]
+            starts[i] = self._len[i]
+            rows[i] = i
+            temps[i] = req.temperature
+            uids[i] = req.uid
+        t_alloc = self._clock() if self.obs is not None else 0.0
+        toks_j, lens_j = jnp.asarray(toks), jnp.asarray(lens)
+        starts_j, rows_j = jnp.asarray(starts), jnp.asarray(rows)
+        # the verify jit DONATES the pool (like the prefill paths): each
+        # closure materializes its own host-state pytree so a breaker
+        # retry never touches consumed buffers
+        (logits, self.cache), used = self._dispatch_guarded(
+            "decode",
+            lambda: self._verify(self.params, toks_j, lens_j, starts_j,
+                                 self._host_state_cache(), rows_j),
+            None if self._verify_fb is None else
+            (lambda: self._verify_fb(self.params, toks_j, lens_j, starts_j,
+                                     self._host_state_cache(), rows_j)))
+        self._c_decode.inc()
+        self._c_ticks.inc()
+        self._attr_decode_dispatch(self.max_slots, used)
+        self._metrics.counter(
+            f"dispatch.paged_attention.{self.paged_attention_backend}").inc()
+        self._metrics.counter("spec.verify_dispatches").inc()
+        if self._faults is not None:
+            logits = self._poison_logits(logits, ready)
+        failed = []
+        if self._nan_guard:
+            # the guard spans each row's VALID positions (the plain
+            # tick's last-position check would read verify padding)
+            lg = np.asarray(logits, np.float32)
+            failed = [i for i in ready
+                      if not np.isfinite(lg[i, :int(lens[i])]).all()]
+        greedy = np.asarray(jnp.argmax(logits, -1))
+        samp = (np.asarray(self._sample_batch(logits[:, 0], temps, uids))
+                if (temps > 0).any() else None)
+        now = 0.0
+        if self.obs is not None:
+            now = self._clock()
+            self._metrics.histogram("engine.tick_s").observe(now - t0)
+            self._tracer.emit("tick", ts=now, tick=self.ticks,
+                              n_active=len(ready),
+                              uids=[self.slots[i].uid for i in ready
+                                    if i not in failed],
+                              n_stalled=len(active) - len(ready),
+                              dur_s=now - t0, alloc_dur_s=t_alloc - t0)
+        n_drafted = n_accepted = n_emitted_total = 0
+        for i in ready:
+            req = self.slots[i]
+            if i in failed:
+                self._fail_slot(i)
+                continue
+            if temps[i] > 0:
+                emit = [int(samp[i])]
+            else:
+                emit = cm.spec_accept_greedy(drafts[i], greedy[i])
+            n_drafted += ks[i]
+            n_accepted += len(emit) - 1
+            new_len, done = int(self._len[i]), False
+            for n, tok in enumerate(emit):
+                if n > 0 and self.obs is not None:
+                    # each accepted token past the tick's first gets its
+                    # own trace event, so per-uid token chains and
+                    # trace-derived decode_tokens count ACCEPTED tokens
+                    self._tracer.emit("token", ts=now, uid=req.uid)
+                self._append_token(req, tok)
+                new_len += 1
+                n_emitted_total += 1
+                if self._finished(req, tok):
+                    done = True
+                    break
+            if done:
+                self._retire(req)
+                self._release_slot(i)
+                continue
+            self._len[i] = new_len
+            # rejected-suffix rollback: pages past the accepted length
+            # were allocated for verify writes that are now invalid —
+            # return them (valid-prefix pages, including every
+            # prefix-shared page, always sit below this range)
+            for pi in range((new_len - 1) // self.page_size + 1,
+                            self.table_width):
+                p = int(self._pt[i, pi])
+                if p < 0:
+                    break
+                self._decref(p)
+                self._pt[i, pi] = -1
+            if ks[i] > 0:
+                self._draft_len[i] = new_len
+        self._metrics.counter("spec.drafted").inc(n_drafted)
+        self._metrics.counter("spec.accepted").inc(n_accepted)
+        self._metrics.counter("spec.rejected").inc(n_drafted - n_accepted)
+        self._metrics.counter("spec.emitted_tokens").inc(n_emitted_total)
+        if self.obs is not None:
+            self._tracer.emit("spec", ts=self._clock(), tick=self.ticks,
+                              drafted=n_drafted, accepted=n_accepted,
+                              rejected=n_drafted - n_accepted,
+                              emitted=n_emitted_total,
+                              n_rows=len(ready))
         self._maybe_quant_health()
         return len(ready)
 

@@ -1,0 +1,94 @@
+"""Shared greedy-equivalence harness for the serving-engine suites.
+
+One copy of the cross-family model setup, request factory, dispatch
+counter, and page-accounting invariant that ``test_serving_batched.py``,
+``test_serving_paged.py``, ``test_prefix_cache.py``, and
+``test_speculative.py`` all drive their differential matrices through
+(the first three carried private copies until the speculative suite
+would have made it four).  ``setup`` is process-cached, so every suite
+sharing a (arch, quantization) cell also shares its folded params and
+jit caches.
+"""
+
+import functools
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core.qlinear import QuantPolicy
+from repro.models.api import get_model
+from repro.serving.engine import Request
+from repro.serving.fold import collect_calibration, fold_quantize
+
+KEY = jax.random.PRNGKey(0)
+
+# one arch per family (moe uses DeepSeek: MLA latent cache + leading
+# dense layers — the hardest cache layout)
+FAMILY_ARCHS = {
+    "dense": "stablelm_3b",
+    "moe": "deepseek_v2_lite_16b",
+    "ssm": "mamba2_780m",
+    "hybrid": "zamba2_12b",
+}
+
+
+@functools.lru_cache(maxsize=None)
+def setup(arch: str, quantized: bool = False, use_kernels: str = "never"):
+    """(cfg, model, params, policy) for one matrix cell.  ``quantized``
+    folds a W8A8 model under ``use_kernels`` ("never" = pure XLA,
+    "interpret" = the kernel path with a fallback jit — what the chaos
+    plans need so dispatch_raise is recoverable)."""
+    cfg = get_config(arch).reduced()
+    model = get_model(cfg)
+    params = model.init(KEY, cfg)
+    policy = None
+    if quantized:
+        toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+        stats = collect_calibration(model, params, cfg, [{"tokens": toks}])
+        policy = QuantPolicy(weight_bits=8, act_bits=8, pack_weights=False,
+                             use_kernels=use_kernels)
+        params = fold_quantize(params, cfg, policy=policy, stats=stats)
+    return cfg, model, params, policy
+
+
+def mk_requests(cfg, n=3, max_new=4, temperature=0.0):
+    return [Request(uid=i,
+                    prompt=np.random.default_rng(i).integers(
+                        0, cfg.vocab_size, size=(3 + i,)),
+                    max_new_tokens=max_new, temperature=temperature)
+            for i in range(n)]
+
+
+def count_decodes(eng):
+    """Wrap eng._decode with a call counter (list the test inspects)."""
+    calls = []
+    orig = eng._decode
+
+    def counting(*a):
+        calls.append(1)
+        return orig(*a)
+
+    eng._decode = counting
+    return calls
+
+
+def serve(eng, reqs, max_ticks=300):
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run(max_ticks=max_ticks)
+    return {r.uid: list(map(int, r.out_tokens)) for r in done}
+
+
+def assert_partition(eng):
+    """The paged allocator's page-accounting invariant: the free list,
+    the cached-but-unreferenced tier, and the referenced pages partition
+    ``range(n_pages)`` — disjoint, no page lost, none double-entered."""
+    free = {int(p) for p in eng._free}
+    assert len(free) == len(eng._free)          # no double-free
+    referenced = {p for p in range(eng.n_pages) if eng._ref[p] > 0}
+    cached0 = {p for p in eng._page_key if eng._ref[p] == 0}
+    assert not free & referenced
+    assert not free & cached0
+    assert not referenced & cached0
+    assert sorted(free | referenced | cached0) == list(range(eng.n_pages))

@@ -34,8 +34,9 @@ from repro.obs import (ManualClock, MetricsRegistry, Observability,
                        QuantHealthSampler, Tracer, exact_percentile,
                        format_summary, load_trace, percentile_summary,
                        summarize)
-from repro.serving.engine import (PagedServingEngine, PerSlotServingEngine,
-                                  Request, ServingEngine)
+from repro.serving.engine import (EngineConfig, PagedServingEngine,
+                                  PerSlotServingEngine, Request,
+                                  ServingEngine)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -278,7 +279,7 @@ def test_run_stats_schema_identical_across_engines():
     pool_keys = {"page_size", "n_pages", "table_width", "pages_in_use",
                  "peak_pages_in_use", "page_occupancy",
                  "page_occupancy_peak", "paged_attention_backend",
-                 "prefill_chunk", "chunked_prefill", "prefix"}
+                 "prefill_chunk", "chunked_prefill", "prefix", "spec"}
     assert schemas["paged"] == schemas["batched"] | pool_keys
     base_keys = {"requests", "prefill_tokens", "decode_tokens",
                  "per_request", "ticks", "decode_dispatches",
@@ -361,6 +362,76 @@ def test_trace_token_counts_match_engine_under_preemption():
     assert s["counts"]["resumes"] >= 1
     # every non-first streamed token contributes one inter-token gap
     assert s["per_token_s"]["count"] == s["counts"]["decode_tokens"]
+
+
+# ---------------------------------------------------------------------------
+# speculative-decoding accounting (docs/speculative.md)
+# ---------------------------------------------------------------------------
+
+
+def _spec_run(spec_k=4):
+    cfg, model, params = _setup()
+    clk = ManualClock()
+    obs = Observability(clock=clk)
+    eng = PagedServingEngine(
+        model, params, cfg,
+        config=EngineConfig(max_slots=2, max_len=32, page_size=4,
+                            prefill_bucket=8, spec_k=spec_k, obs=obs))
+    for r in _requests(cfg, n=3, max_new=5):
+        eng.submit(r)
+    done = []
+    for _ in range(200):
+        clk.advance(1.0)
+        eng.step()
+        done += eng.pop_retired()
+        if not eng.queue and not any(eng.slots):
+            break
+    assert not eng.queue and not any(eng.slots), "run did not drain"
+    return eng, obs, done
+
+
+def test_spec_trace_token_counts_match_engine():
+    """Accepted tokens past a tick's first ride extra ``token`` events,
+    so trace-derived token accounting stays exact under speculation:
+    first_token + decode_tokens events == every token every client
+    streamed, per-uid per-token chains cover each ACCEPTED token, and
+    the trace's spec block reconciles with the engine counters."""
+    eng, obs, done = _spec_run()
+    s = obs.summary()
+    streamed = sum(len(r.out_tokens) for r in done)
+    assert streamed == eng.stats()["decode_tokens"]
+    assert s["counts"]["decode_tokens"] + s["ttft_s"]["count"] == streamed
+    # every non-first streamed token contributes one inter-token gap
+    assert s["per_token_s"]["count"] == s["counts"]["decode_tokens"]
+    # a verify tick with > 1 accepted token actually occurred (otherwise
+    # this test pins nothing beyond the plain-path one above)
+    assert s["spec"]["emitted"] > s["spec"]["ticks"]
+    # decode-phase tokens all went through verify ticks
+    assert s["spec"]["emitted"] == s["counts"]["decode_tokens"]
+    est = eng.stats()["spec"]
+    assert s["spec"]["emitted"] == est["emitted_tokens"]
+    assert s["spec"]["ticks"] == est["verify_dispatches"]
+    assert s["spec"]["accepted"] == est["accepted"]
+
+
+def test_summarize_spec_exact_and_table_line():
+    """Hand-built spec events: exact aggregation plus the conditional
+    ``spec:`` table line — both absent from plain-run summaries."""
+    events = _hand_events()
+    assert "spec" not in summarize(events)
+    assert "spec:" not in format_summary(summarize(events))
+    events += [
+        {"ev": "spec", "ts": 7.0, "tick": 1, "drafted": 4, "accepted": 3,
+         "rejected": 1, "emitted": 5, "n_rows": 2},
+        {"ev": "spec", "ts": 10.0, "tick": 2, "drafted": 2, "accepted": 2,
+         "rejected": 0, "emitted": 3, "n_rows": 1},
+    ]
+    s = summarize(events)
+    assert s["spec"] == {"ticks": 2, "drafted": 6, "accepted": 5,
+                         "rejected": 1, "emitted": 8,
+                         "acceptance_rate": 5 / 6}
+    assert ("spec: 6 drafted, 5 accepted (rate 0.833), 1 rejected, "
+            "8 emitted over 2 verify ticks") in format_summary(s)
 
 
 def test_dispatch_resolutions_tally():

@@ -28,44 +28,31 @@ Pins the tentpole's contracts:
 """
 
 import asyncio
-import functools
 
-import jax
 import numpy as np
 import pytest
 
-from repro.configs.base import get_config
-from repro.core.qlinear import QuantPolicy
 from repro.kernels import ops
-from repro.models.api import get_model
 from repro.obs import Observability
 from repro.resilience.faults import FaultPlan, FaultSpec
 from repro.serving.engine import EngineConfig, PagedServingEngine, Request
-from repro.serving.fold import collect_calibration, fold_quantize
 from repro.serving.frontend import ServingFrontend, http_generate
+# shared cross-suite harness (tests/_engine_matrix.py)
+from tests._engine_matrix import assert_partition as _assert_partition
+from tests._engine_matrix import serve as _serve
+from tests._engine_matrix import setup
 from tests._hypothesis_support import given, settings, st
 
-KEY = jax.random.PRNGKey(0)
 PAGE = 4
 
 
-@functools.lru_cache(maxsize=None)
 def _setup(arch: str, use_kernels: str | None = None):
     """(cfg, model, params, policy); ``use_kernels=None`` → bf16, else a
     W8A8 folded model ("never" = pure XLA, "interpret" = the kernel path
     with a fallback jit — what the chaos plans need so dispatch_raise is
     recoverable)."""
-    cfg = get_config(arch).reduced()
-    model = get_model(cfg)
-    params = model.init(KEY, cfg)
-    policy = None
-    if use_kernels is not None:
-        toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
-        stats = collect_calibration(model, params, cfg, [{"tokens": toks}])
-        policy = QuantPolicy(weight_bits=8, act_bits=8, pack_weights=False,
-                             use_kernels=use_kernels)
-        params = fold_quantize(params, cfg, policy=policy, stats=stats)
-    return cfg, model, params, policy
+    return setup(arch, quantized=use_kernels is not None,
+                 use_kernels=use_kernels or "never")
 
 
 def _engine(cfg, model, params, *, policy=None, prefix=True, **kw):
@@ -98,27 +85,6 @@ def _seed(cfg, uid=100):
     completion registers the shared pages (same-round co-admissions
     never share, so tests seed the cache explicitly first)."""
     return Request(uid=uid, prompt=_sys(cfg), max_new_tokens=1)
-
-
-def _serve(eng, reqs, max_ticks=300):
-    for r in reqs:
-        eng.submit(r)
-    done = eng.run(max_ticks=max_ticks)
-    return {r.uid: list(map(int, r.out_tokens)) for r in done}
-
-
-def _assert_partition(eng):
-    """The allocator's page-accounting invariant: the free list, the
-    cached-but-unreferenced tier, and the referenced pages partition
-    ``range(n_pages)`` — disjoint, no page lost, none double-entered."""
-    free = {int(p) for p in eng._free}
-    assert len(free) == len(eng._free)          # no double-free
-    referenced = {p for p in range(eng.n_pages) if eng._ref[p] > 0}
-    cached0 = {p for p in eng._page_key if eng._ref[p] == 0}
-    assert not free & referenced
-    assert not free & cached0
-    assert not referenced & cached0
-    assert sorted(free | referenced | cached0) == list(range(eng.n_pages))
 
 
 # ---------------------------------------------------------------------------

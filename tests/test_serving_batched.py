@@ -15,8 +15,6 @@ top of it (paged KV, sharded serve):
   * int8 KV slot reuse leaks no stale keys or dequant scales.
 """
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -24,61 +22,14 @@ import pytest
 
 from tests._hypothesis_support import given, settings, st
 
-from repro.configs.base import get_config
-from repro.core.qlinear import QuantPolicy
 from repro.models import common as cm
-from repro.models.api import get_model
 from repro.serving.engine import (PerSlotServingEngine, Request,
                                   ServingEngine, _sample_key)
-from repro.serving.fold import collect_calibration, fold_quantize
-
-KEY = jax.random.PRNGKey(0)
-
-# one arch per family (moe uses DeepSeek: MLA latent cache + leading
-# dense layers — the hardest cache layout)
-FAMILY_ARCHS = {
-    "dense": "stablelm_3b",
-    "moe": "deepseek_v2_lite_16b",
-    "ssm": "mamba2_780m",
-    "hybrid": "zamba2_12b",
-}
-
-
-@functools.lru_cache(maxsize=None)
-def _setup(arch: str, quantized: bool):
-    cfg = get_config(arch).reduced()
-    model = get_model(cfg)
-    params = model.init(KEY, cfg)
-    policy = None
-    if quantized:
-        toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
-        stats = collect_calibration(model, params, cfg, [{"tokens": toks}])
-        policy = QuantPolicy(weight_bits=8, act_bits=8, pack_weights=False,
-                             use_kernels="never")
-        params = fold_quantize(params, cfg, policy=policy, stats=stats)
-    return cfg, model, params, policy
-
-
-def _mk_requests(cfg, n=3, max_new=4, temperature=0.0):
-    return [Request(uid=i,
-                    prompt=np.random.default_rng(i).integers(
-                        0, cfg.vocab_size, size=(3 + i,)),
-                    max_new_tokens=max_new, temperature=temperature)
-            for i in range(n)]
-
-
-def _count_decodes(eng):
-    """Wrap eng._decode with a call counter (list the test inspects)."""
-    calls = []
-    orig = eng._decode
-
-    def counting(*a):
-        calls.append(1)
-        return orig(*a)
-
-    eng._decode = counting
-    return calls
-
+# shared cross-suite harness (tests/_engine_matrix.py)
+from tests._engine_matrix import FAMILY_ARCHS, KEY
+from tests._engine_matrix import count_decodes as _count_decodes
+from tests._engine_matrix import mk_requests as _mk_requests
+from tests._engine_matrix import setup as _setup
 
 # ---------------------------------------------------------------------------
 # tentpole: greedy equivalence + single dispatch, all families × precisions

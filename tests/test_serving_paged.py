@@ -14,71 +14,18 @@ Pins the continuous-batching contracts the paged rebuild must keep:
     changing any request's tokens.
 """
 
-import functools
-
-import jax
 import numpy as np
 import pytest
 
-from repro.configs.base import get_config
 from repro.core.qlinear import QuantPolicy
-from repro.models.api import get_model
 from repro.serving.engine import (PagedServingEngine, PerSlotServingEngine,
                                   Request, ServingEngine)
-from repro.serving.fold import collect_calibration, fold_quantize
-
-KEY = jax.random.PRNGKey(0)
-
-# one arch per family (moe uses DeepSeek: MLA latent pages + leading
-# dense layers — the hardest cache layout)
-FAMILY_ARCHS = {
-    "dense": "stablelm_3b",
-    "moe": "deepseek_v2_lite_16b",
-    "ssm": "mamba2_780m",
-    "hybrid": "zamba2_12b",
-}
-
-
-@functools.lru_cache(maxsize=None)
-def _setup(arch: str, quantized: bool):
-    cfg = get_config(arch).reduced()
-    model = get_model(cfg)
-    params = model.init(KEY, cfg)
-    policy = None
-    if quantized:
-        toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
-        stats = collect_calibration(model, params, cfg, [{"tokens": toks}])
-        policy = QuantPolicy(weight_bits=8, act_bits=8, pack_weights=False,
-                             use_kernels="never")
-        params = fold_quantize(params, cfg, policy=policy, stats=stats)
-    return cfg, model, params, policy
-
-
-def _mk_requests(cfg, n=3, max_new=4):
-    return [Request(uid=i,
-                    prompt=np.random.default_rng(i).integers(
-                        0, cfg.vocab_size, size=(3 + i,)),
-                    max_new_tokens=max_new)
-            for i in range(n)]
-
-
-def _count_decodes(eng):
-    calls = []
-    orig = eng._decode
-
-    def counting(*a):
-        calls.append(1)
-        return orig(*a)
-
-    eng._decode = counting
-    return calls
-
-
-def _serve(eng, reqs, max_ticks=200):
-    for r in reqs:
-        eng.submit(r)
-    done = eng.run(max_ticks=max_ticks)
-    return {r.uid: list(r.out_tokens) for r in done}
+# shared cross-suite harness (tests/_engine_matrix.py)
+from tests._engine_matrix import FAMILY_ARCHS
+from tests._engine_matrix import count_decodes as _count_decodes
+from tests._engine_matrix import mk_requests as _mk_requests
+from tests._engine_matrix import serve as _serve
+from tests._engine_matrix import setup as _setup
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,386 @@
+"""Speculative decoding: differential token-identity conformance suite
+(docs/speculative.md).
+
+Pins the tentpole's contracts:
+
+  * **token identity** (the acceptance pin): speculative greedy serving
+    is BIT-IDENTICAL to the plain paged engine for dense bf16 / W8A8 /
+    int8-KV at spec_k ∈ {1, 2, 4}, including under prefix caching and
+    chunked prefill — speculation is a pure latency transform, never a
+    sampling change;
+  * **one verify dispatch per tick**: all k+1 candidate positions of
+    every ready slot score in ONE batched ragged ``verify_paged``
+    dispatch (``dispatches_per_tick == 1.0``, zero plain-decode
+    dispatches);
+  * **clean fallback**: families without ``verify_paged`` (moe / ssm /
+    hybrid) serve identically with ``stats()["spec"]["enabled"] is
+    False`` and zero ``spec.*`` activity;
+  * separate-draft configs must share the target's token space
+    (vocab-mismatch → ``ValueError``) and keep token identity even at
+    low acceptance — every rejection exercises the suffix rollback;
+  * **no stale state after rollback**: pages returned by the
+    rejected-suffix rollback are reusable with no KV / int8-scale
+    leakage, and the refcount partition holds under seeded chaos plans
+    (faults + preemption + mid-run cancel, hypothesis property test).
+"""
+
+import asyncio
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.resilience.faults import FaultPlan
+from repro.serving.config import EngineConfig
+from repro.serving.engine import PagedServingEngine, Request
+from repro.serving.frontend import ServingFrontend, http_generate
+# shared cross-suite harness (tests/_engine_matrix.py)
+from tests._engine_matrix import (FAMILY_ARCHS, assert_partition,
+                                  mk_requests, serve, setup)
+from tests._hypothesis_support import given, settings, st
+
+PAGE = 4
+
+
+def _cell(precision: str):
+    """(cfg, model, params, policy, kv_bits) for one precision column of
+    the identity matrix."""
+    cfg, model, params, policy = setup("stablelm_3b",
+                                       quantized=precision == "w8a8")
+    return cfg, model, params, policy, (8 if precision == "kv8" else None)
+
+
+def _engine(cfg, model, params, *, policy=None, kv_bits=None, spec_k=0,
+            **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_len", 32)
+    return PagedServingEngine(
+        model, params, cfg,
+        config=EngineConfig(policy=policy, kv_bits=kv_bits, page_size=PAGE,
+                            prefill_bucket=8, spec_k=spec_k, **kw))
+
+
+def _sys(cfg, pages=2):
+    """A shared system prefix: PAGES full pages of tokens."""
+    return np.random.default_rng(99).integers(0, cfg.vocab_size,
+                                              size=(pages * PAGE,))
+
+
+def _shared_reqs(cfg, n=2, max_new=4):
+    sys_prompt = _sys(cfg)
+    return [Request(uid=i,
+                    prompt=np.concatenate(
+                        [sys_prompt,
+                         np.random.default_rng(50 + i).integers(
+                             0, cfg.vocab_size, size=(3 + i,))]),
+                    max_new_tokens=max_new) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# the acceptance pin: token identity across the precision × depth matrix
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec_k", [1, 2, 4])
+@pytest.mark.parametrize("precision", ["bf16", "w8a8", "kv8"])
+def test_spec_matches_plain_greedy(precision, spec_k):
+    """Speculative greedy == plain paged greedy, token for token.  The
+    self-draft replays the per-slot oracle's numerics (including the
+    int8-KV roundtrip), so every draft matches the verify argmax and
+    acceptance is total — the bench's throughput ceiling."""
+    cfg, model, params, policy, kv = _cell(precision)
+    plain = serve(_engine(cfg, model, params, policy=policy, kv_bits=kv),
+                  mk_requests(cfg, max_new=6))
+    eng = _engine(cfg, model, params, policy=policy, kv_bits=kv,
+                  spec_k=spec_k)
+    assert serve(eng, mk_requests(cfg, max_new=6)) == plain
+    sp = eng.run_stats["spec"]
+    assert sp["enabled"] and sp["self_draft"]
+    assert sp["verify_dispatches"] > 0
+    assert sp["drafted"] > 0 and sp["rejected"] == 0   # oracle numerics
+    assert sp["acceptance_rate"] == 1.0
+    # every decode-phase token went through the verify path (each
+    # request's FIRST token samples from its prefill logits)
+    assert sp["emitted_tokens"] == sum(len(v) - 1 for v in plain.values())
+    assert_partition(eng)
+
+
+@pytest.mark.parametrize("prefix,chunk", [(True, None), (False, 2),
+                                          (True, 2)],
+                         ids=["prefix", "chunked", "prefix+chunked"])
+def test_spec_identity_under_prefix_and_chunked(prefix, chunk):
+    """Speculation composes with the prefix cache (verify writes never
+    land in shared pages — the budget COWs them out first) and with
+    chunked prefill: tokens stay bit-identical to the same engine with
+    spec off."""
+    cfg, model, params, _ = _cell("bf16")[:4]
+
+    def mk(spec_k):
+        return _engine(cfg, model, params, spec_k=spec_k,
+                       prefix_cache=prefix, prefill_chunk=chunk)
+
+    seed = Request(uid=100, prompt=_sys(cfg), max_new_tokens=1)
+    eng_off, eng_on = mk(0), mk(2)
+    plain = dict(serve(eng_off, [seed]))
+    plain.update(serve(eng_off, _shared_reqs(cfg)))
+    spec = dict(serve(eng_on, [Request(uid=100, prompt=_sys(cfg),
+                                       max_new_tokens=1)]))
+    spec.update(serve(eng_on, _shared_reqs(cfg)))
+    assert spec == plain
+    sp = eng_on.run_stats["spec"]
+    assert sp["enabled"] and sp["emitted_tokens"] > 0
+    if prefix:
+        assert eng_on.run_stats["prefix"]["hits"] >= 2
+    assert_partition(eng_on)
+
+
+def test_eos_truncates_mid_emission():
+    """EOS landing inside an accepted run truncates the emission there
+    (tokens past EOS are discarded) — identical to the plain engine with
+    the same eos_id, and EOS is the stream's last token."""
+    cfg, model, params, _ = _cell("bf16")[:4]
+    probe = serve(_engine(cfg, model, params), mk_requests(cfg, n=1,
+                                                           max_new=6))
+    eos = probe[0][1]           # a token the greedy model actually emits
+    plain = serve(_engine(cfg, model, params, eos_id=eos),
+                  mk_requests(cfg, n=2, max_new=6))
+    eng = _engine(cfg, model, params, eos_id=eos, spec_k=4)
+    spec = serve(eng, mk_requests(cfg, n=2, max_new=6))
+    assert spec == plain
+    assert spec[0][-1] == eos and len(spec[0]) < 6
+    assert_partition(eng)
+
+
+def test_temperature_rows_degenerate_to_plain_decode():
+    """A temperature > 0 request drafts nothing (its verify row is the
+    single next position) while a co-resident greedy request keeps
+    speculating — the greedy stream stays bit-identical to a plain solo
+    run, and the sampled stream completes within budget."""
+    cfg, model, params, _ = _cell("bf16")[:4]
+    plain = serve(_engine(cfg, model, params),
+                  mk_requests(cfg, n=1, max_new=6))
+    eng = _engine(cfg, model, params, spec_k=4)
+    reqs = mk_requests(cfg, n=2, max_new=6)
+    reqs[1].temperature = 1.0
+    out = serve(eng, reqs)
+    assert out[0] == plain[0]
+    assert 1 <= len(out[1]) <= 6
+    assert all(0 <= t < cfg.vocab_size for t in out[1])
+    assert_partition(eng)
+
+
+# ---------------------------------------------------------------------------
+# dispatch shape: ONE batched ragged verify per tick
+# ---------------------------------------------------------------------------
+
+
+def test_one_verify_dispatch_per_tick():
+    """Every tick with ready slots runs exactly ONE verify dispatch and
+    ZERO plain decode dispatches, whatever the active-slot count or
+    draft depth."""
+    cfg, model, params, _ = _cell("bf16")[:4]
+    eng = _engine(cfg, model, params, spec_k=4)
+    verifies, decodes = [], []
+    orig_v, orig_d = eng._verify, eng._decode
+    eng._verify = lambda *a: (verifies.append(1), orig_v(*a))[1]
+    eng._decode = lambda *a: (decodes.append(1), orig_d(*a))[1]
+    for r in mk_requests(cfg, max_new=6):
+        eng.submit(r)
+    while eng.queue or any(eng.slots):
+        before = len(verifies)
+        n_active = eng.step()
+        assert len(verifies) - before == (1 if n_active else 0)
+    assert not decodes                 # the plain path never ran
+    s = eng.stats()
+    assert s["dispatches_per_tick"] == 1.0
+    assert s["spec"]["verify_dispatches"] == s["decode_dispatches"]
+    assert s["spec"]["verify_dispatches"] == len(verifies)
+
+
+def test_accepted_tokens_per_dispatch_exceeds_plain():
+    """The headline: at spec_k=4 the self-draft emits > 1.5 tokens per
+    verify dispatch (the plain engine's ceiling is exactly 1) — the
+    bench contract benchmarks/spec_bench.py gates on."""
+    cfg, model, params, _ = _cell("bf16")[:4]
+    eng = _engine(cfg, model, params, spec_k=4)
+    serve(eng, mk_requests(cfg, max_new=8))
+    assert eng.run_stats["spec"]["accepted_per_dispatch"] > 1.5
+
+
+# ---------------------------------------------------------------------------
+# family gating: unsupported backbones fall back cleanly
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", ["moe", "ssm", "hybrid"])
+def test_unsupported_family_clean_fallback(family):
+    """Families without the ``verify_paged`` continuation serve a
+    spec_k > 0 config identically to spec-off, with speculation
+    reporting disabled and zero spec activity."""
+    cfg, model, params, _ = setup(FAMILY_ARCHS[family])
+    plain = serve(_engine(cfg, model, params), mk_requests(cfg))
+    eng = _engine(cfg, model, params, spec_k=4)
+    assert serve(eng, mk_requests(cfg)) == plain
+    sp = eng.run_stats["spec"]
+    assert sp["enabled"] is False
+    assert sp["verify_dispatches"] == 0 and sp["drafted"] == 0
+    assert sp["draft_prefill_dispatches"] == 0
+
+
+# ---------------------------------------------------------------------------
+# separate draft model: shared token space, rollback-heavy identity
+# ---------------------------------------------------------------------------
+
+
+def test_separate_draft_vocab_mismatch_raises():
+    cfg, model, params, _ = _cell("bf16")[:4]
+    bad = dataclasses.replace(cfg, name="draft-bad-vocab",
+                              vocab_size=cfg.vocab_size // 2)
+    with pytest.raises(ValueError, match="vocab_size"):
+        _engine(cfg, model, params, spec_k=2, spec_draft_config=bad)
+
+
+def test_separate_draft_identity_with_rejections():
+    """An UNTRAINED 1-layer draft proposes mostly-wrong tokens: the
+    rejected-suffix rollback runs constantly, and the output must STILL
+    be bit-identical to the plain engine — acceptance only ever changes
+    latency."""
+    cfg, model, params, _ = _cell("bf16")[:4]
+    dcfg = dataclasses.replace(cfg, name="stablelm-draft", num_layers=1)
+    plain = serve(_engine(cfg, model, params), mk_requests(cfg, max_new=6))
+    eng = _engine(cfg, model, params, spec_k=2, spec_draft_config=dcfg)
+    assert serve(eng, mk_requests(cfg, max_new=6)) == plain
+    sp = eng.run_stats["spec"]
+    assert sp["enabled"] and not sp["self_draft"]
+    assert sp["drafted"] > 0
+    assert sp["drafted"] == sp["accepted"] + sp["rejected"]
+    assert 0.0 <= sp["acceptance_rate"] <= 1.0
+    assert_partition(eng)
+
+
+def test_rollback_leaves_no_stale_pages():
+    """Pages freed by the rejected-suffix rollback are reused by LATER
+    admissions with no stale KV or int8-scale leakage: a second wave on
+    the rollback-churned engine matches a fresh engine bit for bit."""
+    cfg, model, params, _ = _cell("bf16")[:4]
+    dcfg = dataclasses.replace(cfg, name="stablelm-draft", num_layers=1)
+
+    def mk():
+        return _engine(cfg, model, params, spec_k=2, spec_draft_config=dcfg,
+                       kv_bits=8, n_pages=10)
+
+    wave2 = [Request(uid=10 + i,
+                     prompt=np.random.default_rng(300 + i).integers(
+                         0, cfg.vocab_size, size=(6 + i,)),
+                     max_new_tokens=5) for i in range(2)]
+    churned = mk()
+    serve(churned, mk_requests(cfg, max_new=6))      # rollback churn
+    assert_partition(churned)
+    got = serve(churned, wave2)
+    fresh = serve(mk(), [Request(uid=r.uid, prompt=r.prompt.copy(),
+                                 max_new_tokens=r.max_new_tokens)
+                         for r in wave2])
+    assert got == fresh
+    assert_partition(churned)
+
+
+def test_config_spec_validation_and_serde():
+    with pytest.raises(ValueError, match="spec_k"):
+        EngineConfig(spec_k=-1)
+    dcfg = dataclasses.replace(setup("stablelm_3b")[0], name="d",
+                               num_layers=1)
+    with pytest.raises(ValueError, match="spec_draft_config"):
+        EngineConfig(spec_draft_config=dcfg)
+    c = EngineConfig(spec_k=3, spec_draft_config=dcfg)
+    assert EngineConfig.from_json(c.to_json()) == c
+
+
+# ---------------------------------------------------------------------------
+# front-end: speculation is invisible to a streaming client
+# ---------------------------------------------------------------------------
+
+
+def test_frontend_streams_spec_tokens():
+    cfg, model, params, _ = _cell("bf16")[:4]
+    prompt = np.asarray([3, 1, 4, 1, 5], np.int64)
+    ref = serve(_engine(cfg, model, params),
+                [Request(uid=0, prompt=prompt.copy(), max_new_tokens=6)])[0]
+    eng = _engine(cfg, model, params, spec_k=4)
+
+    async def go():
+        async with ServingFrontend(eng, host="127.0.0.1", port=0) as fe:
+            return await http_generate("127.0.0.1", fe.port,
+                                       {"prompt": prompt.tolist(),
+                                        "max_new_tokens": 6})
+
+    r = asyncio.run(go())
+    assert r["status"] == 200
+    assert r["tokens"] == ref
+    # all decode-phase tokens went through verify (the first token
+    # samples from prefill logits)
+    assert eng.stats()["spec"]["emitted_tokens"] == len(ref) - 1
+
+
+# ---------------------------------------------------------------------------
+# chaos: the partition invariant under faults + preemption + cancel
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_under_pool_pressure_identity():
+    """A pool too small for three co-residents at full draft depth
+    forces stalls and preemptions mid-speculation: preempted requests
+    resume token-exact (vs a pressure-free plain run) and no page
+    leaks."""
+    cfg, model, params, _ = _cell("bf16")[:4]
+    plain = serve(_engine(cfg, model, params, n_pages=64),
+                  mk_requests(cfg, max_new=6))
+    eng = _engine(cfg, model, params, spec_k=4, n_pages=8, max_slots=3)
+    assert serve(eng, mk_requests(cfg, max_new=6)) == plain
+    assert_partition(eng)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_chaos_partition_invariant(seed):
+    """Seeded chaos plans (NaN logits, dispatch raise, page-alloc fail,
+    slow ticks + a random mid-run cancel) on a speculating, prefix-
+    sharing, int8-KV engine: every request retires exactly once, and the
+    free / cached / referenced page partition holds — rollback never
+    leaks or double-frees a page."""
+    ops.breaker.reset()
+    try:
+        rng = np.random.default_rng(seed)
+        plan = FaultPlan.random(seed, n_faults=4,
+                                sites=("nan_logits", "dispatch_raise",
+                                       "page_alloc_fail", "slow_tick"),
+                                uids=range(4), max_at=12)
+        # quantized-interpret: dispatch_raise is recoverable through the
+        # kernel circuit breaker's fallback jit
+        cfg, model, params, policy = setup("stablelm_3b", quantized=True,
+                                           use_kernels="interpret")
+        eng = _engine(cfg, model, params, policy=policy, spec_k=2,
+                      prefix_cache=True, n_pages=12, faults=plan,
+                      nan_guard=True)
+        serve(eng, [Request(uid=100, prompt=_sys(cfg), max_new_tokens=1)])
+        reqs = _shared_reqs(cfg, n=2, max_new=5) + [
+            Request(uid=2 + i,
+                    prompt=np.random.default_rng(200 + i).integers(
+                        0, cfg.vocab_size, size=(5 + i,)),
+                    max_new_tokens=5) for i in range(2)]
+        for r in reqs:
+            eng.submit(r)
+        cancel_uid = int(rng.integers(4))
+        cancel_tick = int(rng.integers(1, 6))
+        for _ in range(300):
+            if not (eng.queue or any(s is not None for s in eng.slots)):
+                break
+            eng.step()
+            if eng.ticks == cancel_tick:
+                eng.cancel(cancel_uid)
+        done = {r.uid: r for r in eng.pop_retired()}
+        assert sorted(u for u in done if u < 100) == list(range(4))
+        assert not any(eng.slots)
+        assert_partition(eng)
+    finally:
+        ops.breaker.reset()
